@@ -1,0 +1,55 @@
+"""Render the before/after table for EXPERIMENTS.md §Perf summary.
+
+Compares two dry-run JSONL sweeps (paper-faithful baseline vs optimized)
+per (arch x shape) on the single-pod mesh.  NB: the baseline sweep was
+measured under the earlier byte metrology; deltas bundle real optimization
+with metrology correction — EXPERIMENTS.md's per-iteration logs separate
+the two for the three hillclimb cells.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.compare_sweeps \
+        --before results/dryrun_baseline_v1.jsonl --after results/dryrun.jsonl
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def load(path: str, mesh: str = "16x16") -> dict:
+    out = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            if r.get("mesh") == mesh and r.get("status") == "ok":
+                out[(r["arch"], r["shape"])] = r["roofline"]
+    return out
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--before", required=True)
+    p.add_argument("--after", required=True)
+    p.add_argument("--mesh", default="16x16")
+    args = p.parse_args()
+    b = load(args.before, args.mesh)
+    a = load(args.after, args.mesh)
+    rows = ["| arch | shape | bottleneck | t_bound before (s) | after (s) | "
+            "roofline before | after | × |",
+            "|---|---|---|---|---|---|---|---|"]
+    for key in sorted(set(b) & set(a)):
+        rb, ra = b[key], a[key]
+        tb = max(rb["t_compute_s"], rb["t_memory_s"], rb["t_collective_s"])
+        ta = max(ra["t_compute_s"], ra["t_memory_s"], ra["t_collective_s"])
+        x = (ra["roofline_fraction"] / rb["roofline_fraction"]
+             if rb["roofline_fraction"] else float("inf"))
+        rows.append(
+            f"| {key[0]} | {key[1]} | {rb['bottleneck']}→{ra['bottleneck']} | "
+            f"{tb:.3f} | {ta:.3f} | {rb['roofline_fraction']:.4f} | "
+            f"{ra['roofline_fraction']:.4f} | {x:.1f} |")
+    print("\n".join(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,183 @@
+"""Dot census: where do the compiled FLOPs / bytes actually go?
+
+Lowers one (arch x shape x mesh) cell exactly like the dry-run, then walks
+the optimized HLO accumulating per-(op, shape) FLOPs and HBM bytes WITH loop
+multipliers.  This is the profile-equivalent for the §Perf hypothesis loop
+on a CPU-only host: the "hot ops" list plays the role of a wall-clock trace.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.dot_census --arch llama4-maverick-400b-a17b \
+        --shape prefill_32k [--multi-pod] [--top 25] [--bytes]
+"""
+
+from __future__ import annotations
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import re
+from collections import defaultdict
+
+
+def census(hlo: str) -> tuple[dict, dict, dict]:
+    """Returns (dot_flops_by_shape, hbm_bytes_by_op, coll_bytes_by_shape),
+    each with loop multipliers applied."""
+    from repro.roofline import hlo_walk
+
+    comps, entry = hlo_walk.parse_module(hlo)
+
+    # per-computation censuses, then weight by the walk multiplier
+    dot_re = hlo_walk._INSTR
+    shape_re = hlo_walk._SHAPE
+    dims_re = hlo_walk._DIMS
+    name_re = hlo_walk._NAME
+
+    shapes: dict[str, str] = {}
+    for line in hlo.splitlines():
+        m = dot_re.match(line)
+        if m:
+            shapes[m.group(1)] = m.group(2)
+
+    per_comp_dots: dict[str, list] = defaultdict(list)
+    per_comp_bytes: dict[str, list] = defaultdict(list)
+    per_comp_colls: dict[str, list] = defaultdict(list)
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if (stripped.endswith("{") and "->" in stripped
+                and "=" not in stripped.split("(")[0]):
+            mc = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)", stripped)
+            cur = mc.group(1) if mc else None
+            continue
+        m = dot_re.match(line)
+        if not m or cur is None:
+            continue
+        name, out_shape, op, rest = m.groups()
+        if op == "dot":
+            cd = dims_re.search(rest)
+            ln = name_re.search(rest)
+            csize = 1
+            if cd and ln and ln.group(1) in shapes:
+                ds = shape_re.search(shapes[ln.group(1)])
+                if ds:
+                    dims = [int(d) for d in ds.group(2).split(",") if d]
+                    for ci in cd.group(1).split(","):
+                        if ci:
+                            csize *= dims[int(ci)]
+            oe, _ = hlo_walk._shape_elems_bytes(out_shape)
+            lhs_shape = shapes.get(ln.group(1), "?") if ln else "?"
+            key = f"{lhs_shape} . ? -> {out_shape.split('{')[0]}"
+            per_comp_dots[cur].append((key, 2.0 * oe * csize))
+        if op not in hlo_walk._FREE_OPS:
+            _, ob = hlo_walk._shape_elems_bytes(out_shape)
+            args = rest.split("), ")[0]
+            inb = sum(hlo_walk._shape_elems_bytes(shapes.get(a, ""))[1]
+                      for a in name_re.findall(args))
+            key = f"{op} -> {out_shape.split('{')[0][:70]}"
+            per_comp_bytes[cur].append((key, float(ob + inb)))
+        base = op
+        for sfx in ("-start", "-done"):
+            if base.endswith(sfx):
+                base = base[: -len(sfx)]
+        if base in hlo_walk._COLLECTIVES and not op.endswith("-done"):
+            args = rest.split("), ")[0]
+            b = sum(hlo_walk._shape_elems_bytes(shapes.get(a, ""))[1]
+                    for a in name_re.findall(args))
+            if b == 0:
+                _, b = hlo_walk._shape_elems_bytes(args)
+            per_comp_colls[cur].append(
+                (f"{base} {out_shape.split('{')[0][:60]}", float(b)))
+
+    # multipliers: visit like hlo_walk.walk, but record mult per computation
+    mults: dict[str, float] = defaultdict(float)
+
+    def visit(nm: str, level: int, mult: float, bytes_ok: bool) -> None:
+        c = comps.get(nm)
+        if c is None:
+            return
+        mults[nm] += mult
+        for child in c.plain_children:
+            visit(child, level, mult, bytes_ok)
+        for child in c.fusion_children:
+            visit(child, level, 0.0, bytes_ok)   # flops handled separately
+        for body, cond in c.while_children:
+            trip = hlo_walk._trip_count(comps, cond, 1)
+            visit(body, level + 1, mult * trip, bytes_ok)
+
+    visit(entry, 0, 1.0, True)
+
+    # fusion-internal dots: attribute to the fusion's computation multiplier
+    fmults: dict[str, float] = defaultdict(float)
+
+    def fvisit(nm: str, mult: float) -> None:
+        c = comps.get(nm)
+        if c is None:
+            return
+        fmults[nm] += mult
+        for child in c.plain_children + c.fusion_children:
+            fvisit(child, mult)
+        for body, cond in c.while_children:
+            trip = hlo_walk._trip_count(comps, cond, 1)
+            fvisit(body, mult * trip)
+
+    fvisit(entry, 1.0)
+
+    dots: dict[str, float] = defaultdict(float)
+    for comp, lst in per_comp_dots.items():
+        for key, fl in lst:
+            dots[key] += fl * fmults.get(comp, 0.0)
+    hbytes: dict[str, float] = defaultdict(float)
+    for comp, lst in per_comp_bytes.items():
+        for op, b in lst:
+            hbytes[op] += b * mults.get(comp, 0.0)
+    colls: dict[str, float] = defaultdict(float)
+    for comp, lst in per_comp_colls.items():
+        for key, b in lst:
+            colls[key] += b * fmults.get(comp, 0.0)
+    return dots, hbytes, colls
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--shape", required=True)
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--top", type=int, default=20)
+    p.add_argument("--microbatches", type=int, default=None)
+    p.add_argument("--remat", default=None)
+    args = p.parse_args()
+
+    from repro.launch.dryrun import lower_cell
+    rec = lower_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                     microbatches=args.microbatches, remat=args.remat,
+                     keep_hlo=True)
+    hlo = rec.pop("_hlo")
+    dots, hbytes, colls = census(hlo)
+    tot = sum(dots.values())
+    print(f"== {args.arch} x {args.shape}: total dot flops/device "
+          f"{tot:.3e}, model {rec['roofline']['model_flops']:.3e} over "
+          f"{rec['chips']} chips ==")
+    for k, v in sorted(dots.items(), key=lambda kv: -kv[1])[: args.top]:
+        print(f"  {v:.3e} ({v / tot * 100:5.1f}%)  {k}")
+    # Headline total = the walker's slice/widening-aware accounting (what
+    # the roofline uses); the breakdown below is the NAIVE attribution
+    # (operands+outputs per op) — useful for locating hot spots, but its
+    # sum exceeds the headline where slices/in-place updates/widening
+    # converts are involved.
+    from repro.roofline import hlo_walk as HW
+    comps2, entry2 = HW.parse_module(hlo)
+    wtot = HW.walk(comps2, entry2).hbm_bytes
+    btot = sum(hbytes.values())
+    print(f"== hbm bytes/device {wtot:.3e} (roofline) | "
+          f"{btot:.3e} (naive attribution below) ==")
+    for k, v in sorted(hbytes.items(), key=lambda kv: -kv[1])[: args.top]:
+        print(f"  {v:.3e} ({v / btot * 100:5.1f}%)  {k}")
+    ctot = sum(colls.values())
+    print(f"== collective bytes/device {ctot:.3e} ==")
+    for k, v in sorted(colls.items(), key=lambda kv: -kv[1])[: args.top]:
+        print(f"  {v:.3e} ({v / ctot * 100:5.1f}%)  {k}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container, interpret-mode timings are Python-interpreter bound
+and meaningless for TPU projections, so we time the XLA reference path and
+report the *modeled* TPU tile configuration + utilization from the elastic
+picker alongside (the quantity the Pallas kernel is built to realize)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import elastic
+from repro.kernels import ref
+
+
+def _timeit(fn, reps=5):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def gemm_bench() -> list[tuple]:
+    rows = []
+    rng = np.random.default_rng(0)
+    for (m, k, n) in [(512, 4096, 4096), (1024, 4096, 11008),
+                      (4096, 4096, 64000), (16384, 6144, 16384)]:
+        a = jnp.asarray(rng.normal(size=(m, k)), jnp.bfloat16)
+        b = jnp.asarray(rng.normal(size=(k, n)), jnp.bfloat16)
+        f = jax.jit(lambda a, b: ref.matmul(a, b))
+        us = _timeit(lambda: jax.block_until_ready(f(a, b)), reps=3)
+        cfg = elastic.choose_tiles(m, k, n, in_bytes=2)
+        flops = 2.0 * m * k * n
+        derived = (f"tiles=({cfg.bm},{cfg.bk},{cfg.bn})|{cfg.schedule}|"
+                   f"util={cfg.utilization:.3f}|"
+                   f"modeled_hbm_MB={cfg.hbm_words * 2 / 2**20:.1f}|"
+                   f"tpu_v5e_ideal_us={flops / 197e12 * 1e6:.1f}")
+        rows.append((f"gemm_{m}x{k}x{n}", us, derived))
+    return rows
+
+
+def swa_bench() -> list[tuple]:
+    rows = []
+    rng = np.random.default_rng(1)
+    b, h, kvh, s, d, w = 1, 8, 2, 4096, 128, 1024
+    q = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(b, kvh, s, d)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(b, kvh, s, d)), jnp.bfloat16)
+    from repro.kernels import ops
+    f = jax.jit(lambda q, k, v: ops.swa_attention(q, k, v, window=w,
+                                                  use_pallas=False))
+    us = _timeit(lambda: jax.block_until_ready(f(q, k, v)), reps=2)
+    flops = 4.0 * b * h * s * w * d  # qk + pv over the window
+    rows.append((f"swa_b{b}h{h}s{s}w{w}", us,
+                 f"window_flops={flops / 1e9:.2f}G|"
+                 f"tpu_v5e_ideal_us={flops / 197e12 * 1e6:.1f}|"
+                 f"hbm_bound_us={(3 * b * h * s * d * 2) / 819e9 * 1e6:.1f}"))
+    return rows
+
+
+def dataflow_cycle_bench() -> list[tuple]:
+    """Closed-form vs simulated cycle counts (already validated in tests)."""
+    from repro.core import perf_model as P
+    from repro.core.networks import get_network
+    rows = []
+    conv = get_network("resnet50")["conv"]
+    us = _timeit(lambda: sum(P.analyze_layer(l).Q for l in conv))
+    q = sum(P.analyze_layer(l).Q * 1 for l in conv)
+    rows.append(("cycle_model_resnet50", us,
+                 f"total_cycles={q}|fps@400MHz={400e6 / q:.1f}"))
+    return rows
+
+def decode_attention_bench() -> list[tuple]:
+    """Flash-decode kernel (interpret) + int8 storage/error metrics."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import ops, ref
+    from repro.kernels.decode_attention import quantize_kv
+
+    rng = np.random.default_rng(0)
+    b, h, kv, s, d = 2, 8, 2, 256, 64
+    q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, kv, s, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, kv, s, d)), jnp.float32)
+    kv_pos = jnp.arange(s)
+    k8, ks = quantize_kv(k)
+    v8, vs = quantize_kv(v)
+
+    us = _timeit(lambda: ops.kraken_decode_attention(
+        q, k8, v8, k_scale=ks, v_scale=vs, kv_pos=kv_pos, q_pos=s - 1,
+        block_s=128, interpret=True, use_pallas=True).block_until_ready(),
+        reps=1)
+    got = ops.kraken_decode_attention(
+        q, k8, v8, k_scale=ks, v_scale=vs, kv_pos=kv_pos, q_pos=s - 1,
+        block_s=128, interpret=True, use_pallas=True)
+    exact = ref.decode_attention(q, k, v, kv_pos=kv_pos, q_pos=s - 1)
+    err = float(jnp.abs(got - exact).max())
+    fp_bytes = k.size * 2 * 2                       # bf16 k+v
+    q_bytes = k8.size * 2 + ks.size * 4 * 2
+    return [("decode_attention_int8", us,
+             f"maxerr_vs_exact={err:.2e}|kv_bytes_ratio="
+             f"{q_bytes / fp_bytes:.2f}|hbm_read=int8_fused_dequant")]

@@ -1,0 +1,160 @@
+"""One function per paper table/figure.  Each returns a list of CSV rows
+``(name, us_per_call, derived)`` where ``derived`` carries the reproduced
+metric(s) and the paper's published value for side-by-side comparison."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import networks as N
+from repro.core import perf_model as P
+from repro.core.dataflow import reference_conv, simulate_conv
+
+
+def _timeit(fn, reps=3):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def table1_network_stats() -> list[tuple]:
+    """Table I: #MACs and M_K/M_X/M_Y per benchmark CNN."""
+    paper = {
+        "alexnet": dict(wz=669.7e6, v=616.2e6, mk=2.4e6, mx=299.0e3, my=650.0e3),
+        "vgg16": dict(wz=15.3e9, v=14.8e9, mk=14.7e6, mx=9.1e6, my=13.5e6),
+        "resnet50": dict(wz=3.9e9, v=3.7e9, mk=23.5e6, mx=8.0e6, my=10.6e6),
+    }
+    rows = []
+    for net, want in paper.items():
+        conv = N.get_network(net)["conv"]
+        us = _timeit(lambda: N.total_macs(conv, valid=True))
+        derived = (
+            f"MACwz={N.total_macs(conv, valid=False) / 1e6:.1f}M"
+            f"(paper {want['wz'] / 1e6:.1f}M)|"
+            f"MACv={N.total_macs(conv, valid=True) / 1e6:.1f}M"
+            f"(paper {want['v'] / 1e6:.1f}M)|"
+            f"M_K={N.total_words(conv, 'k') / 1e6:.2f}M"
+            f"(paper {want['mk'] / 1e6:.1f}M)|"
+            f"M_X={N.total_words(conv, 'x') / 1e6:.3f}M"
+            f"(paper {want['mx'] / 1e6:.3f}M)|"
+            f"M_Y={N.total_words(conv, 'y') / 1e6:.3f}M"
+            f"(paper {want['my'] / 1e6:.3f}M)"
+        )
+        rows.append((f"table1_{net}", us, derived))
+    return rows
+
+
+def table5_conv_comparison() -> list[tuple]:
+    """Table V, the Kraken 7x96 columns (conv layers @ 400 MHz)."""
+    paper = {
+        "alexnet": dict(eff=77.2, fps=336.6, lat=3.0, gops=414.8, gpa=56.6,
+                        gpw=395.2, ma=6.4, ai=191.8),
+        "vgg16": dict(eff=96.5, fps=17.5, lat=57.2, gops=518.7, gpa=70.7,
+                      gpw=494.1, ma=96.8, ai=306.8),
+        "resnet50": dict(eff=88.3, fps=64.2, lat=15.6, gops=474.9, gpa=64.8,
+                         gpw=452.4, ma=67.9, ai=108.9),
+    }
+    rows = []
+    for net, want in paper.items():
+        conv = N.get_network(net)["conv"]
+        us = _timeit(lambda: P.analyze_network(conv))
+        perf = P.analyze_network(conv)
+        derived = (
+            f"eff={perf.efficiency * 100:.1f}%(paper {want['eff']})|"
+            f"fps={perf.fps():.1f}(paper {want['fps']})|"
+            f"latency={perf.latency_ms:.1f}ms(paper {want['lat']})|"
+            f"Gops={perf.gops:.1f}(paper {want['gops']})|"
+            f"Gops/mm2={perf.gops_per_mm2:.1f}(paper {want['gpa']})|"
+            f"Gops/W={perf.gops_per_w(P.POWER_CONV_W):.1f}(paper {want['gpw']})|"
+            f"MA={perf.memory_accesses / 1e6:.1f}M(paper {want['ma']})|"
+            f"AI={perf.arithmetic_intensity:.1f}(paper {want['ai']})"
+        )
+        rows.append((f"table5_{net}", us, derived))
+    return rows
+
+
+def table6_fc_comparison() -> list[tuple]:
+    """Table VI: FC layers @ 200 MHz, batch 7."""
+    paper = {
+        "alexnet": dict(eff=99.1, fps=2400, ma=12.2, ai=9.1),
+        "vgg16": dict(eff=99.1, fps=1100, ma=27.0, ai=9.2),
+        "resnet50": dict(eff=94.7, fps=62100, ma=0.5, ai=8.6),
+    }
+    rows = []
+    for net, want in paper.items():
+        fcl = N.get_network(net, fc_batch=7)["fc"]
+        us = _timeit(lambda: P.analyze_network(fcl, freq_mhz=P.F_FC_MHZ))
+        perf = P.analyze_network(fcl, freq_mhz=P.F_FC_MHZ)
+        derived = (
+            f"eff={perf.efficiency * 100:.1f}%(paper {want['eff']})|"
+            f"fps={perf.fps(batch=7):.0f}(paper {want['fps']})|"
+            f"MA/frame={perf.fc_memory_accesses_per_frame(7) / 1e6:.2f}M"
+            f"(paper {want['ma']})|"
+            f"AI={perf.fc_arithmetic_intensity(7):.2f}(paper {want['ai']})"
+        )
+        rows.append((f"table6_{net}", us, derived))
+    return rows
+
+
+def fig3_layerwise_efficiency() -> list[tuple]:
+    """Fig. 3: per-layer efficiency curves (summarized: min/mean/max)."""
+    rows = []
+    for net in ("alexnet", "vgg16", "resnet50"):
+        conv = N.get_network(net)["conv"]
+        us = _timeit(lambda: [P.analyze_layer(l).efficiency for l in conv])
+        effs = [P.analyze_layer(l).efficiency * 100 for l in conv]
+        per_layer = ",".join(f"{l.name}:{e:.1f}" for l, e in zip(conv, effs))
+        rows.append((f"fig3_{net}", us,
+                     f"min={min(effs):.1f}|mean={np.mean(effs):.1f}|"
+                     f"max={max(effs):.1f}|{per_layer}"))
+    return rows
+
+
+def fig4_memory_accesses() -> list[tuple]:
+    """Fig. 4: M^ breakdown (X/K/Y words) per CNN."""
+    rows = []
+    for net in ("alexnet", "vgg16", "resnet50"):
+        conv = N.get_network(net)["conv"]
+        us = _timeit(lambda: P.analyze_network(conv).memory_accesses)
+        perf = P.analyze_network(conv)
+        mx = sum(l.m_x_hat for l in perf.layers)
+        mk = sum(l.m_k_hat for l in perf.layers)
+        my = sum(l.m_y_hat for l in perf.layers)
+        rows.append((f"fig4_{net}", us,
+                     f"M_X^={mx / 1e6:.2f}M|M_K^={mk / 1e6:.2f}M|"
+                     f"M_Y^={my / 1e6:.2f}M|total={(mx + mk + my) / 1e6:.2f}M"))
+    return rows
+
+
+def config_search_vi_a() -> list[tuple]:
+    """Sec. VI-A: the (R, C) static-configuration search."""
+    sets = [N.get_network(n)["conv"] for n in ("alexnet", "vgg16", "resnet50")]
+    us = _timeit(lambda: P.config_search(sets, r_range=[7], c_range=[96]), reps=1)
+    res = {(r["R"], r["C"]): r for r in P.config_search(
+        sets, r_range=[7, 14], c_range=[15, 24, 96])}
+    parts = []
+    for rc in [(7, 15), (7, 24), (14, 24), (7, 96)]:
+        r = res[rc]
+        parts.append(f"{rc[0]}x{rc[1]}:eff={r['mean_efficiency'] * 100:.1f}%"
+                     f",MA={r['total_memory_accesses'] / 1e6:.0f}M")
+    return [("config_search", us, "|".join(parts) + "|chosen=7x96")]
+
+
+def dataflow_simulation() -> list[tuple]:
+    """Functional dataflow simulator vs oracle on a ResNet-style layer."""
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(1, 14, 14, 8))
+    k = rng.normal(size=(3, 3, 8, 12))
+    us = _timeit(lambda: simulate_conv(x, k, s_h=1, s_w=1, pad_h=(1, 1),
+                                       pad_w=(1, 1), R=7, C=24), reps=1)
+    res = simulate_conv(x, k, s_h=1, s_w=1, pad_h=(1, 1), pad_w=(1, 1),
+                        R=7, C=24)
+    ref = reference_conv(x, k, s_h=1, s_w=1, pad_h=(1, 1), pad_w=(1, 1))
+    err = float(np.abs(res.y - ref).max())
+    return [("dataflow_sim_3x3", us,
+             f"maxerr={err:.2e}|cycles={res.issue_cycles}|E={res.config.E}|"
+             f"G={res.config.G}")]

@@ -1,0 +1,88 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from results/dryrun.jsonl.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.roofline_table               # roofline (16x16)
+    PYTHONPATH=src python -m benchmarks.roofline_table --section dryrun
+    PYTHONPATH=src python -m benchmarks.roofline_table --jsonl results/x.jsonl
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+DEFAULT = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun.jsonl")
+
+
+def load(path: str) -> list[dict]:
+    recs = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"], r["mesh"])] = r  # last write wins
+    return list(recs.values())
+
+
+def _gib(b: float) -> str:
+    return f"{b / 2**30:.2f}"
+
+
+def dryrun_table(recs: list[dict]) -> str:
+    out = ["| arch | shape | mesh | status | compile (s) | args/dev (GiB) | "
+           "temp/dev (GiB) | collectives (AG/AR/RS/A2A/CP) |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r["status"] != "ok":
+            reason = r.get("reason", r.get("error", ""))[:90]
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"{r['status'].upper()}: {reason} | | | | |")
+            continue
+        m, c = r["memory"], r["collectives"]["counts"]
+        cs = "/".join(str(int(c.get(k, 0))) for k in
+                      ("all-gather", "all-reduce", "reduce-scatter",
+                       "all-to-all", "collective-permute"))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r['compile_s']} | {_gib(m['argument_bytes'])} | "
+            f"{_gib(m['temp_bytes'])} | {cs} |")
+    return "\n".join(out)
+
+
+def roofline_table(recs: list[dict], mesh: str = "16x16") -> str:
+    out = ["| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | bottleneck |"
+           " model GF | useful | roofline |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    rows = [r for r in recs if r["status"] == "ok" and r["mesh"] == mesh]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        f = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {f['t_compute_s']:.3f} | "
+            f"{f['t_memory_s']:.3f} | {f['t_collective_s']:.3f} | "
+            f"**{f['bottleneck']}** | {f['model_flops'] / 1e9:.0f} | "
+            f"{f['useful_flops_fraction']:.2f} | "
+            f"{f['roofline_fraction']:.4f} |")
+    skips = [r for r in recs if r["status"] == "skip" and r["mesh"] == mesh]
+    for r in sorted(skips, key=lambda r: (r["arch"], r["shape"])):
+        out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                   f"SKIP: {r['reason'][:80]} | | | |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--jsonl", default=DEFAULT)
+    p.add_argument("--section", choices=["roofline", "dryrun"],
+                   default="roofline")
+    p.add_argument("--mesh", default="16x16")
+    args = p.parse_args()
+    recs = load(args.jsonl)
+    if args.section == "dryrun":
+        print(dryrun_table(recs))
+    else:
+        print(roofline_table(recs, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

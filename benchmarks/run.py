@@ -1,0 +1,62 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Sections:
+  * table1 / table5 / table6 / fig3 / fig4 / config_search — the paper's own
+    results, reproduced from the analytical model (validated in tests),
+  * dataflow_sim — the functional uniform-dataflow simulator,
+  * gemm/swa kernel micro-benchmarks (XLA path timings + modeled TPU tiles),
+  * roofline_summary — per-cell terms from results/dryrun.jsonl if present.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+
+def roofline_summary() -> list[tuple]:
+    path = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "dryrun.jsonl")
+    rows = []
+    if not os.path.exists(path):
+        return [("roofline_summary", 0.0,
+                 "results/dryrun.jsonl absent - run repro.launch.dryrun")]
+    with open(path) as f:
+        for line in f:
+            rec = json.loads(line)
+            if rec.get("status") != "ok":
+                continue
+            r = rec["roofline"]
+            rows.append((
+                f"roofline_{rec['arch']}_{rec['shape']}_{rec['mesh']}", 0.0,
+                f"bottleneck={r['bottleneck']}|"
+                f"t_comp={r['t_compute_s']:.4f}s|t_mem={r['t_memory_s']:.4f}s|"
+                f"t_coll={r['t_collective_s']:.4f}s|"
+                f"roofline_frac={r['roofline_fraction']:.3f}"))
+    return rows
+
+
+def main() -> None:
+    from benchmarks import kernels_bench, paper_tables
+    sections = [
+        paper_tables.table1_network_stats,
+        paper_tables.table5_conv_comparison,
+        paper_tables.table6_fc_comparison,
+        paper_tables.fig3_layerwise_efficiency,
+        paper_tables.fig4_memory_accesses,
+        paper_tables.config_search_vi_a,
+        paper_tables.dataflow_simulation,
+        kernels_bench.gemm_bench,
+        kernels_bench.swa_bench,
+        kernels_bench.dataflow_cycle_bench,
+        kernels_bench.decode_attention_bench,
+        roofline_summary,
+    ]
+    print("name,us_per_call,derived")
+    for fn in sections:
+        for name, us, derived in fn():
+            print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Long-context decode across attention families (the ``long_500k`` cell).
+
+Demonstrates why the dry-run runs that cell only for bounded-state archs:
+
+* rwkv6-3b     — attention-free, O(1) recurrent state;
+* zamba2-1.2b  — Mamba2 O(1) state + a shared attention block;
+* mixtral-8x22b — every layer SWA: KV bounded by the window.
+
+Each model decodes with a *small* cache while the logical position runs
+far beyond it (the ring buffer / recurrent state carries the context),
+exactly what makes a 524k-token decode cell shardable.  Reduced configs,
+CPU-runnable:
+
+    PYTHONPATH=src python examples/long_context.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, smoke_config
+from repro.models.model import Model
+
+
+def run(arch: str, *, cache_len: int = 32, horizon: int = 128,
+        batch: int = 2) -> None:
+    cfg = smoke_config(get_arch(arch))
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    caches = model.init_caches(batch, cache_len, flat=True)
+
+    rng = np.random.default_rng(0)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, 8)),
+                         jnp.int32)
+    logits, caches = model.prefill(
+        params, {"tokens": prompt,
+                 "positions": jnp.arange(8, dtype=jnp.int32)}, caches)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+
+    decode = jax.jit(model.decode_step, donate_argnums=(1,))
+    t0 = time.time()
+    for pos in range(8, 8 + horizon):
+        logits, caches = decode(params, caches, tok, jnp.int32(pos))
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        assert not bool(jnp.any(jnp.isnan(logits))), (arch, pos)
+    dt = time.time() - t0
+    print(f"{arch:16s} [{cfg.family}] decoded to position {8 + horizon} "
+          f"with a {cache_len}-slot cache: {horizon * batch / dt:6.1f} tok/s "
+          f"(no NaNs)")
+
+
+def main() -> int:
+    for arch in ("rwkv6-3b", "zamba2-1.2b", "mixtral-8x22b"):
+        run(arch)
+    print("long-context decode: position >> cache everywhere — the state "
+          "stays O(window/recurrence), which is what long_500k shards.")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

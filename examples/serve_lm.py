@@ -1,0 +1,23 @@
+"""Serve a small model with batched requests through the continuous-batching
+server loop (prefill + cached decode, slot refill on completion).
+
+    PYTHONPATH=src python examples/serve_lm.py
+    PYTHONPATH=src python examples/serve_lm.py --arch mixtral-8x22b  # smoke MoE
+"""
+
+import sys
+
+from repro.launch import serve
+
+
+def main(argv=None):
+    argv = argv if argv is not None else sys.argv[1:]
+    if not any(a.startswith("--arch") for a in argv):
+        argv = ["--arch", "yi-6b"] + argv
+    return serve.main(argv + ["--smoke", "--requests", "6", "--slots", "3",
+                              "--prompt-len", "10", "--max-new", "12",
+                              "--cache-len", "64"])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,48 @@
+"""End-to-end driver: train a ~100M-parameter dense LM for a few hundred
+steps with the full production stack (checkpointing, supervisor, straggler
+watchdog, cosine schedule).
+
+    PYTHONPATH=src python examples/train_lm.py               # 300 steps
+    PYTHONPATH=src python examples/train_lm.py --steps 30    # quick check
+
+The config is a scaled yi-family model: 12L x d768 x 12H, vocab 16k
+(~114M params).  Loss drops from ~9.7 to well under the bigram entropy of
+the synthetic stream within a few hundred steps.
+"""
+
+import argparse
+import dataclasses
+import sys
+
+from repro.configs import get_arch
+from repro.launch import train as T
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=300)
+    p.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = p.parse_args(argv)
+
+    # ~100M-param config, registered inline as a scaled family member.
+    import repro.configs.registry as R
+    cfg = dataclasses.replace(
+        get_arch("yi-6b"), name="yi-100m",
+        num_layers=12, d_model=768, num_heads=12, num_kv_heads=4,
+        head_dim=64, d_ff=2048, vocab_size=16000, dtype="float32")
+    R.ARCHS[cfg.name] = cfg
+
+    from repro.models.model import Model
+    n = cfg.param_count()
+    print(f"training {cfg.name}: {n / 1e6:.1f}M params, {args.steps} steps")
+
+    return T.main([
+        "--arch", cfg.name, "--steps", str(args.steps),
+        "--batch", "8", "--seq", "256", "--lr", "1e-3",
+        "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "100",
+        "--log-every", "10",
+    ])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

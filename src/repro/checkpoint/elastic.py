@@ -1,0 +1,34 @@
+"""Elastic re-sharding: restore a checkpoint onto a different mesh.
+
+Checkpoints are saved unsharded with logical-axis metadata, so restoring
+onto a new mesh is just ``jax.device_put`` with shardings rebuilt from the
+*new* mesh and the same logical rules — the mechanism behind elastic
+restarts (e.g. a 2-pod job resuming on 1 pod after a failure, or scaling
+from 256 to 512 chips).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro import sharding as Sh
+
+
+def reshard_tree(tree, axes_tree, mesh, rules):
+    """Place every leaf of ``tree`` per its logical axes under (mesh, rules)."""
+    with Sh.use_mesh_and_rules(mesh, rules):
+        def place(leaf, axes):
+            if axes is None:
+                return jax.device_put(leaf)
+            ns = Sh.logical_to_sharding(leaf.shape, axes)
+            return jax.device_put(leaf, ns)
+        return jax.tree.map(place, tree, axes_tree,
+                            is_leaf=lambda x: x is None)
+
+
+def elastic_restore(directory: str, specs_tree, axes_tree, mesh, rules,
+                    step: int | None = None):
+    """restore() + reshard onto (mesh, rules) in one call."""
+    from repro.checkpoint.checkpoint import restore
+    host_tree, step, extra = restore(directory, specs_tree, step)
+    return reshard_tree(host_tree, axes_tree, mesh, rules), step, extra

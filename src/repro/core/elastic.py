@@ -1,0 +1,130 @@
+"""Elastic tiling: the paper's elastic-grouping math generalized to TPU tiles.
+
+Kraken packs `C` cores into `E = floor(C/G)` elastic groups of
+`G = K_W + S_W - 1` cores so that arbitrary layer shapes keep the PE array
+busy; the wasted fraction is `C % G` cores plus ceil-division waste in
+`T = ceil(C_o / (E*S_W))`.  On the TPU MXU the isomorphic problem is tile
+quantization: a GEMM cell (M, K, N) mapped onto blocks (bm, bk, bn) wastes
+`ceil(M/bm)*bm*... - M*K*N` MACs.  This module applies the same closed-form
+utilization reasoning (paper eq. 19, simplified form) to choose block shapes
+per layer at trace time — the software analogue of one-clock dynamic
+reconfiguration: every layer gets its own tiles, with zero runtime cost.
+
+Two schedules, mirroring the ASIC (see DESIGN.md Sec. 2):
+
+* ``weight_stationary`` — full-K blocks: the weight tile [K, bn] is resident
+  in VMEM across all M steps (Kraken's weights rotator: the R-SRAM holds the
+  iteration's whole `S_W*C_i*K_W x C` working set).  Minimal weight traffic.
+* ``output_stationary`` — K is split; an fp32 VMEM accumulator holds the
+  output tile across k steps (Kraken's in-accumulator partial sums).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+# TPU v5e-ish constants used for *static* selection (the runtime never needs
+# them; the dry-run roofline uses the constants in repro.roofline).
+MXU_DIM = 128
+SUBLANE = 8
+VMEM_BYTES = 16 * 1024 * 1024  # v5e VMEM 16 MiB per core (leave headroom)
+VMEM_BUDGET = int(VMEM_BYTES * 0.7)
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return ceil_div(a, b) * b
+
+
+def tile_utilization(m: int, k: int, n: int, bm: int, bk: int, bn: int) -> float:
+    """Generalized eq. (19): useful MACs / issued MACs for a tiled GEMM."""
+    issued = (round_up(m, bm) * round_up(k, bk) * round_up(n, bn))
+    return (m * k * n) / issued
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    bm: int
+    bk: int
+    bn: int
+    schedule: str          # 'weight_stationary' | 'output_stationary'
+    utilization: float
+    vmem_bytes: int
+    hbm_words: int         # modeled HBM traffic (words), incl. tile re-reads
+
+    @property
+    def grid(self) -> tuple[int, ...]:
+        raise NotImplementedError
+
+
+def _vmem_usage(bm: int, bk: int, bn: int, in_bytes: int, acc: bool) -> int:
+    # double-buffered input streams + (optionally) an fp32 accumulator tile
+    use = 2 * (bm * bk + bk * bn) * in_bytes + bm * bn * 4
+    if acc:
+        use += bm * bn * 4
+    return use
+
+
+def modeled_hbm_words(m: int, k: int, n: int, bm: int, bk: int, bn: int,
+                      schedule: str) -> int:
+    """Paper Sec. V-C adapted: tile re-reads by schedule.
+
+    weight_stationary (bk == K): A read ceil(N/bn) times, B once, O once.
+    output_stationary (grid n,m,k): A read ceil(N/bn) times, B read
+    ceil(M/bm) times, O once.
+    """
+    a_words = m * k * ceil_div(n, bn)
+    o_words = m * n
+    if schedule == "weight_stationary":
+        b_words = k * n
+    else:
+        b_words = k * n * ceil_div(m, bm)
+    return a_words + b_words + o_words
+
+
+def choose_tiles(m: int, k: int, n: int, *, in_bytes: int = 2,
+                 vmem_budget: int = VMEM_BUDGET) -> TileConfig:
+    """Elastic tile selection for one GEMM cell.
+
+    Maximizes utilization (primary) then minimizes modeled HBM traffic
+    (secondary), subject to VMEM capacity and MXU alignment — the same
+    two-objective selection the paper performs over (R, C) in Sec. VI-A.
+    """
+    cand_m = sorted({min(round_up(m, SUBLANE), c) for c in (128, 256, 512)})
+    cand_n = sorted({min(round_up(n, MXU_DIM), c) for c in (128, 256, 512)})
+    best: TileConfig | None = None
+
+    def consider(bm: int, bk: int, bn: int, schedule: str) -> None:
+        nonlocal best
+        use = _vmem_usage(bm, bk, bn, in_bytes, acc=(schedule == "output_stationary"))
+        if use > vmem_budget:
+            return
+        util = tile_utilization(m, k, n, bm, bk, bn)
+        words = modeled_hbm_words(m, k, n, bm, bk, bn, schedule)
+        cfg = TileConfig(bm, bk, bn, schedule, util, use, words)
+        if best is None or (cfg.utilization, -cfg.hbm_words) > (best.utilization, -best.hbm_words):
+            best = cfg
+
+    # Kraken-style weight-stationary: full-K resident weight tile.
+    bk_full = round_up(k, MXU_DIM)
+    for bm in cand_m:
+        for bn in cand_n:
+            consider(bm, bk_full, bn, "weight_stationary")
+    # Output-stationary fallback with split K.
+    for bm in cand_m:
+        for bn in cand_n:
+            for bk in (128, 256, 512):
+                bk_c = min(round_up(k, MXU_DIM), bk)
+                consider(bm, bk_c, bn, "output_stationary")
+    if best is None:
+        # Degenerate: minimal tiles (always fit on real hardware).
+        best = TileConfig(SUBLANE, MXU_DIM, MXU_DIM, "output_stationary",
+                          tile_utilization(m, k, n, SUBLANE, MXU_DIM, MXU_DIM),
+                          _vmem_usage(SUBLANE, MXU_DIM, MXU_DIM, in_bytes, True),
+                          modeled_hbm_words(m, k, n, SUBLANE, MXU_DIM, MXU_DIM,
+                                            "output_stationary"))
+    return best

@@ -1,0 +1,193 @@
+"""The uniform op abstraction: conv / FC / matmul / attention -> GEMM cells.
+
+This is the paper's thesis formalized as a data structure.  Kraken shows one
+dataflow processes every layer kind; section II expresses FC layers and
+matrix products as *degenerate convolutions* (``N, W, K_H, K_W, S_H, S_W = 1``).
+On TPU the universal primitive runs the other way — everything lowers to a
+GEMM cell on the MXU — but the claim being honored is identical: one
+datapath, one tiling/scheduling mechanism, for every op in a DNN.
+
+A :class:`GemmCell` is the uniform intermediate representation.  Lowering
+rules::
+
+    conv   [N,H,W,Ci] * [KH,KW,Ci,Co] -> (N*OH*OW, Ci*KH*KW, Co)   (im2col)
+    fc     [Nf,Ci] * [Ci,Co]          -> (Nf, Ci, Co)
+    matmul [M,K] @ [K,N]              -> (M, K, N)
+    attention: per-layer qkv/out projections + (batch*heads) score and
+               context cells — the transformer decomposition the paper's
+               introduction points at ("matrix products required for ...
+               attention-based transformers").
+
+Every cell carries its elastic tile plan (:func:`repro.core.elastic.
+choose_tiles`) plus exact FLOP and modeled HBM-word counts, so the same
+object serves three masters: the executor (`run_cell`), the napkin-math perf
+loop, and the paper-metric benchmarks (`benchmarks/paper_tables.py` uses the
+ASIC model in `core/perf_model.py`; this module is its TPU twin).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Literal
+
+from repro.core import elastic
+
+OpKind = Literal["conv", "fc", "matmul", "attn_score", "attn_context"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmCell:
+    """One GEMM on the uniform datapath: ``[m, k] @ [k, n]``, repeated
+    ``batch`` times with independent operands (batch=1 for plain matmul)."""
+    kind: OpKind
+    m: int
+    k: int
+    n: int
+    batch: int = 1
+    name: str = ""
+
+    @property
+    def flops(self) -> int:
+        return 2 * self.batch * self.m * self.k * self.n
+
+    @property
+    def macs(self) -> int:
+        return self.batch * self.m * self.k * self.n
+
+    def operand_words(self) -> int:
+        """Minimal words moved if every operand is touched exactly once."""
+        return self.batch * (self.m * self.k + self.k * self.n + self.m * self.n)
+
+    def arithmetic_intensity(self, word_bytes: int = 2) -> float:
+        """ops / byte at perfect reuse — the roofline upper bound for the cell."""
+        return self.flops / (self.operand_words() * word_bytes)
+
+    def tile_plan(self, in_bytes: int = 2) -> elastic.TileConfig:
+        return elastic.choose_tiles(self.m, self.k, self.n, in_bytes=in_bytes)
+
+    def utilization(self, in_bytes: int = 2) -> float:
+        """MXU utilization under the elastic tile plan — the TPU analogue of
+        the paper's per-layer performance efficiency ℰ_j (eq. 19)."""
+        return self.tile_plan(in_bytes).utilization
+
+
+# ---------------------------------------------------------------------------
+# Lowering rules (the uniform dataflow's restructurings, Sec. IV)
+# ---------------------------------------------------------------------------
+
+def conv_cell(*, n: int, h: int, w: int, c_i: int, k_h: int, k_w: int,
+              c_o: int, s_h: int = 1, s_w: int = 1,
+              pad_h: tuple[int, int] = (0, 0),
+              pad_w: tuple[int, int] = (0, 0), name: str = "") -> GemmCell:
+    """conv -> im2col GEMM.  Output spatial dims follow the valid-window rule."""
+    oh = (h + pad_h[0] + pad_h[1] - k_h) // s_h + 1
+    ow = (w + pad_w[0] + pad_w[1] - k_w) // s_w + 1
+    return GemmCell("conv", m=n * oh * ow, k=c_i * k_h * k_w, n=c_o, name=name)
+
+
+def fc_cell(*, batch: int, c_i: int, c_o: int, name: str = "") -> GemmCell:
+    """The paper's eq. (2): a conv with N,W,K_H,K_W,S_H,S_W = 1."""
+    return GemmCell("fc", m=batch, k=c_i, n=c_o, name=name)
+
+
+def matmul_cell(m: int, k: int, n: int, *, batch: int = 1,
+                name: str = "") -> GemmCell:
+    return GemmCell("matmul", m=m, k=k, n=n, batch=batch, name=name)
+
+
+def attention_cells(*, batch: int, seq_q: int, seq_kv: int, d_model: int,
+                    num_heads: int, num_kv_heads: int, head_dim: int,
+                    causal: bool = True, window: int = 0,
+                    name: str = "attn") -> list[GemmCell]:
+    """A GQA attention layer as uniform GEMM cells.
+
+    Projections are single large GEMMs over the flattened token dim; the
+    score/context products are per-(batch*kv_head) cells.  ``causal`` halves
+    the effective score/context work; a sliding ``window`` caps seq_kv —
+    both folded into the *effective* k/n so the FLOP count matches what a
+    masked flash kernel actually issues.
+    """
+    t = batch * seq_q
+    cells = [
+        matmul_cell(t, d_model, num_heads * head_dim, name=f"{name}_wq"),
+        matmul_cell(t, d_model, num_kv_heads * head_dim, name=f"{name}_wk"),
+        matmul_cell(t, d_model, num_kv_heads * head_dim, name=f"{name}_wv"),
+    ]
+    eff_kv = min(seq_kv, window) if window else seq_kv
+    if causal and seq_q == seq_kv and not window:
+        eff_kv = max(1, seq_kv // 2)  # average causal row length
+    cells.append(GemmCell("attn_score", m=seq_q, k=head_dim, n=eff_kv,
+                          batch=batch * num_heads, name=f"{name}_qk"))
+    cells.append(GemmCell("attn_context", m=seq_q, k=eff_kv, n=head_dim,
+                          batch=batch * num_heads, name=f"{name}_pv"))
+    cells.append(matmul_cell(t, num_heads * head_dim, d_model,
+                             name=f"{name}_wo"))
+    return cells
+
+
+def moe_cells(*, tokens: int, d_model: int, d_ff: int, n_experts: int,
+              top_k: int, swiglu: bool = True,
+              name: str = "moe") -> list[GemmCell]:
+    """Top-k MoE FFN at perfect balance: each expert sees tokens*top_k/E."""
+    per_expert = max(1, math.ceil(tokens * top_k / n_experts))
+    n_in = 2 if swiglu else 1
+    return (
+        [GemmCell("matmul", m=tokens, k=d_model, n=n_experts,
+                  name=f"{name}_router")]
+        + [GemmCell("fc", m=per_expert, k=d_model, n=d_ff, batch=n_experts,
+                    name=f"{name}_wi{i}") for i in range(n_in)]
+        + [GemmCell("fc", m=per_expert, k=d_ff, n=d_model, batch=n_experts,
+                    name=f"{name}_wo")]
+    )
+
+
+# ---------------------------------------------------------------------------
+# Execution: run a cell's op through the uniform kernel
+# ---------------------------------------------------------------------------
+
+def run_cell(cell: GemmCell, a, b, **kw):
+    """Execute ``a @ b`` for a lowered cell via the uniform Pallas path.
+
+    ``a``: [m, k] (or [batch, m, k]); ``b``: [k, n] (or [batch, k, n]).
+    Dispatch is shape-checked against the cell so a lowering bug surfaces at
+    the boundary, not as silent garbage.
+    """
+    import jax
+    from repro.kernels import ops
+
+    if a.ndim == 3:
+        assert a.shape == (cell.batch, cell.m, cell.k), (a.shape, cell)
+        assert b.shape == (cell.batch, cell.k, cell.n), (b.shape, cell)
+        return jax.vmap(lambda x, y: ops.kraken_matmul(x, y, **kw))(a, b)
+    assert a.shape == (cell.m, cell.k), (a.shape, cell)
+    assert b.shape == (cell.k, cell.n), (b.shape, cell)
+    return ops.kraken_matmul(a, b, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Whole-layer summaries (napkin math for the perf loop)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CellReport:
+    cell: GemmCell
+    tiles: elastic.TileConfig
+
+    @property
+    def modeled_seconds_compute(self) -> float:
+        from repro.roofline.analysis import PEAK_FLOPS
+        return self.cell.flops / (PEAK_FLOPS * self.tiles.utilization)
+
+    @property
+    def modeled_seconds_memory(self) -> float:
+        from repro.roofline.analysis import HBM_BW
+        return (self.tiles.hbm_words * self.cell.batch * 2) / HBM_BW
+
+
+def report(cells: list[GemmCell], in_bytes: int = 2) -> list[CellReport]:
+    return [CellReport(c, c.tile_plan(in_bytes)) for c in cells]
+
+
+def dominant_cell(cells: list[GemmCell]) -> GemmCell:
+    return max(cells, key=lambda c: c.flops)

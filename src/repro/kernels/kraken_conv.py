@@ -1,0 +1,170 @@
+"""Direct convolution with Kraken's uniform dataflow, as a Pallas TPU kernel.
+
+This is the *faithful* TPU adaptation of the paper's engine (Sec. III-IV),
+mechanism by mechanism — distinct from the im2col lowering in ``ops.
+kraken_conv2d`` (which realizes the uniformity thesis by collapsing conv
+into the GEMM cell; this kernel realizes the *dataflow* itself):
+
+=====================================  =====================================
+Kraken (65-nm ASIC)                    this kernel (TPU)
+=====================================  =====================================
+pixel interleaving X -> X_hat          :func:`interleave_input` restructure
+  (Alg. 1: split/pad/reshape so          [N,H,W,C] -> [N*L, R+F, S_H, W, C];
+  strided vertical conv = linear          O(n), once per layer boundary,
+  shifts, Table II)                       exactly the paper's X1->X2->X3
+pixel shifter (R+max{F} registers)     the X_hat band is the x BlockSpec —
+                                         VMEM-resident, index map constant
+                                         in the tap dim (never re-fetched)
+weights rotator (ping-pong R-SRAM,     weight tile [KH,KW,C,bco] index map
+  C words wide, rotated N*L*W times)     depends only on the c_o grid dim ->
+                                         Pallas keeps it VMEM-resident and
+                                         double-buffers the next tile (the
+                                         W-SRAM prefetch) across the grid
+output-stationary accumulators         fp32 VMEM scratch acc[R, OW, bco],
+  (partials never leave the PE           grid's innermost dim = vertical tap
+  until complete, Sec. III-A)            k_h; partials never touch HBM
+horizontal shift-accumulate            static K_W python loop of strided
+  (Tables III/IV, implicit zero pad)     slices + MXU dot over C: the
+                                         sigma_{w,k_w} diagonals of Table III
+elastic grouping G = K_W + S_W - 1     bco tile rounding (elastic.round_up);
+                                         the S_W "extra output channels per
+                                         group" trick is subsumed by the
+                                         strided slice reading only needed
+                                         columns — no wasted diagonals
+=====================================  =====================================
+
+Grid = (c_o tiles, N*L blocks, K_H taps), tap innermost: one sweep of the
+grid performs vertical convolution (Σ^{K_H}) x depthwise dot (Σ^{C_i}, on
+the MXU) x horizontal convolution (Σ^{K_W}) in the paper's order, releasing
+R x OW x bco complete output pixels per (c_o, block) — the engine's
+``E*S_W*R`` pixels per q_kc clocks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.elastic import ceil_div, round_up
+
+
+def shift_factor(k_h: int, s_h: int) -> int:
+    """Paper eq. (7): F = ceil(K_H / S_H) - 1."""
+    return ceil_div(k_h, s_h) - 1
+
+
+def interleave_input(x: jnp.ndarray, *, R: int, k_h: int, s_h: int
+                     ) -> tuple[jnp.ndarray, int, int]:
+    """X -> X_hat (Alg. 1 'Pixels in DRAM'): [N, H, W, C] (pre-padded) ->
+    [N*L, R+F, S_H, W, C] so that output row ``r`` of block ``l`` at vertical
+    tap ``kh`` reads band row ``r + kh // S_H``, sub-row ``kh % S_H`` — a
+    *linear* shift despite the stride (Table II).
+
+    Returns (x_hat, L, OH).
+    """
+    n, h, w, c = x.shape
+    f = shift_factor(k_h, s_h)
+    oh = (h - k_h) // s_h + 1
+    L = ceil_div(oh, R)
+    rows_needed = L * R * s_h + f * s_h + (s_h - 1)  # last block's halo
+    if rows_needed > h:
+        x = jnp.pad(x, ((0, 0), (0, rows_needed - h), (0, 0), (0, 0)))
+    # block l reads rows [l*R*s_h, l*R*s_h + (R+F)*s_h)  (X2's halo padding)
+    row_idx = (jnp.arange(L)[:, None] * (R * s_h)
+               + jnp.arange((R + f) * s_h)[None, :])       # [L, (R+F)*S_H]
+    xb = x[:, row_idx]                                     # [N, L, (R+F)*S_H, W, C]
+    x_hat = xb.reshape(n, L, R + f, s_h, w, c).reshape(n * L, R + f, s_h, w, c)
+    return x_hat, L, oh
+
+
+def _conv_kernel(x_ref, k_ref, o_ref, acc_ref, *, R: int, k_h: int, k_w: int,
+                 s_h: int, s_w: int, ow: int):
+    """One (c_o tile, block, vertical tap) grid step."""
+    tap = pl.program_id(2)
+
+    @pl.when(tap == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    band = x_ref[0]                              # [R+F, S_H, W, C] resident
+    q, s = tap // s_h, tap % s_h
+    rows = jax.lax.dynamic_slice(
+        band, (q, s, 0, 0), (R, 1, band.shape[2], band.shape[3]))[:, 0]
+    # horizontal shift-accumulate (Tables III/IV): K_W strided slices, each
+    # a depthwise dot over C on the MXU, accumulated output-stationary.
+    acc = acc_ref[...]
+    for kw in range(k_w):
+        xs = jax.lax.slice(rows, (0, kw, 0),
+                           (R, kw + (ow - 1) * s_w + 1, rows.shape[2]),
+                           (1, s_w, 1))          # [R, OW, C]
+        wk = jax.lax.dynamic_index_in_dim(k_ref[...], tap, 0,
+                                          keepdims=False)[kw]   # [C, bco]
+        acc = acc + jax.lax.dot_general(
+            xs, wk, (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    acc_ref[...] = acc
+
+    @pl.when(tap == k_h - 1)
+    def _done():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def kraken_conv2d_direct(x: jnp.ndarray, k: jnp.ndarray, *,
+                         stride: tuple[int, int] = (1, 1),
+                         padding: tuple[tuple[int, int], tuple[int, int]] = ((0, 0), (0, 0)),
+                         R: int = 7, bco: int | None = None,
+                         out_dtype=None,
+                         interpret: bool = False) -> jnp.ndarray:
+    """Direct Kraken-dataflow convolution.
+
+    x: [N, H, W, C_i] NHWC; k: [K_H, K_W, C_i, C_o] HWIO; returns NHWC.
+    ``R`` is the paper's row count (7 in the implemented config) — here the
+    number of output rows whose pixels are live per accumulator tile.
+    """
+    s_h, s_w = stride
+    k_h, k_w, c_i, c_o = k.shape
+    x = jnp.pad(x, ((0, 0), padding[0], padding[1], (0, 0)))
+    n, h, w, _ = x.shape
+    out_dtype = out_dtype or x.dtype
+
+    x_hat, L, oh = interleave_input(x, R=R, k_h=k_h, s_h=s_h)
+    f = shift_factor(k_h, s_h)
+    ow = (w - k_w) // s_w + 1
+
+    bco = bco or min(round_up(c_o, 128), 256)
+    co_p = round_up(c_o, bco)
+    k_pad = jnp.pad(k, ((0, 0), (0, 0), (0, 0), (0, co_p - c_o)))
+    t_co = co_p // bco
+    nl = x_hat.shape[0]
+
+    grid = (t_co, nl, k_h)  # tap innermost: output-stationary accumulation
+    kernel = functools.partial(_conv_kernel, R=R, k_h=k_h, k_w=k_w,
+                               s_h=s_h, s_w=s_w, ow=ow)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # the pixel-shifter band: constant in (t_co, tap) -> resident
+            pl.BlockSpec((1, R + f, s_h, w, c_i),
+                         lambda i_co, b, tap: (b, 0, 0, 0, 0)),
+            # the weights rotator: constant in (b, tap) -> resident+prefetch
+            pl.BlockSpec((k_h, k_w, c_i, bco),
+                         lambda i_co, b, tap: (0, 0, 0, i_co)),
+        ],
+        out_specs=pl.BlockSpec((1, R, ow, bco),
+                               lambda i_co, b, tap: (b, 0, 0, i_co)),
+        out_shape=jax.ShapeDtypeStruct((nl, R, ow, co_p), out_dtype),
+        scratch_shapes=[_vmem((R, ow, bco), jnp.float32, interpret)],
+        interpret=interpret,
+    )(x_hat, k_pad)
+
+    out = out.reshape(n, L * R, ow, co_p)[:, :oh, :, :c_o]
+    return out
+
+
+def _vmem(shape, dtype, interpret: bool):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,134 @@
+"""Jit-ready wrappers around the Pallas kernels.
+
+These are the public entry points the model code uses.  They
+
+* pick elastic tiles per shape (:func:`repro.core.elastic.choose_tiles`),
+* pad operands to tile multiples and slice the result back,
+* fall back to the pure-jnp reference on non-TPU backends unless
+  ``interpret=True`` is forced (Pallas TPU kernels do not lower on CPU; the
+  test-suite validates the kernels in interpret mode, and the dry-run uses
+  the reference path, whose HLO cost model is what the roofline reads).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import elastic
+from repro.kernels import ref
+from repro.kernels.kraken_gemm import kraken_gemm
+from repro.kernels.swa_attention import swa_attention as _swa_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jnp.ndarray, mult: tuple[int, ...]) -> jnp.ndarray:
+    pads = [(0, -d % m) for d, m in zip(x.shape, mult)]
+    if any(p[1] for p in pads):
+        return jnp.pad(x, pads)
+    return x
+
+
+def kraken_matmul(a: jnp.ndarray, b: jnp.ndarray, *,
+                  bias: jnp.ndarray | None = None,
+                  activation: str | None = None,
+                  out_dtype=None,
+                  use_pallas: bool | None = None,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """Uniform-dataflow matmul: [M, K] @ [K, N] (+bias, +activation).
+
+    The single compute primitive of the framework — conv, FC, attention
+    projections and MoE experts all route through here (DESIGN.md §2).
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas and not interpret:
+        return ref.matmul(a, b, bias=bias, activation=activation,
+                          out_dtype=out_dtype)
+    m, k = a.shape
+    _, n = b.shape
+    cfg = elastic.choose_tiles(m, k, n, in_bytes=a.dtype.itemsize)
+    ap = _pad_to(a, (cfg.bm, cfg.bk))
+    bp = _pad_to(b, (cfg.bk, cfg.bn))
+    bias_p = None
+    if bias is not None:
+        bias_p = _pad_to(bias.reshape(1, -1), (1, cfg.bn))
+    out = kraken_gemm(
+        ap, bp, bm=cfg.bm, bk=ap.shape[1] if cfg.schedule == "weight_stationary" else cfg.bk,
+        bn=cfg.bn, schedule=cfg.schedule, bias=bias_p, activation=activation,
+        out_dtype=out_dtype or a.dtype, interpret=bool(interpret))
+    return out[:m, :n]
+
+
+def kraken_conv2d(x: jnp.ndarray, k: jnp.ndarray, *,
+                  stride: tuple[int, int] = (1, 1),
+                  padding: tuple[tuple[int, int], tuple[int, int]] = ((0, 0), (0, 0)),
+                  out_dtype=None,
+                  use_pallas: bool | None = None,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """Convolution by the uniform lowering conv -> im2col -> kraken_matmul.
+
+    x: [N, H, W, C_i], k: [K_H, K_W, C_i, C_o].  This is the paper's
+    uniformity insight applied TPU-natively: the conv becomes a GEMM cell
+    instead of the GEMM becoming a degenerate conv.
+    """
+    n, h, w, c_i = x.shape
+    k_h, k_w, _, c_o = k.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (k_h, k_w), stride, padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    # patches: [N, OH, OW, C_i*K_H*K_W] with channel-major patch order.
+    oh, ow = patches.shape[1], patches.shape[2]
+    lhs = patches.reshape(n * oh * ow, c_i * k_h * k_w)
+    # Match the patch ordering: (C_i, K_H, K_W) -> rows of the weight matrix.
+    rhs = jnp.transpose(k, (2, 0, 1, 3)).reshape(c_i * k_h * k_w, c_o)
+    out = kraken_matmul(lhs, rhs, out_dtype=out_dtype,
+                        use_pallas=use_pallas, interpret=interpret)
+    return out.reshape(n, oh, ow, c_o)
+
+
+def swa_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  window: int, use_pallas: bool | None = None,
+                  interpret: bool | None = None,
+                  block_q: int = 128, block_kv: int = 128) -> jnp.ndarray:
+    """Sliding-window flash attention; q,k,v: [B, H(q/kv), S, D]."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas and not interpret:
+        # GQA: broadcast kv heads.
+        if k.shape[1] != q.shape[1]:
+            rep = q.shape[1] // k.shape[1]
+            k = jnp.repeat(k, rep, axis=1)
+            v = jnp.repeat(v, rep, axis=1)
+        return ref.sliding_window_attention(q, k, v, window=window)
+    return _swa_pallas(q, k, v, window=window, interpret=bool(interpret),
+                       block_q=block_q, block_kv=block_kv)
+
+
+def kraken_decode_attention(q, k, v, *, kv_pos, q_pos,
+                            k_scale=None, v_scale=None, window: int = 0,
+                            block_s: int = 512,
+                            use_pallas: bool | None = None,
+                            interpret: bool | None = None):
+    """One-token GQA attention over a (possibly int8) KV cache.
+
+    The serving-side uniform-dataflow kernel: int8 K/V are dequantized in
+    VMEM (fused into the flash-decode loop), so the HBM read is half-width
+    — the paper's Sec. II-D quantization applied to the decode memory
+    floor (§Perf cell 3).
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas and not interpret:
+        return ref.decode_attention(q, k, v, kv_pos=kv_pos, q_pos=q_pos,
+                                    k_scale=k_scale, v_scale=v_scale,
+                                    window=window)
+    from repro.kernels.decode_attention import decode_attention as _dec
+    return _dec(q, k, v, kv_pos=kv_pos, q_pos=q_pos, k_scale=k_scale,
+                v_scale=v_scale, window=window, block_s=block_s,
+                interpret=bool(interpret))

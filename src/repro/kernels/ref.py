@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray, *, bias: jnp.ndarray | None = None,
+           activation: str | None = None, out_dtype=None) -> jnp.ndarray:
+    """Oracle for kraken_gemm: fp32-accumulated matmul + optional epilogue."""
+    out = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation == "silu":
+        out = out * jnp.reciprocal(1.0 + jnp.exp(-out))
+    elif activation == "gelu":
+        out = 0.5 * out * (1.0 + jnp.tanh(0.7978845608028654 * (out + 0.044715 * out ** 3)))
+    elif activation is not None:
+        raise ValueError(activation)
+    return out.astype(out_dtype or a.dtype)
+
+
+def conv2d(x: jnp.ndarray, k: jnp.ndarray, *, stride: tuple[int, int] = (1, 1),
+           padding: tuple[tuple[int, int], tuple[int, int]] = ((0, 0), (0, 0)),
+           out_dtype=None) -> jnp.ndarray:
+    """Oracle for kraken_conv: NHWC x HWIO -> NHWC cross-correlation."""
+    import jax
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), k.astype(jnp.float32),
+        window_strides=stride, padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out.astype(out_dtype or x.dtype)
+
+
+def sliding_window_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                             *, window: int, causal: bool = True,
+                             scale: float | None = None) -> jnp.ndarray:
+    """Oracle for swa_attention.
+
+    q, k, v: [B, H, S, D] (same S).  Token i attends to j iff
+    ``i - window < j <= i`` (causal sliding window).
+    """
+    b, h, s, d = q.shape
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qi = jnp.arange(s)[:, None]
+    kj = jnp.arange(s)[None, :]
+    mask = (kj <= qi) if causal else jnp.ones((s, s), bool)
+    mask = mask & (kj > qi - window)
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jnp.exp(logits - logits.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention(q, k, v, *, kv_pos, q_pos, k_scale=None, v_scale=None,
+                     window: int = 0):
+    """Oracle for kernels/decode_attention.py: one-token GQA attention over
+    a (possibly int8-quantized) KV cache, exact fp32 math.
+
+    q: [B, H, D]; k/v: [B, KV, S, D]; scales: [B, KV, S] or None.
+    """
+    b, h, d = q.shape
+    kvh, s = k.shape[1], k.shape[2]
+    g = h // kvh
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if k_scale is not None:
+        kf = kf * k_scale[..., None]
+        vf = vf * v_scale[..., None]
+    qg = q.reshape(b, kvh, g, d).astype(jnp.float32)
+    logits = jnp.einsum("bkgd,bksd->bkgs", qg, kf) / np.sqrt(d)
+    mask = (kv_pos >= 0) & (kv_pos <= q_pos)
+    if window:
+        mask = mask & (kv_pos > q_pos - window)
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    out = jnp.einsum("bkgs,bksd->bkgd", p, vf)
+    return out.reshape(b, h, d).astype(q.dtype)

@@ -1,0 +1,134 @@
+"""Sliding-window (causal) flash attention as a Pallas TPU kernel.
+
+Used by the mixtral (all layers) and gemma3 (5-of-6 local layers)
+architectures.  The kernel embodies the same two Kraken principles as
+kraken_gemm:
+
+* output-stationary: the online-softmax state (m, l, acc) for one q tile
+  lives in VMEM scratch across all kv steps — partial attention sums never
+  leave the chip;
+* bounded data movement: for window ``W`` only ``ceil((W-1)/bkv) + 1`` kv
+  tiles are streamed per q tile, so HBM traffic is O(S*W) not O(S^2).
+
+GQA is handled in the BlockSpec index maps (kv head = q head // group), not
+by materializing repeated kv heads.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            window: int, scale: float, block_q: int, block_kv: int,
+            n_back: int, n_kv_steps: int, seq_len: int):
+    i_q = pl.program_id(1)
+    i_s = pl.program_id(2)
+
+    @pl.when(i_s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Recompute the (clamped) kv block index chosen by the index map.
+    raw = i_q * (block_q // block_kv) - n_back + i_s
+    max_blk = pl.cdiv(seq_len, block_kv) - 1
+    clamped = jnp.clip(raw, 0, max_blk)
+    step_valid = (raw >= 0) & (raw <= max_blk)
+
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    logits *= scale
+
+    q_pos = i_q * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+    k_pos = clamped * block_kv + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+    mask = (k_pos <= q_pos) & (k_pos > q_pos - window) & step_valid
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.max(logits, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+        p.astype(v_ref.dtype), v_ref[...], preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(i_s == n_kv_steps - 1)
+    def _done():
+        l = jnp.where(l_ref[...] == 0.0, 1.0, l_ref[...])
+        o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def swa_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  window: int, scale: float | None = None,
+                  block_q: int = 128, block_kv: int = 128,
+                  interpret: bool = False) -> jnp.ndarray:
+    """q: [B, H, S, D]; k, v: [B, H_kv, S, D] with H % H_kv == 0."""
+    b, h, s, d = q.shape
+    h_kv = k.shape[1]
+    assert h % h_kv == 0
+    group = h // h_kv
+    assert s % block_q == 0 and s % block_kv == 0, (s, block_q, block_kv)
+    assert block_q % block_kv == 0, "block_q must be a multiple of block_kv"
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+
+    n_back = pl.cdiv(max(window - 1, 0), block_kv)
+    # kv steps per q tile: the window tail plus the diagonal tiles.
+    n_kv_steps = n_back + block_q // block_kv
+    n_q = s // block_q
+    max_blk = s // block_kv - 1
+
+    def kv_idx(i_bh, i_q, i_s):
+        raw = i_q * (block_q // block_kv) - n_back + i_s
+        return jnp.clip(raw, 0, max_blk)
+
+    grid = (b * h, n_q, n_kv_steps)
+    kernel = functools.partial(
+        _kernel, window=window, scale=scale, block_q=block_q,
+        block_kv=block_kv, n_back=n_back, n_kv_steps=n_kv_steps, seq_len=s)
+
+    qr = q.reshape(b * h, s, d)
+    kr = k.reshape(b * h_kv, s, d)
+    vr = v.reshape(b * h_kv, s, d)
+
+    def kv_head(i_bh):
+        # (batch, q head) -> flattened kv head index
+        return (i_bh // h) * h_kv + (i_bh % h) // group
+
+    in_specs = [
+        pl.BlockSpec((1, block_q, d), lambda i_bh, i_q, i_s: (i_bh, i_q, 0)),
+        pl.BlockSpec((1, block_kv, d),
+                     lambda i_bh, i_q, i_s: (kv_head(i_bh), kv_idx(i_bh, i_q, i_s), 0)),
+        pl.BlockSpec((1, block_kv, d),
+                     lambda i_bh, i_q, i_s: (kv_head(i_bh), kv_idx(i_bh, i_q, i_s), 0)),
+    ]
+    out_spec = pl.BlockSpec((1, block_q, d), lambda i_bh, i_q, i_s: (i_bh, i_q, 0))
+
+    def kernel3d(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+        kernel(q_ref.at[0], k_ref.at[0], v_ref.at[0], o_ref.at[0],
+               m_ref, l_ref, acc_ref)
+
+    import jax.experimental.pallas.tpu as pltpu
+    out = pl.pallas_call(
+        kernel3d, grid=grid, in_specs=in_specs, out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, s, d)

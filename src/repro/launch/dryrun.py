@@ -1,0 +1,206 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver builds abstract, sharded specs (zero allocation),
+lowers the appropriate step (train_step for train cells, prefill_step /
+decode_step for serving cells), compiles it for the production mesh, prints
+``memory_analysis()`` (proves it fits) and ``cost_analysis()`` (FLOPs/bytes
+for the roofline), parses the collective schedule out of the optimized HLO,
+and appends a JSON record consumed by EXPERIMENTS.md and the roofline table.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod both]
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.jsonl
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCHS, SHAPES, get_arch, LONG_CONTEXT_OK,
+                           LONG_CONTEXT_SKIP_REASON)
+from repro.launch import steps as S
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding_rules import rules_for, zero1_param_rules
+from repro.models.model import Model, model_flops
+from repro.optim.adamw import AdamW
+from repro.roofline.analysis import from_compiled
+from repro.roofline import hlo_walk
+from repro import sharding as Sh
+
+# Per-arch microbatch counts for train_4k (activation memory control).
+TRAIN_MICROBATCHES = {
+    "mixtral-8x22b": 8,
+    "llama4-maverick-400b-a17b": 8,
+    "yi-9b": 4, "yi-6b": 4, "codeqwen1.5-7b": 4, "gemma3-12b": 4,
+    "musicgen-large": 2, "rwkv6-3b": 2, "zamba2-1.2b": 2,
+    "llama-3.2-vision-11b": 4,
+}
+
+
+def cell_applicable(arch_name: str, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and arch_name not in LONG_CONTEXT_OK:
+        return False, LONG_CONTEXT_SKIP_REASON[arch_name]
+    return True, ""
+
+
+def lower_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
+               rules_override: dict | None = None,
+               microbatches: int | None = None,
+               remat: str | None = None,
+               keep_hlo: bool = False) -> dict:
+    cfg = get_arch(arch_name)
+    cell = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    rules = rules_override or rules_for(cfg, cell, multi_pod=multi_pod)
+    model = Model(cfg)
+
+    t0 = time.time()
+    with Sh.use_mesh_and_rules(mesh, rules):
+        pspecs = S.sharded_param_specs(model, mesh, rules)
+        if cell.kind == "train":
+            opt = AdamW()
+            ospecs = S.sharded_opt_specs(model, opt, mesh, rules,
+                                         zero1_rules=zero1_param_rules(rules))
+            bspecs = S.batch_specs(cfg, cell, mesh, rules)
+            nmb = microbatches or TRAIN_MICROBATCHES.get(arch_name, 4)
+            step = S.make_train_step(model, opt, num_microbatches=nmb,
+                                     remat=remat or "full")
+            lowered = jax.jit(step).lower(pspecs, ospecs, bspecs)
+            tokens = cell.global_batch * cell.seq_len
+            mf = model_flops(cfg, tokens, "train")
+        elif cell.kind == "prefill":
+            cspecs = S.sharded_cache_specs(model, cell.global_batch,
+                                           cell.seq_len, mesh, rules)
+            bspecs = S.batch_specs(cfg, cell, mesh, rules)
+            bspecs.pop("labels")
+            step = S.make_prefill_step(model)
+            lowered = jax.jit(step).lower(pspecs, cspecs, bspecs)
+            tokens = cell.global_batch * cell.seq_len
+            mf = model_flops(cfg, tokens, "inference")
+        else:  # decode
+            # flat per-layer cache buffers (serving layout, §Perf cell 3)
+            cspecs = S.sharded_cache_specs(model, cell.global_batch,
+                                           cell.seq_len, mesh, rules,
+                                           flat=True)
+            tok = jax.ShapeDtypeStruct((cell.global_batch, 1), jnp.int32)
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            step = S.make_decode_step(model)
+            # Donate the caches: with unrolled decode layers XLA aliases the
+            # persistent KV buffers in place (vLLM-style), so each step's
+            # cache traffic is slot-sized, not cache-sized (§Perf cell 3).
+            jitted = jax.jit(step, donate_argnums=(1,))
+            if cfg.frontend == "image_patches":
+                fe = jax.ShapeDtypeStruct(
+                    (cell.global_batch, cfg.num_frontend_tokens, cfg.d_model),
+                    jnp.dtype(cfg.dtype))
+                lowered = jitted.lower(pspecs, cspecs, tok, pos, fe)
+            elif cfg.frontend == "audio_frames":
+                fe = jax.ShapeDtypeStruct(
+                    (cell.global_batch, 1, cfg.d_model), jnp.dtype(cfg.dtype))
+                lowered = jitted.lower(pspecs, cspecs, tok, pos, fe)
+            else:
+                lowered = jitted.lower(pspecs, cspecs, tok, pos)
+            tokens = cell.global_batch        # one new token per sequence
+            mf = model_flops(cfg, tokens, "inference")
+        t_lower = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    roof = from_compiled(compiled, chips, mf)
+    comps, entry = hlo_walk.parse_module(compiled.as_text())
+    colls = hlo_walk.walk(comps, entry)
+    rec = {
+        "arch": arch_name, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "status": "ok",
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_per_device_bytes": (mem.argument_size_in_bytes
+                                      + mem.temp_size_in_bytes),
+        },
+        "collectives": {"counts": colls.coll_counts,
+                        "operand_bytes_per_device": colls.coll_bytes},
+        "roofline": roof.as_dict(),
+        "dropped_shardings": [],
+    }
+    if keep_hlo:
+        rec["_hlo"] = compiled.as_text()
+    return rec
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--multi-pod", choices=["on", "off", "both"], default="off")
+    p.add_argument("--out", default=None, help="append JSONL records here")
+    p.add_argument("--microbatches", type=int, default=None)
+    p.add_argument("--remat", default=None)
+    args = p.parse_args(argv)
+
+    cells: list[tuple[str, str]] = []
+    archs = list(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    for a in archs:
+        for s in shapes:
+            cells.append((a, s))
+
+    pods = {"on": [True], "off": [False], "both": [False, True]}[args.multi_pod]
+    out_f = open(args.out, "a") if args.out else None
+    failures = 0
+    for arch_name, shape_name in cells:
+        ok, reason = cell_applicable(arch_name, shape_name)
+        for mp in pods:
+            tag = f"{arch_name} x {shape_name} x {'2x16x16' if mp else '16x16'}"
+            if not ok:
+                rec = {"arch": arch_name, "shape": shape_name,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "status": "skip", "reason": reason}
+                print(f"SKIP  {tag}: {reason}")
+            else:
+                try:
+                    rec = lower_cell(arch_name, shape_name, multi_pod=mp,
+                                     microbatches=args.microbatches,
+                                     remat=args.remat)
+                    m = rec["memory"]
+                    r = rec["roofline"]
+                    print(f"OK    {tag}: compile {rec['compile_s']}s  "
+                          f"args/dev {m['argument_bytes']/2**30:.2f}GiB  "
+                          f"temp/dev {m['temp_bytes']/2**30:.2f}GiB  "
+                          f"bottleneck {r['bottleneck']}  "
+                          f"roofline_frac {r['roofline_fraction']:.3f}")
+                except Exception as e:  # noqa: BLE001
+                    failures += 1
+                    rec = {"arch": arch_name, "shape": shape_name,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "fail", "error": f"{type(e).__name__}: {e}"}
+                    print(f"FAIL  {tag}: {type(e).__name__}: {e}")
+                    traceback.print_exc()
+            if out_f:
+                out_f.write(json.dumps(rec) + "\n")
+                out_f.flush()
+    if out_f:
+        out_f.close()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,148 @@
+"""Step builders (train / prefill / decode) + abstract input specs.
+
+Everything here is AOT-friendly: specs are ``ShapeDtypeStruct`` trees with
+``NamedSharding`` attached, so ``jax.jit(step).lower(*specs)`` builds the
+full multi-pod program with zero allocation — the dry-run contract.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as Sh
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.models.model import Model
+from repro.optim.adamw import AdamW
+
+
+def _tree_zeros_f32(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def make_train_step(model: Model, optimizer: AdamW, *,
+                    num_microbatches: int = 1, remat: str = "full"):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def loss_fn(params, mb):
+        return model.loss(params, mb, remat=remat)
+
+    def train_step(params, opt_state, batch):
+        if num_microbatches == 1:
+            (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            n = num_microbatches
+
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(n, b // n, *x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+
+            def micro(carry, mb):
+                acc = carry
+                (l, a), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                acc = jax.tree.map(
+                    lambda s, gg: s + gg.astype(jnp.float32), acc, g)
+                return acc, (l, a["ce"])
+
+            grads, (losses, ces) = jax.lax.scan(
+                micro, _tree_zeros_f32(params), mbs)
+            grads = jax.tree.map(lambda g: g / n, grads)
+            loss = jnp.mean(losses)
+            aux = {"ce": jnp.mean(ces), "aux": jnp.zeros(())}
+        new_params, new_opt, om = optimizer.update(grads, opt_state, params)
+        return new_params, new_opt, {"loss": loss, **aux, **om}
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, caches, batch):
+        return model.prefill(params, batch, caches)
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, caches, tokens, pos, frontend=None):
+        return model.decode_step(params, caches, tokens, pos,
+                                 frontend=frontend)
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract specs with shardings
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype, axes, mesh, rules):
+    with Sh.use_mesh_and_rules(mesh, rules):
+        ns = Sh.logical_to_sharding(shape, axes)
+    if ns is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=ns)
+
+
+def batch_specs(cfg: ArchConfig, cell: ShapeCell, mesh, rules) -> dict:
+    b, s = cell.global_batch, cell.seq_len
+    d = {
+        "tokens": _sds((b, s), jnp.int32, ("batch", "seq"), mesh, rules),
+        "labels": _sds((b, s), jnp.int32, ("batch", "seq"), mesh, rules),
+    }
+    if cfg.frontend == "image_patches":
+        d["frontend"] = _sds((b, cfg.num_frontend_tokens, cfg.d_model),
+                             jnp.dtype(cfg.dtype),
+                             ("batch", "frontend_seq", "embed"), mesh, rules)
+    elif cfg.frontend == "audio_frames":
+        d["frontend"] = _sds((b, s, cfg.d_model), jnp.dtype(cfg.dtype),
+                             ("batch", "seq", "embed"), mesh, rules)
+    return d
+
+
+def sharded_param_specs(model: Model, mesh, rules):
+    specs = model.param_specs()
+    shardings = model.param_shardings(mesh, rules)
+    return jax.tree.map(
+        lambda s, ns: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=ns)
+        if ns is not None else s, specs, shardings,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def sharded_opt_specs(model: Model, optimizer: AdamW, mesh, rules,
+                      zero1_rules: dict | None = None):
+    pspecs = sharded_param_specs(model, mesh, zero1_rules or rules)
+    st = optimizer.state_specs(model.param_specs())
+    # moments inherit the (ZeRO-1) param shardings
+    mspecs = jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                          sharding=getattr(p, "sharding", None))
+        if getattr(p, "sharding", None) is not None else s,
+        st.m, pspecs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    vspecs = jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                          sharding=getattr(p, "sharding", None))
+        if getattr(p, "sharding", None) is not None else s,
+        st.v, pspecs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return type(st)(step=st.step, m=mspecs, v=vspecs)
+
+
+def sharded_cache_specs(model: Model, batch: int, cache_len: int, mesh, rules,
+                        *, flat: bool = False):
+    specs = model.cache_specs(batch, cache_len, flat=flat)
+    axes = model.cache_axes_list(batch, cache_len, flat=flat)
+
+    def place(s, ax):
+        with Sh.use_mesh_and_rules(mesh, rules):
+            ns = Sh.logical_to_sharding(s.shape, ax)
+        if ns is None:
+            return s
+        return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=ns)
+
+    flat_s = jax.tree.leaves(specs)
+    assert len(flat_s) == len(axes), (len(flat_s), len(axes))
+    placed = [place(s, a) for s, a in zip(flat_s, axes)]
+    return jax.tree.unflatten(jax.tree.structure(specs), placed)

@@ -1,0 +1,128 @@
+"""Training launcher: supervised, checkpointed, restartable.
+
+Runs on whatever devices exist (1 CPU for local runs; the production mesh on
+real pods).  Demonstrates the full fault-tolerance story end-to-end:
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \
+        --steps 20 --ckpt-dir /tmp/ckpt
+
+* supervisor restarts from the last atomic checkpoint on any step failure
+  (``--inject-failure-at N`` exercises this),
+* async checkpointing off the training thread,
+* heartbeat + straggler watchdog,
+* data pipeline replays deterministically to the restored step.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sharding as Sh
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs import get_arch, smoke_config
+from repro.data.pipeline import PipelineState, SyntheticLM
+from repro.launch import steps as S
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import Model
+from repro.optim.adamw import AdamW, cosine_schedule
+from repro.runtime.fault_tolerance import (Heartbeat, StragglerDetector,
+                                           Supervisor)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="yi-6b")
+    p.add_argument("--smoke", action="store_true",
+                   help="reduced config (CPU-sized)")
+    p.add_argument("--steps", type=int, default=100)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=128)
+    p.add_argument("--lr", type=float, default=3e-4)
+    p.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    p.add_argument("--ckpt-every", type=int, default=25)
+    p.add_argument("--microbatches", type=int, default=1)
+    p.add_argument("--remat", default="none")
+    p.add_argument("--inject-failure-at", type=int, default=-1)
+    p.add_argument("--data-model", type=int, nargs=2, default=(1, 1),
+                   help="mesh (data, model) over local devices")
+    p.add_argument("--log-every", type=int, default=10)
+    args = p.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+    model = Model(cfg)
+    opt = AdamW(lr=cosine_schedule(args.lr, warmup=20, total=args.steps))
+    pipe = SyntheticLM(cfg.vocab_size, args.seq, args.batch)
+
+    dm, tm = args.data_model
+    mesh = make_host_mesh(dm, tm) if dm * tm > 1 else None
+    rules = Sh.RULES_SINGLE_POD if mesh else None
+
+    step_fn_inner = S.make_train_step(model, opt,
+                                      num_microbatches=args.microbatches,
+                                      remat=args.remat)
+    jit_step = jax.jit(step_fn_inner, donate_argnums=(0, 1))
+
+    hb = Heartbeat(os.path.join(args.ckpt_dir, "heartbeat.json"), interval_s=5)
+    straggler = StragglerDetector()
+    writer = ckpt.AsyncCheckpointer(args.ckpt_dir, keep=3)
+    injected = {"done": False}
+
+    def make_state():
+        params = model.init(jax.random.key(0))
+        return {"params": params, "opt": opt.init(params),
+                "pipe": PipelineState(0)}
+
+    def run_one(state, step):
+        if step == args.inject_failure_at and not injected["done"]:
+            injected["done"] = True
+            raise RuntimeError("injected failure (test)")
+        batch_np, pstate = pipe(state["pipe"])
+        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        with Sh.use_mesh_and_rules(mesh, rules):
+            params, ostate, metrics = jit_step(state["params"], state["opt"], batch)
+        if step % args.log_every == 0:
+            print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                  f"ce {float(metrics['ce']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f}")
+        return {"params": params, "opt": ostate, "pipe": pstate}
+
+    def save_state(step, state):
+        writer.save(step, {"params": state["params"], "opt": state["opt"]},
+                    extra={"pipe_step": state["pipe"].step})
+
+    def restore_state():
+        last = ckpt.latest_step(args.ckpt_dir)
+        if last is None:
+            return None
+        specs = {"params": model.param_specs(),
+                 "opt": opt.state_specs(model.param_specs())}
+        tree, step, extra = ckpt.restore(args.ckpt_dir, specs)
+        tree = jax.tree.map(jnp.asarray, tree)
+        print(f"[restore] resumed from step {step}")
+        return ({"params": tree["params"], "opt": tree["opt"],
+                 "pipe": PipelineState(extra["pipe_step"])}, step)
+
+    sup = Supervisor(make_state=make_state, step_fn=run_one,
+                     save_state=save_state, restore_state=restore_state,
+                     checkpoint_every=args.ckpt_every, heartbeat=hb,
+                     straggler=straggler)
+    t0 = time.time()
+    report = sup.run(args.steps)
+    writer.wait()
+    dt = time.time() - t0
+    print(f"done: {report.steps_done} steps in {dt:.1f}s "
+          f"({report.restarts} restarts, {report.straggler_steps} straggler steps)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,207 @@
+"""Model: the public API over configs — init/specs, train loss, prefill, decode.
+
+Input conventions (``batch`` dict):
+
+* ``tokens``  [B, S] int32 — always present (for frontend archs these are
+  the target-stream tokens used for embedding/teacher-forcing),
+* ``frontend`` [B, P, d_model] — precomputed patch/frame embeddings for
+  [vlm]/[audio] archs (the modality frontend is a stub per the assignment;
+  for [audio] the frame embeddings are *added* to the token embeddings, for
+  [vlm] they feed the cross-attention layers),
+* ``positions`` optional [S] int32.
+
+All ``*_specs`` methods build ``jax.ShapeDtypeStruct`` trees only — nothing
+is allocated, which is what the multi-pod dry-run lowers against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sharding
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.layers import Spec
+from repro.models.transformer import Ctx, LayerStack
+
+Params = dict
+
+
+def _dtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.stack = LayerStack(cfg)
+
+    # ------------------------------------------------------------------ specs
+    def _spec_tree(self) -> dict[str, Any]:
+        cfg = self.cfg
+        tree = {
+            "embed": Spec((cfg.vocab_size, cfg.d_model), ("vocab", "embed")),
+            "final_norm": None,  # filled below
+            "stack": self.stack.param_specs_dict(),
+        }
+        tree.update({k: v for k, v in L.norm_specs(cfg, "final_norm").items()})
+        del tree["final_norm"]
+        if not cfg.tie_embeddings:
+            tree["unembed"] = Spec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+        return tree
+
+    def param_specs(self):
+        dt = _dtype(self.cfg)
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, dt),
+            self._spec_tree(), is_leaf=lambda x: isinstance(x, Spec))
+
+    def param_axes(self):
+        return jax.tree.map(lambda s: s.axes, self._spec_tree(),
+                            is_leaf=lambda x: isinstance(x, Spec))
+
+    def param_shardings(self, mesh, rules):
+        """NamedSharding tree for params under (mesh, rules)."""
+        with sharding.use_mesh_and_rules(mesh, rules):
+            return jax.tree.map(
+                lambda s: sharding.logical_to_sharding(s.shape, s.axes),
+                self._spec_tree(), is_leaf=lambda x: isinstance(x, Spec))
+
+    def init(self, key) -> Params:
+        dt = _dtype(self.cfg)
+        flat, treedef = jax.tree.flatten(
+            self._spec_tree(), is_leaf=lambda x: isinstance(x, Spec))
+        keys = jax.random.split(key, len(flat))
+        leaves = [L.init_param(k, s, dt) for k, s in zip(keys, flat)]
+        return jax.tree.unflatten(treedef, leaves)
+
+    # ------------------------------------------------------------------ embed
+    def _embed(self, params: Params, tokens: jax.Array,
+               positions: jax.Array, frontend: jax.Array | None) -> jax.Array:
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if cfg.positional == "sinusoidal":
+            pos = L.sinusoidal_pos_emb(positions, cfg.d_model)
+            x = x + pos[None].astype(x.dtype)
+        if cfg.frontend == "audio_frames" and frontend is not None:
+            x = x + frontend.astype(x.dtype)
+        return sharding.shard(x, "batch", "seq", "embed")
+
+    def _unembed(self, params: Params, x: jax.Array) -> jax.Array:
+        w = (params["embed"].T if self.cfg.tie_embeddings
+             else params["unembed"])
+        logits = L.dense(x, w)
+        return sharding.shard(logits, "batch", "seq", "vocab")
+
+    # ------------------------------------------------------------------ forward
+    def forward(self, params: Params, batch: dict, *, mode: str = "train",
+                caches=None, remat: str = "none"):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        positions = batch.get("positions")
+        if positions is None:
+            positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+        frontend = batch.get("frontend")
+        x = self._embed(params, tokens, positions, frontend)
+        ctx = Ctx(mode=mode, positions=positions, frontend=frontend,
+                  shared_params=params["stack"].get("shared"))
+        x, new_caches, aux = self.stack.apply(params["stack"], x, ctx,
+                                              caches=caches, remat=remat,
+                                              unroll=self._unroll_decode(mode))
+        x = L.apply_norm(cfg, params, "final_norm", x)
+        logits = self._unembed(params, x)
+        return logits, new_caches, aux
+
+    def _unroll_decode(self, mode: str) -> bool:
+        """Unrolled decode (flat in-place caches, §Perf cell 3) for models
+        whose TP weight shard fits comfortably; the 100B+ archs keep the
+        scanned stack — unrolling lets XLA's scheduler hoist every layer's
+        FSDP weight gather and the peak temp balloons ~9x (38.7 vs 4.2 GiB
+        for mixtral decode), which no longer fits a 16 GB v5e.  Same
+        threshold as the size-aware serving weight sharding rule."""
+        if mode != "decode":
+            return False
+        if not hasattr(self, "_tp_shard_bytes"):
+            self._tp_shard_bytes = self.cfg.param_count() * 2 / 16
+        return self._tp_shard_bytes <= 8e9
+
+    # ------------------------------------------------------------------ train
+    def loss(self, params: Params, batch: dict, *, remat: str = "none"):
+        logits, _, aux = self.forward(params, batch, mode="train", remat=remat)
+        labels = batch["labels"]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        mask = batch.get("mask")
+        if mask is None:
+            mask = jnp.ones_like(nll)
+        ce = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        total = ce + 0.01 * aux
+        return total, {"ce": ce, "aux": aux}
+
+    # ------------------------------------------------------------------ serve
+    def cache_len_for(self, seq_len: int) -> int:
+        return seq_len
+
+    def init_caches(self, batch: int, cache_len: int, *, flat: bool = False):
+        return self.stack.cache_tree(
+            batch, cache_len, _dtype(self.cfg), abstract=False,
+            n_frontend=self.cfg.num_frontend_tokens, flat=flat)
+
+    def cache_specs(self, batch: int, cache_len: int, *, flat: bool = False):
+        return self.stack.cache_tree(
+            batch, cache_len, _dtype(self.cfg), abstract=True,
+            n_frontend=self.cfg.num_frontend_tokens, flat=flat)
+
+    def cache_axes_list(self, batch: int = 1, cache_len: int = 2, *,
+                        flat: bool = False) -> list:
+        """Logical axes aligned with jax.tree.leaves(cache_specs(...))."""
+        specs = self.cache_specs(batch, cache_len, flat=flat)
+
+        def axes_for(path, leaf):
+            names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+            rank = len(leaf.shape)
+            if "pos" in names:
+                return (("kv_seq",) if flat
+                        else ("layers", "kv_seq"))[-rank:]
+            if rank >= (3 if flat else 4) and ("k" in names or "v" in names):
+                kv = ("batch", "kv_heads", "kv_seq", "head_dim")
+                return (kv if flat else ("layers",) + kv)[-rank:]
+            # ssm states / conv windows / x_prev: replicate all but batch
+            base = ((["batch"] + [None] * (rank - 1)) if flat
+                    else (["layers", "batch"] + [None] * (rank - 2)))
+            return tuple(base[-rank:])
+
+        flat_leaves = jax.tree_util.tree_flatten_with_path(specs)[0]
+        return [axes_for(p, l) for p, l in flat_leaves]
+
+    def prefill(self, params: Params, batch: dict, caches):
+        logits, caches, _ = self.forward(params, batch, mode="prefill",
+                                         caches=caches)
+        return logits[:, -1:], caches
+
+    def decode_step(self, params: Params, caches, tokens: jax.Array,
+                    pos: jax.Array, frontend: jax.Array | None = None):
+        """tokens [B, 1]; pos scalar int32 (absolute position)."""
+        batch = {"tokens": tokens,
+                 "positions": jnp.reshape(pos, (1,)).astype(jnp.int32),
+                 "frontend": frontend}
+        logits, caches, _ = self.forward(params, batch, mode="decode",
+                                         caches=caches)
+        return logits[:, -1], caches
+
+
+# ---------------------------------------------------------------------------
+# FLOPs model (roofline MODEL_FLOPS = 6*N*D for train, 2*N*D for inference)
+# ---------------------------------------------------------------------------
+
+def model_flops(cfg: ArchConfig, tokens: int, kind: str) -> float:
+    n_active = cfg.active_param_count()
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active * tokens

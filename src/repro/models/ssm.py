@@ -1,0 +1,373 @@
+"""Attention-free sequence mixers: RWKV6 (Finch) and Mamba2 (SSD).
+
+Both carry O(1) recurrent state, which is what makes the ``long_500k``
+decode cell tractable (DESIGN.md §5).  Projections route through the
+uniform-GEMM ``dense``; the recurrences themselves are scans, the one
+compute pattern the paper's GEMM dataflow does not cover (noted as the
+inapplicability in DESIGN.md §5).
+
+Train/prefill use a *chunked* evaluation: the sequence is split into chunks,
+within-chunk terms are computed in parallel (quadratic in the small chunk),
+and an exact state is passed between chunks via ``lax.scan`` — the standard
+SSD/linear-attention chunking, validated against a per-token reference scan
+in the tests.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.models.layers import Spec, dense
+
+Params = dict
+CHUNK = 128
+
+
+# ===========================================================================
+# RWKV6 (Finch): data-dependent decay, per-head 2D state [D_head, D_head].
+# ===========================================================================
+
+def rwkv_specs(cfg, prefix: str = "rwkv") -> dict[str, Spec]:
+    d = cfg.d_model
+    lora = max(32, d // 16)
+    return {
+        f"{prefix}_mix_r": Spec((d,), ("embed",), 0.0),
+        f"{prefix}_mix_k": Spec((d,), ("embed",), 0.0),
+        f"{prefix}_mix_v": Spec((d,), ("embed",), 0.0),
+        f"{prefix}_mix_w": Spec((d,), ("embed",), 0.0),
+        f"{prefix}_wr": Spec((d, d), ("embed", "qkv")),
+        f"{prefix}_wk": Spec((d, d), ("embed", "qkv")),
+        f"{prefix}_wv": Spec((d, d), ("embed", "qkv")),
+        f"{prefix}_wg": Spec((d, d), ("embed", "qkv")),
+        f"{prefix}_wo": Spec((d, d), ("qkv", "embed")),
+        # data-dependent decay LoRA: w_t = exp(-exp(w0 + tanh(x A) B))
+        f"{prefix}_w0": Spec((d,), ("embed",), 0.0),
+        f"{prefix}_wa": Spec((d, lora), ("embed", None)),
+        f"{prefix}_wb": Spec((lora, d), (None, "embed")),
+        f"{prefix}_bonus": Spec((d,), ("embed",), 0.0),  # u
+        f"{prefix}_ln_gamma": Spec((d,), ("embed",), -1.0),
+    }
+
+
+class RwkvState(NamedTuple):
+    s: jax.Array        # [B, H, Dh, Dh] state (k outer v)
+    x_prev: jax.Array   # [B, d] last token (for token-shift)
+
+
+def rwkv_state_init(cfg, batch: int, dtype) -> RwkvState:
+    h = cfg.ssm_heads or (cfg.d_model // 64)
+    dh = cfg.d_model // h
+    return RwkvState(s=jnp.zeros((batch, h, dh, dh), jnp.float32),
+                     x_prev=jnp.zeros((batch, cfg.d_model), dtype))
+
+
+def rwkv_state_specs(cfg, batch: int, dtype) -> RwkvState:
+    h = cfg.ssm_heads or (cfg.d_model // 64)
+    dh = cfg.d_model // h
+    return RwkvState(
+        s=jax.ShapeDtypeStruct((batch, h, dh, dh), jnp.float32),
+        x_prev=jax.ShapeDtypeStruct((batch, cfg.d_model), dtype))
+
+
+def _rwkv_project(cfg, params: Params, prefix: str, x: jax.Array,
+                  x_shift: jax.Array):
+    """Token-shift mixes + projections.  x, x_shift: [B, S, d]."""
+    def mix(name):
+        m = params[f"{prefix}_mix_{name}"]
+        return x + (x_shift - x) * m
+    r = dense(mix("r"), params[f"{prefix}_wr"])
+    k = dense(mix("k"), params[f"{prefix}_wk"])
+    v = dense(mix("v"), params[f"{prefix}_wv"])
+    g = jax.nn.silu(dense(x, params[f"{prefix}_wg"]))
+    w = jnp.exp(-jnp.exp(
+        params[f"{prefix}_w0"].astype(jnp.float32)
+        + jnp.tanh(dense(mix("w"), params[f"{prefix}_wa"]).astype(jnp.float32))
+        @ params[f"{prefix}_wb"].astype(jnp.float32)))   # [B,S,d] in (0,1)
+    return r, k, v, g, w
+
+
+def _heads(x, h):
+    b, s, d = x.shape
+    return x.reshape(b, s, h, d // h)
+
+
+def rwkv_mix(cfg, params: Params, prefix: str, x: jax.Array,
+             state: RwkvState | None = None):
+    """RWKV6 time-mixing over a full sequence (train/prefill).
+
+    Per head h, per step t:  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+                             y_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+    Chunked evaluation with exact inter-chunk state.
+    Returns (y, new_state).
+    """
+    b, s, d = x.shape
+    h = cfg.ssm_heads or (d // 64)
+    dh = d // h
+    if state is None:
+        state = rwkv_state_init(cfg, b, x.dtype)
+    x_shift = jnp.concatenate(
+        [state.x_prev[:, None, :], x[:, :-1, :]], axis=1)
+    r, k, v, g, w = _rwkv_project(cfg, params, prefix, x, x_shift)
+    u = params[f"{prefix}_bonus"].astype(jnp.float32)
+
+    rh = _heads(r, h).astype(jnp.float32)
+    kh = _heads(k, h).astype(jnp.float32)
+    vh = _heads(v, h).astype(jnp.float32)
+    wh = _heads(w, h)                      # decay in (0,1), [B,S,H,Dh]
+    uh = u.reshape(h, dh)
+
+    pad = -s % CHUNK
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        rh, kh, vh = z(rh), z(kh), z(vh)
+        wh = jnp.pad(wh, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    sc = rh.shape[1] // CHUNK
+    resh = lambda a: a.reshape(b, sc, CHUNK, h, dh).transpose(1, 0, 3, 2, 4)
+    rc, kc, vc, wc = resh(rh), resh(kh), resh(vh), resh(wh)  # [NC,B,H,C,Dh]
+
+    # log-decay cumulative products within a chunk.
+    logw = jnp.log(jnp.clip(wc, 1e-12, 1.0))
+    cum = jnp.cumsum(logw, axis=3)                      # inclusive: prod w_1..t
+
+    def chunk_step(s_in, inp):
+        rcx, kcx, vcx, logwx, cumx = inp                # [B,H,C,Dh]
+        # intra-chunk: y_t += r_t . sum_{j<t} (prod_{j<i<=t-1?} ...) k_j v_j
+        # decay from j (exclusive) to t-1 (inclusive): cum_{t-1} - cum_j
+        cum_prev = cumx - logwx                          # prod w_1..t-1
+        # A[t, j] term per dh: r_t * exp(cum_prev_t - cum_j) * k_j
+        att = jnp.einsum("bhtd,bhjd->bhtj",
+                         rcx * jnp.exp(cum_prev),
+                         kcx * jnp.exp(-cumx))
+        mask = jnp.tril(jnp.ones((CHUNK, CHUNK)), -1)
+        att = att * mask
+        # bonus diagonal: r_t . (u * k_t) v_t
+        diag = jnp.einsum("bhtd,bhtd->bht", rcx, kcx * uh[None, :, None, :])
+        y = jnp.einsum("bhtj,bhjd->bhtd", att, vcx)
+        y += diag[..., None] * vcx
+        # inter-chunk: r_t decayed from state
+        y += jnp.einsum("bhtd,bhde->bhte", rcx * jnp.exp(cum_prev), s_in)
+        # state update: S' = diag(prod w) S + sum_j (prod_{j<i<=C} w) k_j v_j
+        total = cumx[:, :, -1:, :]                       # [B,H,1,Dh]
+        s_out = jnp.exp(total.squeeze(2))[..., None] * s_in
+        s_out += jnp.einsum("bhjd,bhje->bhde",
+                            kcx * jnp.exp(total - cumx), vcx)
+        return s_out, y
+
+    s_final, ys = jax.lax.scan(chunk_step, state.s,
+                               (rc, kc, vc, logw, cum))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, sc * CHUNK, h, dh)[:, :s]
+    y = y.reshape(b, s, d)
+    # group norm over heads, then gate + output projection.
+    yn = y.reshape(b, s, h, dh)
+    mu = yn.mean(-1, keepdims=True)
+    var = yn.var(-1, keepdims=True)
+    yn = (yn - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = (yn.reshape(b, s, d) * params[f"{prefix}_ln_gamma"]).astype(x.dtype)
+    out = dense(y * g, params[f"{prefix}_wo"])
+    new_state = RwkvState(s=s_final, x_prev=x[:, -1, :])
+    return out, new_state
+
+
+def rwkv_step(cfg, params: Params, prefix: str, x: jax.Array,
+              state: RwkvState):
+    """Single-token decode: x [B, 1, d]."""
+    b, _, d = x.shape
+    h = cfg.ssm_heads or (d // 64)
+    dh = d // h
+    x_shift = state.x_prev[:, None, :]
+    r, k, v, g, w = _rwkv_project(cfg, params, prefix, x, x_shift)
+    rh = _heads(r, h)[:, 0].astype(jnp.float32)   # [B,H,Dh]
+    kh = _heads(k, h)[:, 0].astype(jnp.float32)
+    vh = _heads(v, h)[:, 0].astype(jnp.float32)
+    wh = _heads(w, h)[:, 0]
+    uh = params[f"{prefix}_bonus"].astype(jnp.float32).reshape(h, dh)
+    kv = jnp.einsum("bhd,bhe->bhde", kh, vh)
+    y = jnp.einsum("bhd,bhde->bhe", rh, state.s + uh[None, :, :, None] * kv)
+    s_new = wh[..., None] * state.s + kv
+    mu = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    yn = (y - mu) * jax.lax.rsqrt(var + 64e-5)
+    yflat = (yn.reshape(b, 1, d) * params[f"{prefix}_ln_gamma"]).astype(x.dtype)
+    out = dense(yflat * g, params[f"{prefix}_wo"])
+    return out, RwkvState(s=s_new, x_prev=x[:, -1, :])
+
+
+def rwkv_channel_specs(cfg, prefix: str = "cmix") -> dict[str, Spec]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        f"{prefix}_mix_k": Spec((d,), ("embed",), 0.0),
+        f"{prefix}_mix_r": Spec((d,), ("embed",), 0.0),
+        f"{prefix}_wk": Spec((d, f), ("embed", "mlp")),
+        f"{prefix}_wv": Spec((f, d), ("mlp", "embed")),
+        f"{prefix}_wr": Spec((d, d), ("embed", "embed")),
+    }
+
+
+def rwkv_channel_mix(cfg, params: Params, prefix: str, x: jax.Array,
+                     x_prev: jax.Array):
+    """RWKV channel mixing (the FFN); x_prev [B, d] for token shift."""
+    xs = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+    mk = x + (xs - x) * params[f"{prefix}_mix_k"]
+    mr = x + (xs - x) * params[f"{prefix}_mix_r"]
+    k = dense(mk, params[f"{prefix}_wk"], activation="relu") ** 2
+    k = sharding.shard(k, "batch", "seq", "mlp")
+    r = jax.nn.sigmoid(dense(mr, params[f"{prefix}_wr"]))
+    return r * dense(k, params[f"{prefix}_wv"]), x[:, -1, :]
+
+
+# ===========================================================================
+# Mamba2 (SSD): scalar-per-head decay, state [H, Dh, N].
+# ===========================================================================
+
+def mamba_specs(cfg, prefix: str = "mamba") -> dict[str, Spec]:
+    d = cfg.d_model
+    h = cfg.ssm_heads or (2 * d // 64)
+    dh = 2 * d // h      # expand factor 2
+    n = cfg.ssm_state
+    din = 2 * d          # inner dim
+    conv_dim = din + 2 * n * 1  # x + B + C streams (single group)
+    return {
+        f"{prefix}_in_proj": Spec((d, 2 * din + 2 * n + h), ("embed", "mlp")),
+        f"{prefix}_conv_w": Spec((cfg.conv_kernel, conv_dim), ("conv_k", "mlp",), 1.0),
+        f"{prefix}_conv_b": Spec((conv_dim,), ("mlp",), 0.0),
+        f"{prefix}_a_log": Spec((h,), (None,), 0.0),
+        f"{prefix}_dt_bias": Spec((h,), (None,), 0.0),
+        f"{prefix}_d_skip": Spec((h,), (None,), -1.0),
+        f"{prefix}_norm_gamma": Spec((din,), ("mlp",), -1.0),
+        f"{prefix}_out_proj": Spec((din, d), ("mlp", "embed")),
+    }
+
+
+class MambaState(NamedTuple):
+    ssm: jax.Array       # [B, H, Dh, N] fp32
+    conv: jax.Array      # [B, K-1, conv_dim] rolling conv input window
+
+
+def mamba_state_init(cfg, batch: int, dtype) -> MambaState:
+    d = cfg.d_model
+    h = cfg.ssm_heads or (2 * d // 64)
+    dh = 2 * d // h
+    n = cfg.ssm_state
+    conv_dim = 2 * d + 2 * n
+    return MambaState(
+        ssm=jnp.zeros((batch, h, dh, n), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), dtype))
+
+
+def mamba_state_specs(cfg, batch: int, dtype) -> MambaState:
+    d = cfg.d_model
+    h = cfg.ssm_heads or (2 * d // 64)
+    dh = 2 * d // h
+    n = cfg.ssm_state
+    conv_dim = 2 * d + 2 * n
+    return MambaState(
+        ssm=jax.ShapeDtypeStruct((batch, h, dh, n), jnp.float32),
+        conv=jax.ShapeDtypeStruct((batch, cfg.conv_kernel - 1, conv_dim), dtype))
+
+
+def _mamba_project(cfg, params, prefix, x, conv_state):
+    """Shared front: in_proj -> causal conv1d -> (z, xs, B, C, dt)."""
+    b, s, d = x.shape
+    h = cfg.ssm_heads or (2 * d // 64)
+    din = 2 * d
+    n = cfg.ssm_state
+    zxbcdt = dense(x, params[f"{prefix}_in_proj"])
+    z, xbc, dt = jnp.split(zxbcdt, [din, din + din + 2 * n], axis=-1)
+    # causal depthwise conv over seq with rolling state.
+    kk = cfg.conv_kernel
+    full = jnp.concatenate([conv_state, xbc], axis=1)       # [B, K-1+S, cd]
+    new_conv = full[:, -(kk - 1):, :] if kk > 1 else conv_state
+    wins = jnp.stack([full[:, i:i + s, :] for i in range(kk)], axis=2)
+    xbc = jnp.einsum("bskc,kc->bsc", wins, params[f"{prefix}_conv_w"])
+    xbc = jax.nn.silu(xbc + params[f"{prefix}_conv_b"])
+    xs, bmat, cmat = jnp.split(xbc, [din, din + n], axis=-1)
+    dt = jax.nn.softplus(dt + params[f"{prefix}_dt_bias"])   # [B,S,H]
+    return z, xs, bmat, cmat, dt, new_conv, h, din, n
+
+
+def mamba_mix(cfg, params: Params, prefix: str, x: jax.Array,
+              state: MambaState | None = None):
+    """Mamba2 block over a sequence, chunked SSD evaluation."""
+    b, s, d = x.shape
+    if state is None:
+        state = mamba_state_init(cfg, b, x.dtype)
+    z, xs, bmat, cmat, dt, new_conv, h, din, n = _mamba_project(
+        cfg, params, prefix, x, state.conv)
+    dh = din // h
+    a = -jnp.exp(params[f"{prefix}_a_log"].astype(jnp.float32))  # [H] < 0
+    xh = xs.reshape(b, s, h, dh).astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    la = dtf * a[None, None, :]                                 # log-decay [B,S,H]
+
+    pad = -s % CHUNK
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        dtf = jnp.pad(dtf, ((0, 0), (0, pad), (0, 0)))
+        la = jnp.pad(la, ((0, 0), (0, pad), (0, 0)))
+    sc = xh.shape[1] // CHUNK
+    xc = xh.reshape(b, sc, CHUNK, h, dh).transpose(1, 0, 3, 2, 4)      # [NC,B,H,C,Dh]
+    bc = bmat.reshape(b, sc, CHUNK, n).transpose(1, 0, 2, 3).astype(jnp.float32)
+    cc = cmat.reshape(b, sc, CHUNK, n).transpose(1, 0, 2, 3).astype(jnp.float32)
+    dc = dtf.reshape(b, sc, CHUNK, h).transpose(1, 0, 2, 3)            # [NC,B,C,H]
+    lc = la.reshape(b, sc, CHUNK, h).transpose(1, 0, 2, 3)             # [NC,B,C,H]
+
+    def chunk_step(s_in, inp):
+        xcx, bcx, ccx, dcx, lcx = inp
+        cum = jnp.cumsum(lcx, axis=1)                   # [B,C,H] inclusive
+        cum_prev = cum - lcx
+        # intra-chunk: y_t = sum_{j<=t} exp(cum_t - cum_j) dt_j (C_t.B_j) x_j
+        gad = jnp.einsum("btn,bjn->btj", ccx, bcx)      # C_t . B_j
+        decay = cum[:, :, None, :] - cum[:, None, :, :]  # [B,t,j,H]
+        mask = jnp.tril(jnp.ones((CHUNK, CHUNK)))[None, :, :, None]
+        kernel = jnp.exp(decay) * gad[..., None] * mask * dcx[:, None, :, :]
+        y = jnp.einsum("btjh,bhjd->bhtd", kernel, xcx)
+        # inter-chunk: y_t += C_t . (exp(cum_t) S_in)
+        y += jnp.einsum("btn,bhdn,bth->bhtd", ccx, s_in, jnp.exp(cum))
+        # state: S' = exp(total) S + sum_j exp(total-cum_j) dt_j x_j B_j^T
+        total = cum[:, -1:, :]
+        s_out = jnp.exp(total[:, 0, :])[:, :, None, None] * s_in
+        w = jnp.exp(total - cum) * dcx                   # [B,C,H]
+        s_out += jnp.einsum("bch,bhcd,bcn->bhdn", w, xcx, bcx)
+        return s_out, y
+
+    s_final, ys = jax.lax.scan(chunk_step, state.ssm, (xc, bc, cc, dc, lc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, sc * CHUNK, h, dh)[:, :s]
+    y = y + xh[:, :s] * params[f"{prefix}_d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, s, din).astype(x.dtype)
+    # gated RMSNorm then out projection.
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + cfg.norm_eps)).astype(x.dtype)
+    y = y * params[f"{prefix}_norm_gamma"]
+    out = dense(y, params[f"{prefix}_out_proj"])
+    return out, MambaState(ssm=s_final, conv=new_conv)
+
+
+def mamba_step(cfg, params: Params, prefix: str, x: jax.Array,
+               state: MambaState):
+    """Single-token decode; x [B, 1, d]."""
+    b, _, d = x.shape
+    z, xs, bmat, cmat, dt, new_conv, h, din, n = _mamba_project(
+        cfg, params, prefix, x, state.conv)
+    dh = din // h
+    a = -jnp.exp(params[f"{prefix}_a_log"].astype(jnp.float32))
+    xh = xs.reshape(b, h, dh).astype(jnp.float32)
+    dtf = dt[:, 0].astype(jnp.float32)                   # [B,H]
+    decay = jnp.exp(dtf * a[None])                       # [B,H]
+    kv = jnp.einsum("bhd,bn->bhdn", xh * dtf[..., None], bmat[:, 0].astype(jnp.float32))
+    s_new = decay[..., None, None] * state.ssm + kv
+    y = jnp.einsum("bn,bhdn->bhd", cmat[:, 0].astype(jnp.float32), s_new)
+    y = y + xh * params[f"{prefix}_d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, 1, din).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + cfg.norm_eps)).astype(x.dtype)
+    y = y * params[f"{prefix}_norm_gamma"]
+    out = dense(y, params[f"{prefix}_out_proj"])
+    return out, MambaState(ssm=s_new, conv=new_conv)

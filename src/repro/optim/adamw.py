@@ -1,0 +1,80 @@
+"""AdamW in pure JAX, with optional ZeRO-1 optimizer-state sharding.
+
+The optimizer state carries the same pytree structure as the params; under
+ZeRO-1 the launcher shards ``m``/``v`` over the data axis (params stay in
+their TP sharding), cutting optimizer memory by the DP degree — one of the
+distributed-optimization features required at pod scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float | Any = 3e-4          # float or callable(step) -> float
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          m=jax.tree.map(zeros, params),
+                          v=jax.tree.map(zeros, params))
+
+    def state_specs(self, param_specs) -> AdamWState:
+        f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                          m=jax.tree.map(f32, param_specs),
+                          v=jax.tree.map(f32, param_specs))
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+
+        if self.grad_clip:
+            gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                              for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, self.grad_clip / (gn + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        else:
+            gn = jnp.zeros(())
+
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32),
+                         state.m, grads)
+        v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state.v, grads)
+        mh = jax.tree.map(lambda mm: mm / (1 - b1 ** step.astype(jnp.float32)), m)
+        vh = jax.tree.map(lambda vv: vv / (1 - b2 ** step.astype(jnp.float32)), v)
+
+        def upd(p, mm, vv):
+            delta = mm / (jnp.sqrt(vv) + self.eps) + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mh, vh)
+        return new_params, AdamWState(step=step, m=m, v=v), {"grad_norm": gn}
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = peak_lr * step / max(1, warmup)
+        frac = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr

@@ -1,0 +1,96 @@
+"""Post-training int8 weight quantization (the paper's Sec. II-D, as a
+serving option).
+
+Kraken computes in 8-bit integers; the TPU MXU computes bf16 x bf16 -> fp32
+natively, so the faithful precision story here is *storage* quantization:
+weights live in HBM as int8 + per-output-channel fp scales (halving the
+memory-bound decode roofline term) and are dequantized to bf16 on the fly in
+the uniform-GEMM epilogue's mirror image — a prologue fused by XLA into the
+same HLO as the matmul.
+
+Symmetric per-channel quantization (TFLite spec [45], as cited by the paper):
+``q = clip(round(w / s), -127, 127)``, ``s = max|w_col| / 127``.  Bias terms
+fold into requantization exactly as Sec. II-D notes — we keep them fp32.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QuantizedTensor(NamedTuple):
+    """int8 values + per-out-channel scales; ``axis`` is the kept axis."""
+    q: jax.Array          # int8, same shape as the source
+    scale: jax.Array      # fp32, shape [n_out]
+
+
+def quantize_weight(w: jax.Array, *, axis: int = -1) -> QuantizedTensor:
+    """Symmetric per-channel int8.  ``axis`` is the output-channel dim."""
+    wf = w.astype(jnp.float32)
+    reduce_axes = tuple(i for i in range(w.ndim) if i != (axis % w.ndim))
+    amax = jnp.max(jnp.abs(wf), axis=reduce_axes, keepdims=True)
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(wf / scale), -127, 127).astype(jnp.int8)
+    return QuantizedTensor(q=q, scale=scale.astype(jnp.float32))
+
+
+def dequantize_weight(qt: QuantizedTensor, dtype=jnp.bfloat16) -> jax.Array:
+    return (qt.q.astype(jnp.float32) * qt.scale).astype(dtype)
+
+
+def _is_matmul_weight(path: str, leaf) -> bool:
+    """Quantize 2-D+ projection weights; skip norms/biases/embedding gains."""
+    if leaf.ndim < 2:
+        return False
+    name = path.rsplit("'", 2)[-2] if "'" in path else path
+    return not name.endswith(("_gamma", "_beta"))
+
+
+def quantize_params(params, *, dtype_check=True):
+    """Tree -> tree with matmul weights replaced by QuantizedTensor leaves.
+
+    Returns (quantized_tree, stats) where stats reports bytes before/after —
+    the serving-memory headline (a 140B-param MoE drops ~2x vs bf16).
+    """
+    before = after = 0
+    flat = jax.tree_util.tree_flatten_with_path(params)
+    leaves = []
+    for p, leaf in flat[0]:
+        key = jax.tree_util.keystr(p)
+        before += leaf.size * leaf.dtype.itemsize
+        if _is_matmul_weight(key, leaf):
+            qt = quantize_weight(leaf)
+            after += qt.q.size + qt.scale.size * 4
+            leaves.append(qt)
+        else:
+            after += leaf.size * leaf.dtype.itemsize
+            leaves.append(leaf)
+    tree = jax.tree_util.tree_unflatten(flat[1], leaves)
+    return tree, {"bytes_before": before, "bytes_after": after,
+                  "ratio": before / max(1, after)}
+
+
+def dequantize_params(qparams, dtype=jnp.bfloat16):
+    """Inverse of :func:`quantize_params` (lazy use: map inside the step so
+    XLA fuses the dequant into each matmul's prologue)."""
+    return jax.tree.map(
+        lambda l: dequantize_weight(l, dtype) if isinstance(l, QuantizedTensor) else l,
+        qparams, is_leaf=lambda l: isinstance(l, QuantizedTensor))
+
+
+def quantization_error(params, qparams) -> dict[str, float]:
+    """Max relative error per quantized leaf (PTQ sanity metric)."""
+    errs = {}
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    qflat = jax.tree_util.tree_flatten_with_path(
+        qparams, is_leaf=lambda l: isinstance(l, QuantizedTensor))[0]
+    for (p, w), (_, ql) in zip(flat, qflat):
+        if isinstance(ql, QuantizedTensor):
+            wd = dequantize_weight(ql, jnp.float32)
+            denom = jnp.maximum(jnp.abs(w.astype(jnp.float32)).max(), 1e-12)
+            errs[jax.tree_util.keystr(p)] = float(
+                jnp.abs(wd - w.astype(jnp.float32)).max() / denom)
+    return errs

@@ -1,0 +1,62 @@
+"""Pin every assigned architecture's config to the assignment's exact
+numbers — a silent config drift would invalidate the whole dry-run/roofline
+table for that arch."""
+
+import pytest
+
+from repro.configs import get_arch
+
+# (layers, d_model, heads, kv_heads, d_ff, vocab) + extras per the assignment
+ASSIGNED = {
+    "mixtral-8x22b": dict(num_layers=56, d_model=6144, num_heads=48,
+                          num_kv_heads=8, d_ff=16384, vocab_size=32768,
+                          num_experts=8, experts_per_token=2),
+    "llama4-maverick-400b-a17b": dict(num_layers=48, d_model=5120,
+                                      num_heads=40, num_kv_heads=8,
+                                      d_ff=8192, vocab_size=202048,
+                                      num_experts=128, experts_per_token=1),
+    "musicgen-large": dict(num_layers=48, d_model=2048, num_heads=32,
+                           num_kv_heads=32, d_ff=8192, vocab_size=2048),
+    "yi-9b": dict(num_layers=48, d_model=4096, num_heads=32,
+                  num_kv_heads=4, d_ff=11008, vocab_size=64000),
+    "codeqwen1.5-7b": dict(num_layers=32, d_model=4096, num_heads=32,
+                           num_kv_heads=32, d_ff=13440, vocab_size=92416),
+    "gemma3-12b": dict(num_layers=48, d_model=3840, num_heads=16,
+                       num_kv_heads=8, d_ff=15360, vocab_size=262144),
+    "yi-6b": dict(num_layers=32, d_model=4096, num_heads=32,
+                  num_kv_heads=4, d_ff=11008, vocab_size=64000),
+    "rwkv6-3b": dict(num_layers=32, d_model=2560, d_ff=8960,
+                     vocab_size=65536),
+    "zamba2-1.2b": dict(num_layers=38, d_model=2048, num_heads=32,
+                        num_kv_heads=32, d_ff=8192, vocab_size=32000,
+                        ssm_state=64),
+    "llama-3.2-vision-11b": dict(num_layers=40, d_model=4096, num_heads=32,
+                                 num_kv_heads=8, d_ff=14336,
+                                 vocab_size=128256),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_config_matches_assignment(arch):
+    cfg = get_arch(arch)
+    for field, want in ASSIGNED[arch].items():
+        got = getattr(cfg, field)
+        assert got == want, f"{arch}.{field}: {got} != assigned {want}"
+
+
+def test_family_structure():
+    assert get_arch("mixtral-8x22b").family == "moe"
+    assert get_arch("mixtral-8x22b").sliding_window > 0          # SWA
+    assert get_arch("llama4-maverick-400b-a17b").moe_interleave == 2
+    assert get_arch("llama4-maverick-400b-a17b").shared_expert
+    assert get_arch("gemma3-12b").local_global_period == 6       # 5:1
+    assert get_arch("rwkv6-3b").family == "ssm"
+    assert get_arch("zamba2-1.2b").family == "hybrid"
+    assert get_arch("llama-3.2-vision-11b").family == "vlm"
+    assert get_arch("llama-3.2-vision-11b").cross_attn_period
+    assert get_arch("musicgen-large").frontend == "audio_frames"
+    # long_500k applicability (DESIGN.md §5)
+    assert get_arch("rwkv6-3b").subquadratic
+    assert get_arch("zamba2-1.2b").subquadratic
+    assert get_arch("mixtral-8x22b").subquadratic
+    assert not get_arch("yi-9b").subquadratic

@@ -1,0 +1,103 @@
+"""The uniform-dataflow functional simulator vs the convolution oracle,
+including the elastic-grouping corner cases of Tables II-IV and a
+hypothesis property sweep."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import perf_model as P
+from repro.core.dataflow import (ElasticConfig, interleave_order,
+                                 reference_conv, simulate_conv,
+                                 simulate_layer, simulate_matmul)
+from repro.core.networks import conv as mkconv
+
+RNG = np.random.default_rng(0)
+
+
+def run_case(h, w, ci, co, kh, kw, sh, sw, ph, pw, R, C, n=1):
+    x = RNG.normal(size=(n, h, w, ci))
+    k = RNG.normal(size=(kh, kw, ci, co))
+    res = simulate_conv(x, k, s_h=sh, s_w=sw, pad_h=ph, pad_w=pw, R=R, C=C)
+    ref = reference_conv(x, k, s_h=sh, s_w=sw, pad_h=ph, pad_w=pw)
+    np.testing.assert_allclose(res.y, ref, rtol=1e-9, atol=1e-9)
+    return res
+
+
+def test_unstrided_3x3():        # Table III regime
+    run_case(12, 10, 3, 5, 3, 3, 1, 1, (1, 1), (1, 1), R=4, C=12)
+
+
+def test_strided_5x5_sw2():      # Table IV regime
+    run_case(16, 16, 3, 6, 5, 5, 2, 2, (2, 2), (2, 2), R=4, C=12)
+
+
+def test_alexnet_conv1_shape():  # K=11, S=4 elastic grouping
+    run_case(20, 19, 2, 4, 11, 11, 4, 4, (0, 0), (0, 0), R=4, C=16)
+
+
+def test_pointwise():            # K=1 (FC-like conv)
+    run_case(8, 8, 4, 9, 1, 1, 1, 1, (0, 0), (0, 0), R=4, C=12)
+
+
+def test_resnet_conv1():         # K=7, S=2, TF-SAME pads (2,3)
+    run_case(14, 13, 2, 5, 7, 7, 2, 2, (3, 3), (2, 3), R=4, C=17)
+
+
+def test_sw3_generalization():   # beyond the paper's S_W=2 example
+    run_case(16, 12, 2, 7, 5, 5, 3, 3, (1, 1), (3, 2), R=4, C=14)
+
+
+def test_table2_interleave_pattern():
+    # Table II: R,K_H,S_H = 4,7,2 -> load 1 holds rows 0,2,..,12; load 2 odd.
+    order = interleave_order(4, 7, 2)
+    assert order[0] == [0, 2, 4, 6, 8, 10, 12]
+    assert order[1] == [1, 3, 5, 7, 9, 11, 13]
+
+
+def test_elastic_grouping_formulas():
+    # eq. (5)-(6) with the implemented 7x96: K=3,S=1 -> G=3, E=32, 0 idle.
+    cfg = ElasticConfig.make(96, 3, 1)
+    assert (cfg.G, cfg.E, cfg.idle_cores) == (3, 32, 0)
+    cfg = ElasticConfig.make(96, 11, 4)   # AlexNet conv1: G=14, E=6, 12 idle
+    assert (cfg.G, cfg.E, cfg.idle_cores) == (14, 6, 12)
+
+
+def test_matmul_degenerate_case():
+    x = RNG.normal(size=(7, 33))
+    k = RNG.normal(size=(33, 20))
+    res = simulate_matmul(x, k, R=7, C=12)
+    np.testing.assert_allclose(res.y, x @ k, rtol=1e-9)
+    # cycles == closed form: T(q_c + L*C_i)
+    assert res.issue_cycles == 2 * (1 + 1 * 33)
+
+
+@pytest.mark.parametrize("spec,C", [
+    (mkconv("a", 13, 3, 1, 1, 8, 10), 12),
+    (mkconv("b", 16, 5, 2, 2, 4, 6), 12),
+    (mkconv("c", 13, 3, 1, 1, 8, 10, groups=2), 12),
+])
+def test_simulated_cycles_match_closed_form(spec, C):
+    x = RNG.normal(size=(1, spec.H, spec.W, spec.C_i))
+    k = RNG.normal(size=(spec.K_H, spec.K_W, spec.c_i_per_group, spec.C_o))
+    res = simulate_layer(spec, x, k, R=4, C=C)
+    assert res.issue_cycles == P.analyze_layer(spec, R=4, C=C).Q
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.integers(4, 14), w=st.integers(4, 14),
+    ci=st.integers(1, 4), co=st.integers(1, 6),
+    kh=st.integers(1, 5), kw=st.integers(1, 5),
+    sh=st.integers(1, 3), sw=st.integers(1, 3),
+    r=st.integers(2, 5),
+)
+def test_property_dataflow_equals_conv(h, w, ci, co, kh, kw, sh, sw, r):
+    """Any legal layer shape: the uniform dataflow == the convolution."""
+    if h + 2 < kh or w + 2 < kw:
+        return
+    ph = (kh // 2, kh // 2)
+    pw_l = (kw // 2 // sw) * sw          # pad_left % S_W == 0 constraint
+    pw = (pw_l, kw // 2)
+    C = max(12, kw + sw - 1)
+    run_case(h, w, ci, co, kh, kw, sh, sw, ph, pw, R=r, C=C)

@@ -1,0 +1,167 @@
+"""Direct Kraken-dataflow conv kernel (kernels/kraken_conv.py) vs the
+ref.py oracle: the paper's benchmark layer geometries, a hypothesis sweep,
+the X -> X_hat interleaving invariant (Table II), and the uniform-op
+descriptor layer (core/unified.py) + int8 PTQ (optim/quantize.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import unified as U
+from repro.kernels import ref
+from repro.kernels.kraken_conv import (interleave_input, kraken_conv2d_direct,
+                                       shift_factor)
+from repro.optim import quantize as Q
+
+RNG = np.random.default_rng(1)
+
+
+def _rel_err(got, want):
+    g = got.astype(jnp.float32)
+    w = want.astype(jnp.float32)
+    return float(jnp.abs(g - w).max()) / (float(jnp.abs(w).max()) + 1e-6)
+
+
+# (n, h, w, ci, kh, kw, co, sh, sw, ph, pw) — every (K, S) class from
+# Table I: AlexNet (11,4)(5,1)(3,1), VGG (3,1), ResNet (7,2)(3,1)(1,1).
+PAPER_GEOMETRIES = [
+    (1, 35, 35, 3, 11, 11, 8, 4, 4, (0, 0), (0, 0)),   # alexnet conv1
+    (1, 27, 27, 8, 5, 5, 12, 1, 1, (2, 2), (2, 2)),    # alexnet conv2
+    (2, 14, 14, 8, 3, 3, 16, 1, 1, (1, 1), (1, 1)),    # vgg/resnet 3x3
+    (1, 28, 28, 4, 7, 7, 8, 2, 2, (3, 3), (3, 3)),     # resnet conv1
+    (1, 14, 14, 8, 1, 1, 12, 1, 1, (0, 0), (0, 0)),    # resnet 1x1
+    (1, 16, 16, 8, 3, 3, 8, 2, 2, (1, 1), (1, 1)),     # strided 3x3
+]
+
+
+@pytest.mark.parametrize("case", PAPER_GEOMETRIES,
+                         ids=[f"k{c[4]}x{c[5]}s{c[7]}" for c in PAPER_GEOMETRIES])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_direct_conv_paper_geometries(case, dtype):
+    n, h, w, ci, kh, kw, co, sh, sw, ph, pw = case
+    x = jnp.asarray(RNG.normal(size=(n, h, w, ci)), dtype)
+    k = jnp.asarray(RNG.normal(size=(kh, kw, ci, co)), dtype)
+    got = kraken_conv2d_direct(x, k, stride=(sh, sw), padding=(ph, pw),
+                               interpret=True)
+    want = ref.conv2d(x, k, stride=(sh, sw), padding=(ph, pw))
+    assert got.shape == want.shape
+    assert _rel_err(got, want) < (1e-4 if dtype == jnp.float32 else 3e-2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    h=st.integers(8, 24), w=st.integers(8, 24),
+    ci=st.integers(1, 8), co=st.integers(1, 12),
+    kh=st.integers(1, 5), kw=st.integers(1, 5),
+    sh=st.integers(1, 3), sw=st.integers(1, 3),
+    R=st.integers(2, 7),
+)
+def test_direct_conv_property(h, w, ci, co, kh, kw, sh, sw, R):
+    if h < kh or w < kw:
+        return
+    x = jnp.asarray(RNG.normal(size=(1, h, w, ci)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(kh, kw, ci, co)), jnp.float32)
+    got = kraken_conv2d_direct(x, k, stride=(sh, sw), R=R, interpret=True)
+    want = ref.conv2d(x, k, stride=(sh, sw))
+    assert got.shape == want.shape
+    assert _rel_err(got, want) < 1e-4
+
+
+def test_interleave_matches_table2():
+    """Table II semantics: band row r + kh//S_H, sub-row kh%S_H of block l
+    must hold input row (l*R + r)*S_H + kh."""
+    R, KH, SH = 4, 7, 2
+    H = 40
+    x = jnp.arange(H, dtype=jnp.float32)[None, :, None, None]  # [1,H,1,1]
+    x_hat, L, oh = interleave_input(x, R=R, k_h=KH, s_h=SH)
+    f = shift_factor(KH, SH)
+    assert x_hat.shape == (L, R + f, SH, 1, 1)
+    for l in range(L):
+        for r in range(R):
+            for kh in range(KH):
+                row = (l * R + r) * SH + kh
+                got = float(x_hat[l, r + kh // SH, kh % SH, 0, 0])
+                want = float(row) if row < H else 0.0
+                assert got == want, (l, r, kh, got, want)
+
+
+def test_unified_conv_fc_matmul_consistency():
+    """The uniformity thesis as an invariant: an FC layer is exactly the
+    conv cell with N,W,K_H,K_W,S_H,S_W = 1 (paper Sec. IV-D)."""
+    fc = U.fc_cell(batch=32, c_i=512, c_o=1000)
+    conv = U.conv_cell(n=32, h=1, w=1, c_i=512, k_h=1, k_w=1, c_o=1000)
+    assert (fc.m, fc.k, fc.n) == (conv.m, conv.k, conv.n)
+    mm = U.matmul_cell(32, 512, 1000)
+    assert (mm.m, mm.k, mm.n) == (fc.m, fc.k, fc.n)
+    assert fc.flops == conv.flops == mm.flops == 2 * 32 * 512 * 1000
+
+
+def test_unified_attention_flops():
+    cells = U.attention_cells(batch=2, seq_q=128, seq_kv=128, d_model=64,
+                              num_heads=4, num_kv_heads=2, head_dim=16,
+                              causal=False)
+    proj = [c for c in cells if c.kind == "matmul"]
+    sc = [c for c in cells if c.kind in ("attn_score", "attn_context")]
+    assert len(proj) == 4 and len(sc) == 2
+    t = 2 * 128
+    want_proj = 2 * t * 64 * (4 * 16) * 2 + 2 * t * 64 * (2 * 16) * 2
+    assert sum(c.flops for c in proj) == want_proj
+    assert all(c.batch == 2 * 4 for c in sc)
+
+
+def test_run_cell_shape_guard():
+    cell = U.matmul_cell(8, 16, 4)
+    a = jnp.ones((8, 16))
+    with pytest.raises(AssertionError):
+        U.run_cell(cell, a, jnp.ones((16, 5)), use_pallas=False)
+    out = U.run_cell(cell, a, jnp.ones((16, 4)), use_pallas=False)
+    assert out.shape == (8, 4)
+
+
+def test_run_cell_batched():
+    cell = U.matmul_cell(8, 16, 4, batch=3)
+    a = jnp.ones((3, 8, 16))
+    b = jnp.ones((3, 16, 4))
+    out = U.run_cell(cell, a, b, use_pallas=False)
+    assert out.shape == (3, 8, 4)
+    assert float(out[0, 0, 0]) == 16.0
+
+
+# ---------------------------------------------------------------------------
+# int8 PTQ (paper Sec. II-D)
+# ---------------------------------------------------------------------------
+
+def test_quantize_roundtrip_bound():
+    w = jax.random.normal(jax.random.key(0), (128, 64), jnp.float32)
+    qt = Q.quantize_weight(w)
+    wd = Q.dequantize_weight(qt, jnp.float32)
+    # per-channel symmetric int8: |err| <= scale/2 per column
+    col_amax = jnp.abs(w).max(axis=0)
+    bound = col_amax / 127.0 / 2.0 + 1e-7
+    assert bool(jnp.all(jnp.abs(wd - w).max(axis=0) <= bound))
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=st.integers(2, 64), cols=st.integers(2, 64),
+       scale=st.floats(1e-3, 1e3))
+def test_quantize_scale_invariance(rows, cols, scale):
+    w = jnp.asarray(RNG.normal(size=(rows, cols)) * scale, jnp.float32)
+    qt = Q.quantize_weight(w)
+    assert qt.q.dtype == jnp.int8
+    wd = Q.dequantize_weight(qt, jnp.float32)
+    rel = float(jnp.abs(wd - w).max()) / (float(jnp.abs(w).max()) + 1e-12)
+    assert rel < 1.0 / 127.0 + 1e-6
+
+
+def test_quantize_params_skips_norms():
+    params = {"mlp_wi": jnp.ones((8, 8)), "norm_gamma": jnp.ones((8,)),
+              "attn_wq": jnp.full((8, 8), 0.5)}
+    qp, stats = Q.quantize_params(params)
+    assert isinstance(qp["mlp_wi"], Q.QuantizedTensor)
+    assert isinstance(qp["attn_wq"], Q.QuantizedTensor)
+    assert not isinstance(qp["norm_gamma"], Q.QuantizedTensor)
+    assert stats["ratio"] > 1.5
+    dq = Q.dequantize_params(qp, jnp.float32)
+    assert _rel_err(dq["mlp_wi"], params["mlp_wi"]) < 1e-2

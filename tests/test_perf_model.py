@@ -1,0 +1,108 @@
+"""Validation of the paper-faithful analytical model against the paper's own
+published numbers (Tables I, V, VI and Sec. VI-A).
+
+These tolerances are the reproduction contract: VGG-16/ResNet-50 agree to
+<1.5% on every metric; AlexNet carries the paper's own 224/227 input-dim
+ambiguity (DESIGN.md Sec. 7) and is held to <3%; AlexNet FC additionally
+inherits the paper's internally inconsistent fc6 input dim and is held to 7%.
+"""
+
+import pytest
+
+from repro.core import networks as N
+from repro.core import perf_model as P
+
+
+def rel(a, b):
+    return abs(a - b) / abs(b)
+
+
+# Paper Table V (conv layers, Kraken 7x96 @ 400 MHz).
+TABLE_V = {
+    "alexnet": dict(eff=77.2, fps=336.6, ma=6.4e6, ai=191.8, gops=414.8),
+    "vgg16": dict(eff=96.5, fps=17.5, ma=96.8e6, ai=306.8, gops=518.7),
+    "resnet50": dict(eff=88.3, fps=64.2, ma=67.9e6, ai=108.9, gops=474.9),
+}
+
+# Paper Table VI (FC layers @ 200 MHz, batch 7).
+TABLE_VI = {
+    "alexnet": dict(eff=99.1, fps=2400, ma=12.2e6, ai=9.1),
+    "vgg16": dict(eff=99.1, fps=1100, ma=27.0e6, ai=9.2),
+    "resnet50": dict(eff=94.7, fps=62100, ai=8.6),
+}
+
+TOL = {"alexnet": 0.03, "vgg16": 0.015, "resnet50": 0.015}
+
+
+@pytest.mark.parametrize("net", list(TABLE_V))
+def test_table_v_conv_metrics(net):
+    conv = N.get_network(net)["conv"]
+    perf = P.analyze_network(conv)
+    want = TABLE_V[net]
+    tol = TOL[net]
+    assert rel(perf.efficiency * 100, want["eff"]) < tol
+    assert rel(perf.fps(), want["fps"]) < tol
+    assert rel(perf.memory_accesses, want["ma"]) < tol
+    assert rel(perf.arithmetic_intensity, want["ai"]) < tol
+    assert rel(perf.gops, want["gops"]) < tol
+
+
+@pytest.mark.parametrize("net", list(TABLE_VI))
+def test_table_vi_fc_metrics(net):
+    fcl = N.get_network(net, fc_batch=7)["fc"]
+    perf = P.analyze_network(fcl, freq_mhz=P.F_FC_MHZ)
+    want = TABLE_VI[net]
+    tol = 0.07 if net == "alexnet" else 0.03
+    assert rel(perf.efficiency * 100, want["eff"]) < tol
+    assert rel(perf.fps(batch=7), want["fps"]) < tol
+    if "ma" in want:
+        assert rel(perf.fc_memory_accesses_per_frame(7), want["ma"]) < tol
+    assert rel(perf.fc_arithmetic_intensity(7), want["ai"]) < tol
+
+
+@pytest.mark.parametrize("net,wz,valid", [
+    ("alexnet", 669.7e6, 616.2e6),
+    ("vgg16", 15.3e9, 14.8e9),
+    ("resnet50", 3.9e9, 3.7e9),
+])
+def test_table_i_mac_counts(net, wz, valid):
+    conv = N.get_network(net)["conv"]
+    assert rel(N.total_macs(conv, valid=False), wz) < 0.015
+    assert rel(N.total_macs(conv, valid=True), valid) < 0.015
+
+
+def test_table_i_memory_words_vgg():
+    net = N.get_network("vgg16")
+    # Paper Table I: M_K 14.7M, M_X 9.1M, M_Y 13.5M for VGG-16 conv.
+    assert rel(N.total_words(net["conv"], "k"), 14.7e6) < 0.02
+    assert rel(N.total_words(net["conv"], "x"), 9.1e6) < 0.02
+    assert rel(N.total_words(net["conv"], "y"), 13.5e6) < 0.02
+
+
+def test_peak_performance():
+    # "peak performance of 537.6 Gops" at 400 MHz with 672 PEs.
+    perf = P.analyze_network(N.get_network("vgg16")["conv"])
+    assert abs(perf.peak_gops - 537.6) < 0.1
+
+
+def test_config_search_reproduces_7x96_tradeoff():
+    """Sec. VI-A: smaller C gives slightly higher efficiency but far more
+    memory accesses; 7x96 is the chosen optimum at the PE budget."""
+    sets = [N.get_network(n)["conv"] for n in ("alexnet", "vgg16", "resnet50")]
+    res = {(r["R"], r["C"]): r for r in P.config_search(
+        sets, r_range=[7, 14], c_range=[15, 24, 96])}
+    chosen = res[(7, 96)]
+    for alt in [(7, 15), (7, 24)]:
+        # the alternates trade small efficiency gains for >2.5x the accesses
+        assert res[alt]["total_memory_accesses"] > 2.5 * chosen["total_memory_accesses"]
+        assert res[alt]["mean_efficiency"] < chosen["mean_efficiency"] + 0.02
+    # 7x96 beats 14x24 outright on efficiency
+    assert chosen["mean_efficiency"] > res[(14, 24)]["mean_efficiency"]
+
+
+def test_bandwidth_requirement_vgg_conv1():
+    """Sec. VI-A: peak conv bandwidth is 26 bytes/clock (VGG-16 layer 1)."""
+    layer = N.get_network("vgg16")["conv"][0]
+    bw = P.bandwidth_words_per_clock(layer)
+    total = sum(bw.values())
+    assert 20 <= total <= 30  # 8-bit words -> bytes/clock

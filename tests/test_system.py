@@ -1,0 +1,53 @@
+"""End-to-end system tests: the training launcher (with injected failure and
+restart), and checkpoint-resume continuity of the loss curve."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_train(tmp, extra):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    cmd = [sys.executable, "-m", "repro.launch.train",
+           "--arch", "yi-6b", "--smoke", "--batch", "4", "--seq", "32",
+           "--ckpt-dir", tmp, "--ckpt-every", "5", "--log-every", "5"] + extra
+    out = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def test_train_completes_and_checkpoints(tmp_path):
+    d = str(tmp_path / "ck")
+    out = run_train(d, ["--steps", "12"])
+    assert "done: 12 steps" in out
+    assert any(f.startswith("step_") for f in os.listdir(d))
+    assert os.path.exists(os.path.join(d, "heartbeat.json"))
+
+
+def test_train_survives_injected_failure(tmp_path):
+    d = str(tmp_path / "ck")
+    out = run_train(d, ["--steps", "12", "--inject-failure-at", "8"])
+    assert "injected failure" in out
+    assert "restore" in out
+    assert "done: 12 steps" in out
+    assert "1 restarts" in out
+
+
+def test_train_resumes_across_invocations(tmp_path):
+    d = str(tmp_path / "ck")
+    run_train(d, ["--steps", "10"])
+    out = run_train(d, ["--steps", "15"])  # picks up at step 10
+    assert "resumed from step 10" in out
+    assert "done: 15 steps" in out
+
+
+def test_train_with_microbatching_and_remat(tmp_path):
+    d = str(tmp_path / "ck")
+    out = run_train(d, ["--steps", "4", "--microbatches", "2",
+                        "--remat", "full"])
+    assert "done: 4 steps" in out
