@@ -1,0 +1,109 @@
+"""Model-predicted vs. measured tile winners, per GEMM cell.
+
+    PYTHONPATH=src python benchmarks/autotune_report.py \
+        [--arch yi-6b] [--tile-cache /tmp/plans.json] [--reps 3] [--top-n 3]
+
+For each serving GEMM cell of the arch (smoke-sized so the report runs on a
+CPU container; pass ``--full`` on real hardware) the report times the
+model's top candidates per schedule through the real ``kraken_gemm`` kernel
+and prints one row:
+
+    cell  m k n | model pick (util, modeled MB) | measured pick (us) | agree?
+
+The ``agree`` column is the whole point of the autotuner: wherever it says
+``no``, the closed-form eq.-19 ranking (utilization, then modeled HBM words)
+ordered candidates differently than the hardware did — the MPNA/Chain-NN
+analytical-vs-measured gap, made visible per cell.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def build_cells(arch: str, *, full: bool):
+    from repro.configs import get_arch, smoke_config
+    from repro.core.unified import serving_cells
+
+    cfg = get_arch(arch)
+    if not full:
+        cfg = smoke_config(cfg)
+    return cfg, serving_cells(cfg, slots=4, prompt_len=12, cache_len=64)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="yi-6b")
+    p.add_argument("--full", action="store_true",
+                   help="production-sized cells (default: smoke-sized)")
+    p.add_argument("--tile-cache", default=None, metavar="PATH",
+                   help="persist measured winners here as a side effect")
+    p.add_argument("--reps", type=int, default=3)
+    p.add_argument("--top-n", type=int, default=3,
+                   help="candidates timed per schedule")
+    args = p.parse_args(argv)
+
+    from repro import tuning
+    from repro.core import elastic
+    from repro.tuning import search
+
+    cfg_arch, cells = build_cells(args.arch, full=args.full)
+    cache = tuning.set_tile_cache(args.tile_cache) if args.tile_cache else None
+
+    backend = search.backend_name()
+    print(f"# autotune report: arch={args.arch} backend={backend} "
+          f"reps={args.reps} top_n={args.top_n}/schedule")
+    hdr = (f"{'cell':<18} {'m':>6} {'k':>6} {'n':>6} | "
+           f"{'model pick':<28} {'util':>6} | "
+           f"{'measured pick':<28} {'us':>8} | agree")
+    print(hdr)
+    print("-" * len(hdr))
+
+    agreements = 0
+    measured = 0
+    for cell in cells:
+        if (backend != "tpu"
+                and cell.m * cell.k * cell.n > tuning.INTERPRET_MACS_CAP):
+            # Same guard the autotuner applies: interpret-mode timing of a
+            # production-sized cell is minutes-to-hours per candidate.
+            print(f"{cell.name:<18} {cell.m:>6} {cell.k:>6} {cell.n:>6} | "
+                  f"skipped — exceeds interpret-mode cap; run on TPU")
+            continue
+        measured += 1
+        cands = search.select_candidates(cell.m, cell.k, cell.n,
+                                         top_n=args.top_n)
+        modeled = elastic.model_best(cands)
+        import jax.numpy as jnp
+        timings = search.benchmark_candidates(
+            cell.m, cell.k, cell.n, cands, reps=args.reps,
+            dtype=jnp.dtype(cfg_arch.dtype).type)
+        winner = timings[0]
+        agree = search._same_plan(winner.config, modeled)
+        agreements += agree
+        if cache is not None:
+            key = tuning.cache_key("gemm", cell.m, cell.k, cell.n,
+                                   cfg_arch.dtype, backend)
+            cache.put(key, winner.config, measured_us=winner.us,
+                      extra={"candidates_timed": len(timings),
+                             "agrees_with_model": agree})
+
+        def fmt(c):
+            return f"({c.bm},{c.bk},{c.bn})/{c.schedule[:6]}"
+
+        print(f"{cell.name:<18} {cell.m:>6} {cell.k:>6} {cell.n:>6} | "
+              f"{fmt(modeled):<28} {modeled.utilization:>6.3f} | "
+              f"{fmt(winner.config):<28} {winner.us:>8.1f} | "
+              f"{'yes' if agree else 'NO'}")
+    if cache is not None:
+        cache.save()
+        print(f"# persisted {measured} winners to {cache.path}")
+    print(f"# model agreed with measurement on {agreements}/{measured} "
+          f"measured cells ({backend}"
+          + (f"; {len(cells) - measured} skipped over the interpret cap)"
+             if measured < len(cells) else ")"))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -34,7 +34,12 @@ def gemm_bench() -> list[tuple]:
         b = jnp.asarray(rng.normal(size=(k, n)), jnp.bfloat16)
         f = jax.jit(lambda a, b: ref.matmul(a, b))
         us = _timeit(lambda: jax.block_until_ready(f(a, b)), reps=3)
-        cfg = elastic.choose_tiles(m, k, n, in_bytes=2)
+        # Policy-resolved plan for the annotation: with a warmed --tile-cache
+        # these become the measured winners; otherwise the static model pick.
+        # (run.py downgrades --autotune to cache replay off-TPU, so this
+        # cannot trigger interpret-mode measurement of production cells.)
+        cfg = elastic.choose_tiles(m, k, n, in_bytes=2,
+                                   dtype_name="bfloat16")
         flops = 2.0 * m * k * n
         derived = (f"tiles=({cfg.bm},{cfg.bk},{cfg.bn})|{cfg.schedule}|"
                    f"util={cfg.utilization:.3f}|"

@@ -36,7 +36,35 @@ def roofline_summary() -> list[tuple]:
     return rows
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    import argparse
+    p = argparse.ArgumentParser()
+    p.add_argument("--autotune", action="store_true",
+                   help="resolve tile plans by on-device measurement "
+                        "(misses are benchmarked and persisted; on non-TPU "
+                        "backends downgraded to cache replay — interpret-"
+                        "mode tuning of production-sized cells would take "
+                        "hours)")
+    p.add_argument("--tile-cache", default=None, metavar="PATH",
+                   help="tile-plan cache file (also: $KRAKEN_TILE_CACHE); "
+                        "warmed entries replace the modeled tile "
+                        "annotations in the gemm rows")
+    args = p.parse_args(argv)
+    if args.tile_cache or args.autotune:
+        import sys
+        from repro import tuning
+        mode = "cached"
+        if args.autotune:
+            if tuning.backend_name() == "tpu":
+                mode = "autotune"
+            else:
+                print("# --autotune downgraded to cache replay on "
+                      f"{tuning.backend_name()}; warm the cache with "
+                      "benchmarks/autotune_report.py or launch.serve "
+                      "--autotune", file=sys.stderr)
+        tuning.set_tile_cache(args.tile_cache)
+        tuning.set_tile_mode(mode)
+
     from benchmarks import kernels_bench, paper_tables
     sections = [
         paper_tables.table1_network_stats,

@@ -86,28 +86,39 @@ def modeled_hbm_words(m: int, k: int, n: int, bm: int, bk: int, bn: int,
     return a_words + b_words + o_words
 
 
-def choose_tiles(m: int, k: int, n: int, *, in_bytes: int = 2,
-                 vmem_budget: int = VMEM_BUDGET) -> TileConfig:
-    """Elastic tile selection for one GEMM cell.
+def _make_config(m: int, k: int, n: int, bm: int, bk: int, bn: int,
+                 schedule: str, in_bytes: int) -> TileConfig:
+    acc = schedule == "output_stationary"
+    return TileConfig(bm, bk, bn, schedule,
+                      tile_utilization(m, k, n, bm, bk, bn),
+                      _vmem_usage(bm, bk, bn, in_bytes, acc),
+                      modeled_hbm_words(m, k, n, bm, bk, bn, schedule))
 
-    Maximizes utilization (primary) then minimizes modeled HBM traffic
-    (secondary), subject to VMEM capacity and MXU alignment — the same
-    two-objective selection the paper performs over (R, C) in Sec. VI-A.
+
+def enumerate_tiles(m: int, k: int, n: int, *, in_bytes: int = 2,
+                    vmem_budget: int = VMEM_BUDGET) -> list[TileConfig]:
+    """All feasible tile candidates for one GEMM cell, model-ranked.
+
+    The candidate lattice the analytical selection (and the empirical
+    autotuner in :mod:`repro.tuning.search`) draws from: weight-stationary
+    full-K tiles first, then output-stationary split-K tiles, each filtered
+    by the VMEM budget.  Candidates are returned in generation order, deduped;
+    if nothing fits the budget, the degenerate minimal tile is returned so the
+    list is never empty.
     """
     cand_m = sorted({min(round_up(m, SUBLANE), c) for c in (128, 256, 512)})
     cand_n = sorted({min(round_up(n, MXU_DIM), c) for c in (128, 256, 512)})
-    best: TileConfig | None = None
+    out: list[TileConfig] = []
+    seen: set[tuple] = set()
 
     def consider(bm: int, bk: int, bn: int, schedule: str) -> None:
-        nonlocal best
-        use = _vmem_usage(bm, bk, bn, in_bytes, acc=(schedule == "output_stationary"))
-        if use > vmem_budget:
+        key = (bm, bk, bn, schedule)
+        if key in seen:
             return
-        util = tile_utilization(m, k, n, bm, bk, bn)
-        words = modeled_hbm_words(m, k, n, bm, bk, bn, schedule)
-        cfg = TileConfig(bm, bk, bn, schedule, util, use, words)
-        if best is None or (cfg.utilization, -cfg.hbm_words) > (best.utilization, -best.hbm_words):
-            best = cfg
+        seen.add(key)
+        cfg = _make_config(m, k, n, bm, bk, bn, schedule, in_bytes)
+        if cfg.vmem_bytes <= vmem_budget:
+            out.append(cfg)
 
     # Kraken-style weight-stationary: full-K resident weight tile.
     bk_full = round_up(k, MXU_DIM)
@@ -120,11 +131,58 @@ def choose_tiles(m: int, k: int, n: int, *, in_bytes: int = 2,
             for bk in (128, 256, 512):
                 bk_c = min(round_up(k, MXU_DIM), bk)
                 consider(bm, bk_c, bn, "output_stationary")
-    if best is None:
+    if not out:
         # Degenerate: minimal tiles (always fit on real hardware).
-        best = TileConfig(SUBLANE, MXU_DIM, MXU_DIM, "output_stationary",
-                          tile_utilization(m, k, n, SUBLANE, MXU_DIM, MXU_DIM),
-                          _vmem_usage(SUBLANE, MXU_DIM, MXU_DIM, in_bytes, True),
-                          modeled_hbm_words(m, k, n, SUBLANE, MXU_DIM, MXU_DIM,
-                                            "output_stationary"))
+        out.append(_make_config(m, k, n, SUBLANE, MXU_DIM, MXU_DIM,
+                                "output_stationary", in_bytes))
+    return out
+
+
+def model_best(candidates: list[TileConfig]) -> TileConfig:
+    """The analytical winner: max utilization, then min modeled HBM words.
+
+    Strict comparison keeps the earliest candidate on exact ties, matching
+    the original generation-order selection."""
+    best = candidates[0]
+    for cfg in candidates[1:]:
+        if (cfg.utilization, -cfg.hbm_words) > (best.utilization, -best.hbm_words):
+            best = cfg
     return best
+
+
+def choose_tiles(m: int, k: int, n: int, *, in_bytes: int = 2,
+                 vmem_budget: int = VMEM_BUDGET,
+                 mode: str | None = None,
+                 op_kind: str = "gemm",
+                 dtype_name: str | None = None) -> TileConfig:
+    """Elastic tile selection for one GEMM cell.
+
+    ``mode`` selects how the winner is chosen (``None`` defers to the
+    process-wide policy in :mod:`repro.tuning`, default ``"model"``):
+
+    * ``"model"`` — the static two-objective selection: maximize utilization
+      (primary) then minimize modeled HBM traffic (secondary), subject to
+      VMEM capacity and MXU alignment — the same selection the paper performs
+      over (R, C) in Sec. VI-A.
+    * ``"cached"`` — return the persisted empirical winner for this cell if
+      the tile-plan cache holds one; fall back to the model otherwise (and
+      record the miss).  Zero measurement cost: safe on any hot path.
+    * ``"autotune"`` — like ``"cached"`` but a miss triggers an on-device
+      benchmark of the top candidates (MPNA/Chain-NN-style measured
+      selection); the winner is persisted for future runs.
+    """
+    if mode is None:
+        from repro import tuning
+        mode = tuning.get_tile_mode()
+    if mode == "model":
+        return model_best(enumerate_tiles(m, k, n, in_bytes=in_bytes,
+                                          vmem_budget=vmem_budget))
+    if mode not in ("cached", "autotune"):
+        raise ValueError(f"unknown tile mode: {mode!r}")
+    # Cache lookup first; the candidate lattice is only enumerated on a
+    # miss (resolve_tiles re-runs it under the same budget), so warm-path
+    # calls cost one dict lookup, not ~40 TileConfig constructions.
+    from repro import tuning
+    return tuning.resolve_tiles(m, k, n, mode=mode, in_bytes=in_bytes,
+                                vmem_budget=vmem_budget, op_kind=op_kind,
+                                dtype_name=dtype_name)

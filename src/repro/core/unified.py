@@ -63,13 +63,20 @@ class GemmCell:
         """ops / byte at perfect reuse — the roofline upper bound for the cell."""
         return self.flops / (self.operand_words() * word_bytes)
 
-    def tile_plan(self, in_bytes: int = 2) -> elastic.TileConfig:
-        return elastic.choose_tiles(self.m, self.k, self.n, in_bytes=in_bytes)
+    def tile_plan(self, in_bytes: int = 2, mode: str | None = None,
+                  dtype_name: str | None = None) -> elastic.TileConfig:
+        """The cell's tile plan; ``mode`` as in :func:`elastic.choose_tiles`
+        (``None`` defers to the process-wide ``repro.tuning`` policy, so a
+        warmed ``--tile-cache`` run replays measured winners here too).
+        ``dtype_name`` defaults from ``in_bytes`` (2 -> bfloat16), matching
+        the keys the serve/train warmers write for bf16-compute configs."""
+        return elastic.choose_tiles(self.m, self.k, self.n, in_bytes=in_bytes,
+                                    mode=mode, dtype_name=dtype_name)
 
     def utilization(self, in_bytes: int = 2) -> float:
         """MXU utilization under the elastic tile plan — the TPU analogue of
         the paper's per-layer performance efficiency ℰ_j (eq. 19)."""
-        return self.tile_plan(in_bytes).utilization
+        return self.tile_plan(in_bytes, mode="model").utilization
 
 
 # ---------------------------------------------------------------------------
@@ -142,6 +149,88 @@ def moe_cells(*, tokens: int, d_model: int, d_ff: int, n_experts: int,
     )
 
 
+def arch_cells(cfg, *, batch: int, seq_q: int, seq_kv: int | None = None,
+               include_logits: bool = True, name: str = "") -> list[GemmCell]:
+    """Lower one step of an architecture config to its unique GEMM cells.
+
+    ``cfg`` is duck-typed against :class:`repro.configs.base.ArchConfig`
+    (d_model / num_heads / d_ff / ...).  One representative layer is lowered
+    (every layer of a uniform stack shares the same cell shapes, so this is
+    the autotuner's work-list, not a FLOP census): attention projections +
+    score/context (skipped for attention-free archs), the FFN (dense SwiGLU /
+    GeLU or MoE), and optionally the logits matmul.  ``seq_q`` is tokens per
+    sequence this step (1 for decode); ``seq_kv`` defaults to ``seq_q``.
+    """
+    seq_kv = seq_q if seq_kv is None else seq_kv
+    t = batch * seq_q
+    prefix = name or ("decode" if seq_q == 1 else "prefill")
+    cells: list[GemmCell] = []
+    if getattr(cfg, "num_heads", 0):
+        window = getattr(cfg, "sliding_window", 0) or 0
+        cells += attention_cells(
+            batch=batch, seq_q=seq_q, seq_kv=seq_kv, d_model=cfg.d_model,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, causal=seq_q > 1, window=window,
+            name=f"{prefix}_attn")
+    if getattr(cfg, "num_experts", 0):
+        cells += moe_cells(tokens=t, d_model=cfg.d_model,
+                           d_ff=getattr(cfg, "moe_d_ff", 0) or cfg.d_ff,
+                           n_experts=cfg.num_experts,
+                           top_k=max(cfg.experts_per_token, 1),
+                           swiglu=getattr(cfg, "mlp", "swiglu") == "swiglu",
+                           name=f"{prefix}_moe")
+    else:
+        n_in = 2 if getattr(cfg, "mlp", "swiglu") == "swiglu" else 1
+        cells += [matmul_cell(t, cfg.d_model, cfg.d_ff,
+                              name=f"{prefix}_ffn_wi{i}") for i in range(n_in)]
+        cells.append(matmul_cell(t, cfg.d_ff, cfg.d_model,
+                                 name=f"{prefix}_ffn_wo"))
+    if include_logits:
+        cells.append(matmul_cell(t, cfg.d_model, cfg.vocab_size,
+                                 name=f"{prefix}_logits"))
+    return cells
+
+
+# Cell kinds that execute through the kraken_gemm tile path (ops.kraken_matmul)
+# and therefore have a replayable tile plan.  Attention score/context cells run
+# via the dedicated flash kernels (swa/decode attention), so tuning GEMM tiles
+# for them would be dead weight in the cache.
+KRAKEN_GEMM_KINDS = ("conv", "fc", "matmul")
+
+
+def tunable_cells(cells: list[GemmCell]) -> list[GemmCell]:
+    return [c for c in cells if c.kind in KRAKEN_GEMM_KINDS]
+
+
+def serving_cells(cfg, *, slots: int, prompt_len: int,
+                  cache_len: int) -> list[GemmCell]:
+    """The serving work-list: per-slot prefill cells + batched decode cells.
+
+    Exactly the two jitted programs ``launch/serve.py`` runs — a
+    single-sequence prefill of ``prompt_len`` tokens, and a ``slots``-wide
+    one-token decode against a ``cache_len`` KV cache.  Restricted to the
+    cells the tile path can actually replay (:data:`KRAKEN_GEMM_KINDS`) and
+    deduplicated by (m, k, n) so the autotuner measures each unique cell
+    once.
+    """
+    cells = (arch_cells(cfg, batch=1, seq_q=prompt_len, name="prefill")
+             + arch_cells(cfg, batch=slots, seq_q=1, seq_kv=cache_len,
+                          name="decode"))
+    return dedup_cells(tunable_cells(cells))
+
+
+def dedup_cells(cells: list[GemmCell]) -> list[GemmCell]:
+    """Keep the first cell of each unique GEMM shape (order-preserving)."""
+    seen: set[tuple] = set()
+    out = []
+    for c in cells:
+        key = (c.m, c.k, c.n)
+        if key not in seen:
+            seen.add(key)
+            out.append(c)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Execution: run a cell's op through the uniform kernel
 # ---------------------------------------------------------------------------
@@ -186,7 +275,12 @@ class CellReport:
 
 
 def report(cells: list[GemmCell], in_bytes: int = 2) -> list[CellReport]:
-    return [CellReport(c, c.tile_plan(in_bytes)) for c in cells]
+    # Napkin math is defined against the static model: the modeled-seconds
+    # properties divide by modeled utilization, so an empirically cached
+    # plan (whose utilization field the model never ranked) doesn't belong
+    # here, and a process-wide --autotune policy must not trigger
+    # measurement from a reporting loop.
+    return [CellReport(c, c.tile_plan(in_bytes, mode="model")) for c in cells]
 
 
 def dominant_cell(cells: list[GemmCell]) -> GemmCell:

@@ -134,7 +134,8 @@ def kraken_conv2d_direct(x: jnp.ndarray, k: jnp.ndarray, *,
     f = shift_factor(k_h, s_h)
     ow = (w - k_w) // s_w + 1
 
-    bco = bco or min(round_up(c_o, 128), 256)
+    if bco is None:
+        bco = _resolve_bco(x.shape, k.shape, stride)
     co_p = round_up(c_o, bco)
     k_pad = jnp.pad(k, ((0, 0), (0, 0), (0, 0), (0, co_p - c_o)))
     t_co = co_p // bco
@@ -163,6 +164,31 @@ def kraken_conv2d_direct(x: jnp.ndarray, k: jnp.ndarray, *,
 
     out = out.reshape(n, L * R, ow, co_p)[:, :oh, :, :c_o]
     return out
+
+
+def _resolve_bco(x_shape, k_shape, stride) -> int:
+    """Output-channel tile for the direct conv, via the tile-plan policy.
+
+    ``mode="model"`` (the default) keeps the static default.  Under
+    ``cached``/``autotune`` the persisted ``conv_direct`` winner (keyed by
+    the conv's im2col-equivalent GEMM geometry, see ``tuning.search.
+    autotune_conv``) is replayed; an ``autotune`` miss measures and persists
+    it first — so a ``--tile-cache`` launch covers this kernel too.
+    """
+    default = min(round_up(k_shape[-1], 128), 256)
+    from repro import tuning
+    from repro.tuning.search import autotune_conv, conv_cache_key
+    mode = tuning.get_tile_mode()
+    if mode == "model":
+        return default
+    cache = tuning.get_tile_cache()
+    key, m_eq, k_eq, c_o = conv_cache_key(x_shape, k_shape, stride)
+    if mode == "autotune" and (tuning.backend_name() == "tpu"
+                               or m_eq * k_eq * c_o <= tuning.INTERPRET_MACS_CAP):
+        # autotune_conv owns the lookup: one cache.get, one miss count.
+        return autotune_conv(x_shape, k_shape, stride=stride, cache=cache)
+    hit = cache.get(key)
+    return hit.bn if hit is not None else default
 
 
 def _vmem(shape, dtype, interpret: bool):

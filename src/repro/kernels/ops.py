@@ -39,11 +39,17 @@ def kraken_matmul(a: jnp.ndarray, b: jnp.ndarray, *,
                   activation: str | None = None,
                   out_dtype=None,
                   use_pallas: bool | None = None,
-                  interpret: bool | None = None) -> jnp.ndarray:
+                  interpret: bool | None = None,
+                  tile_mode: str | None = None) -> jnp.ndarray:
     """Uniform-dataflow matmul: [M, K] @ [K, N] (+bias, +activation).
 
     The single compute primitive of the framework — conv, FC, attention
     projections and MoE experts all route through here (DESIGN.md §2).
+
+    ``tile_mode`` selects the tile plan source (``"model"`` | ``"cached"`` |
+    ``"autotune"``; ``None`` defers to the process-wide ``repro.tuning``
+    policy) — a server started with ``--tile-cache`` replays empirically
+    measured winners here instead of the static model's picks.
     """
     if use_pallas is None:
         use_pallas = _on_tpu()
@@ -52,7 +58,8 @@ def kraken_matmul(a: jnp.ndarray, b: jnp.ndarray, *,
                           out_dtype=out_dtype)
     m, k = a.shape
     _, n = b.shape
-    cfg = elastic.choose_tiles(m, k, n, in_bytes=a.dtype.itemsize)
+    cfg = elastic.choose_tiles(m, k, n, in_bytes=a.dtype.itemsize,
+                               mode=tile_mode, dtype_name=a.dtype.name)
     ap = _pad_to(a, (cfg.bm, cfg.bk))
     bp = _pad_to(b, (cfg.bk, cfg.bn))
     bias_p = None
@@ -70,7 +77,8 @@ def kraken_conv2d(x: jnp.ndarray, k: jnp.ndarray, *,
                   padding: tuple[tuple[int, int], tuple[int, int]] = ((0, 0), (0, 0)),
                   out_dtype=None,
                   use_pallas: bool | None = None,
-                  interpret: bool | None = None) -> jnp.ndarray:
+                  interpret: bool | None = None,
+                  tile_mode: str | None = None) -> jnp.ndarray:
     """Convolution by the uniform lowering conv -> im2col -> kraken_matmul.
 
     x: [N, H, W, C_i], k: [K_H, K_W, C_i, C_o].  This is the paper's
@@ -88,7 +96,8 @@ def kraken_conv2d(x: jnp.ndarray, k: jnp.ndarray, *,
     # Match the patch ordering: (C_i, K_H, K_W) -> rows of the weight matrix.
     rhs = jnp.transpose(k, (2, 0, 1, 3)).reshape(c_i * k_h * k_w, c_o)
     out = kraken_matmul(lhs, rhs, out_dtype=out_dtype,
-                        use_pallas=use_pallas, interpret=interpret)
+                        use_pallas=use_pallas, interpret=interpret,
+                        tile_mode=tile_mode)
     return out.reshape(n, oh, ow, c_o)
 
 

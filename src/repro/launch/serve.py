@@ -126,6 +126,33 @@ def _slot_set(full_tree, one_tree, i: int):
     return jax.tree.map(setter, full_tree, one_tree)
 
 
+def warm_tile_cache(cfg, *, slots: int, prompt_len: int, cache_len: int,
+                    autotune: bool, log=print) -> None:
+    """Warm (or verify) the tile-plan cache for this server's GEMM cells.
+
+    Enumerates the prefill + decode cells of the arch (the two jitted
+    programs `generate` runs), autotunes each cache miss, and reports
+    per-cell hit/tuned status — the second run of a warmed server reports
+    hits for every cell.  After warmup the process-wide tile mode is
+    "cached", so the serving hot path replays measured winners and never
+    benchmarks.
+    """
+    from repro import tuning
+    from repro.core.unified import serving_cells
+
+    cells = serving_cells(cfg, slots=slots, prompt_len=prompt_len,
+                          cache_len=cache_len)
+    cache = tuning.get_tile_cache()
+    if autotune:
+        # Key/measure in the model's compute dtype: the hot path looks
+        # plans up under the activation dtype's name.
+        tuning.warm_cells(cells, cache=cache, dtype_name=cfg.dtype, log=log)
+    else:
+        log(f"tile-cache: loaded {len(cache)} entries from "
+            f"{cache.path or '<memory>'} for {len(cells)} serving cells")
+    tuning.set_tile_mode("cached")
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser()
     p.add_argument("--arch", default="yi-6b")
@@ -136,11 +163,22 @@ def main(argv=None) -> int:
     p.add_argument("--max-new", type=int, default=16)
     p.add_argument("--cache-len", type=int, default=64)
     p.add_argument("--temperature", type=float, default=0.0)
+    p.add_argument("--autotune", action="store_true",
+                   help="benchmark tile candidates for this arch's GEMM "
+                        "cells and persist the winners before serving")
+    p.add_argument("--tile-cache", default=None, metavar="PATH",
+                   help="tile-plan cache file (also: $KRAKEN_TILE_CACHE); "
+                        "without --autotune, replays it read-only")
     args = p.parse_args(argv)
 
     cfg = get_arch(args.arch)
     if args.smoke:
         cfg = smoke_config(cfg)
+    if args.tile_cache or args.autotune:
+        from repro import tuning
+        tuning.set_tile_cache(args.tile_cache)
+        warm_tile_cache(cfg, slots=args.slots, prompt_len=args.prompt_len,
+                        cache_len=args.cache_len, autotune=args.autotune)
     model = Model(cfg)
     params = model.init(jax.random.key(0))
     rng = np.random.default_rng(0)

@@ -53,11 +53,28 @@ def main(argv=None) -> int:
     p.add_argument("--data-model", type=int, nargs=2, default=(1, 1),
                    help="mesh (data, model) over local devices")
     p.add_argument("--log-every", type=int, default=10)
+    p.add_argument("--autotune", action="store_true",
+                   help="benchmark tile candidates for this run's GEMM "
+                        "cells and persist the winners before training")
+    p.add_argument("--tile-cache", default=None, metavar="PATH",
+                   help="tile-plan cache file (also: $KRAKEN_TILE_CACHE); "
+                        "without --autotune, replays it read-only")
     args = p.parse_args(argv)
 
     cfg = get_arch(args.arch)
     if args.smoke:
         cfg = smoke_config(cfg)
+    if args.tile_cache or args.autotune:
+        from repro import tuning
+        from repro.core.unified import arch_cells, dedup_cells, tunable_cells
+        tuning.set_tile_cache(args.tile_cache)
+        if args.autotune:
+            mb = max(args.batch // max(args.microbatches, 1), 1)
+            cells = dedup_cells(tunable_cells(
+                arch_cells(cfg, batch=mb, seq_q=args.seq, name="train")))
+            tuning.warm_cells(cells, dtype_name=cfg.dtype, log=print,
+                              verbose=False, label="train cells")
+        tuning.set_tile_mode("cached")
     model = Model(cfg)
     opt = AdamW(lr=cosine_schedule(args.lr, warmup=20, total=args.steps))
     pipe = SyntheticLM(cfg.vocab_size, args.seq, args.batch)
@@ -100,6 +117,14 @@ def main(argv=None) -> int:
                     extra={"pipe_step": state["pipe"].step})
 
     def restore_state():
+        # Drain any in-flight async save first: a failure right after a
+        # checkpoint step must not race the background write and restore
+        # from one checkpoint earlier (or from scratch).
+        try:
+            writer.wait()
+        except Exception as e:  # noqa: BLE001 - fall back to last durable
+            print(f"[restore] pending checkpoint write failed "
+                  f"({type(e).__name__}: {e}); using last durable checkpoint")
         last = ckpt.latest_step(args.ckpt_dir)
         if last is None:
             return None

@@ -322,13 +322,23 @@ def _gqa_sdpa_context_parallel(q, k, v, *, window: int, q_pos, kv_pos,
         b, kvh, g, s, d = out.shape
         return out.reshape(b, kvh * g, s, d).astype(ql.dtype)
 
-    f = jax.shard_map(
+    f = _shard_map_compat(
         body, mesh=mesh,
         in_specs=(P(bspec), P(bspec, None, axis), P(bspec, None, axis),
                   P(), P(axis)),
-        out_specs=P(bspec),
-        check_vma=False)
+        out_specs=P(bspec))
     return f(q, k, v, q_pos, kv_pos)
+
+
+def _shard_map_compat(body, *, mesh, in_specs, out_specs):
+    """shard_map across jax versions: jax.shard_map(check_vma=) on >= 0.5,
+    jax.experimental.shard_map.shard_map(check_rep=) on 0.4.x."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(body, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
 
 
 def _context_parallel_axis(skv: int) -> str | None:

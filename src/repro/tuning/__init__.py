@@ -1,0 +1,196 @@
+"""Empirical tile-plan autotuning: measure, persist, replay.
+
+The paper reconfigures the engine per layer in one clock from a precomputed
+configuration word (Sec. III-B); the analytical model that *chooses* that
+word is offline.  This package is the TPU twin of that split:
+
+* :mod:`repro.tuning.search` — offline/warmup-time measurement: benchmark
+  the model's top tile candidates on the real Pallas kernels,
+* :mod:`repro.tuning.cache` — the configuration-word store: a versioned
+  JSON cache keyed by ``(op_kind, m, k, n, dtype, backend)``,
+* this module — the process-wide policy (``model`` | ``cached`` |
+  ``autotune``) that :func:`repro.core.elastic.choose_tiles` defers to when
+  callers don't pass an explicit ``mode``.
+
+Wiring: ``launch/serve.py --autotune --tile-cache plans.json`` warms the
+cache once; later runs pass ``--tile-cache`` alone and replay the measured
+winners with zero measurement cost.  ``KRAKEN_TILE_MODE`` /
+``KRAKEN_TILE_CACHE`` set the same knobs environment-wide.
+"""
+
+from __future__ import annotations
+
+import os
+
+from repro.core.elastic import TileConfig, model_best
+from repro.tuning.cache import (CACHE_PATH_ENV, CACHE_VERSION, TileCache,
+                                cache_key, default_cache_path)
+from repro.tuning.search import (autotune_conv, autotune_gemm, backend_name,
+                                 benchmark_candidates, select_candidates,
+                                 time_gemm_candidate)
+
+__all__ = [
+    "TileCache", "TileConfig", "CACHE_VERSION", "CACHE_PATH_ENV",
+    "cache_key", "default_cache_path", "autotune_gemm", "autotune_conv",
+    "autotune_cells", "warm_cells", "backend_name", "benchmark_candidates",
+    "select_candidates", "time_gemm_candidate", "get_tile_mode",
+    "set_tile_mode", "get_tile_cache", "set_tile_cache", "resolve_tiles",
+]
+
+TILE_MODE_ENV = "KRAKEN_TILE_MODE"
+_VALID_MODES = ("model", "cached", "autotune")
+
+# Above this many MACs, interpret-mode measurement of a single candidate is
+# minutes-to-hours on a CPU backend: off-TPU the autotuner falls back to the
+# model pick for such cells (with a log line) instead of stalling the launch.
+INTERPRET_MACS_CAP = 1 << 24
+
+_IN_BYTES_DTYPE = {1: "int8", 2: "bfloat16", 4: "float32"}
+
+
+def dtype_name_for(in_bytes: int) -> str:
+    """Default cache-key dtype when the caller has no array in hand —
+    chosen so it agrees with what the serve/train warmers write for the
+    common configs (bf16 compute = 2 bytes)."""
+    return _IN_BYTES_DTYPE.get(in_bytes, "float32")
+
+_mode: str | None = None          # resolved lazily so env changes in tests work
+_cache: TileCache | None = None   # in-process memoized cache instance
+
+
+def get_tile_mode() -> str:
+    """The process-wide tile-selection mode (see module docstring)."""
+    if _mode is not None:
+        return _mode
+    env = os.environ.get(TILE_MODE_ENV, "model")
+    return env if env in _VALID_MODES else "model"
+
+
+def set_tile_mode(mode: str | None) -> None:
+    """Set (or with ``None``, reset to env/default) the process-wide mode."""
+    global _mode
+    if mode is not None and mode not in _VALID_MODES:
+        raise ValueError(f"tile mode must be one of {_VALID_MODES}, "
+                         f"got {mode!r}")
+    _mode = mode
+
+
+def get_tile_cache() -> TileCache:
+    """The process-wide cache instance (memoized; honors KRAKEN_TILE_CACHE)."""
+    global _cache
+    if _cache is None:
+        _cache = TileCache()
+    return _cache
+
+
+def set_tile_cache(path_or_cache: str | TileCache | None) -> TileCache:
+    """Point the process at a cache file (or instance); returns it."""
+    global _cache
+    if isinstance(path_or_cache, TileCache) or path_or_cache is None:
+        _cache = path_or_cache if path_or_cache is not None else TileCache()
+    else:
+        _cache = TileCache(path=path_or_cache)
+    return _cache
+
+
+def resolve_tiles(m: int, k: int, n: int, *, mode: str, in_bytes: int = 2,
+                  vmem_budget: int | None = None, op_kind: str = "gemm",
+                  dtype_name: str | None = None) -> TileConfig:
+    """Back end of ``choose_tiles(mode="cached"|"autotune")``.
+
+    ``cached``: cache hit wins; miss falls back to the analytical model
+    (recording the miss, so serving dashboards can see cold cells).
+    ``autotune``: miss triggers a measurement via :func:`autotune_gemm`.
+
+    The candidate lattice is enumerated lazily — only on a miss — under the
+    caller's ``vmem_budget``, so the measured (or modeled) fallback is drawn
+    from the same feasible set the caller would have used, at zero cost on
+    the warm path.
+    """
+    from repro.core import elastic
+    cache = get_tile_cache()
+    dtype_name = dtype_name or dtype_name_for(in_bytes)
+    vmem_budget = elastic.VMEM_BUDGET if vmem_budget is None else vmem_budget
+
+    def candidates():
+        return elastic.enumerate_tiles(m, k, n, in_bytes=in_bytes,
+                                       vmem_budget=vmem_budget)
+
+    if mode == "cached":
+        hit = cache.get(cache_key(op_kind, m, k, n, dtype_name,
+                                  backend_name()))
+        return hit if hit is not None else model_best(candidates())
+    # autotune: delegate the hit check to autotune_gemm (one lookup, one
+    # miss count); the budget-constrained enumeration is handed through so
+    # the measured winner comes from the same feasible set.
+    key = cache_key(op_kind, m, k, n, dtype_name, backend_name())
+    if cache.peek(key) is None:
+        return autotune_gemm(m, k, n, in_bytes=in_bytes,
+                             dtype_name=dtype_name, op_kind=op_kind,
+                             candidates=candidates(), cache=cache)
+    return autotune_gemm(m, k, n, in_bytes=in_bytes, dtype_name=dtype_name,
+                         op_kind=op_kind, cache=cache)
+
+
+def autotune_cells(cells, *, cache: TileCache | None = None,
+                   dtype_name: str | None = None,
+                   in_bytes: int | None = None, top_n: int = 4, reps: int = 3,
+                   log=None):
+    """Warm the cache for a list of :class:`repro.core.unified.GemmCell`.
+
+    Returns ``[(cell, TileConfig, status)]`` with status ``"hit"`` (plan came
+    straight from the persisted cache — the second run of a warmed server
+    reports all-hits), ``"tuned"`` (measured and persisted this call), or
+    ``"skipped"`` (over the interpret-mode size cap off-TPU: the model pick
+    is used, nothing is persisted).
+
+    Every GEMM-shaped cell kind (conv-as-im2col, fc, matmul, attention
+    score/context) runs the same ``kraken_gemm`` kernel, so they share the
+    ``"gemm"`` key namespace — the uniformity thesis applied to the cache:
+    identical (m, k, n) means identical measurement, whatever the layer kind.
+    Only the direct-dataflow conv kernel (``op_kind="conv_direct"``) has its
+    own namespace.
+    """
+    if cache is None:
+        cache = get_tile_cache()
+    # Key and measure in the model's compute dtype (cfg.dtype), not a
+    # backend-derived guess: the serving hot path looks plans up under
+    # a.dtype.name, and warmup must write the keys it will read.
+    if dtype_name is None:
+        dtype_name = "bfloat16" if backend_name() == "tpu" else "float32"
+    out = []
+    for cell in cells:
+        key = cache_key("gemm", cell.m, cell.k, cell.n, dtype_name,
+                        backend_name())
+        was_hit = cache.peek(key) is not None
+        cfg = autotune_gemm(cell.m, cell.k, cell.n, in_bytes=in_bytes,
+                            dtype_name=dtype_name, op_kind="gemm",
+                            top_n=top_n, reps=reps, cache=cache, log=log)
+        status = ("hit" if was_hit
+                  else "tuned" if cache.peek(key) is not None
+                  else "skipped")
+        out.append((cell, cfg, status))
+    return out
+
+
+def warm_cells(cells, *, dtype_name: str | None = None,
+               cache: TileCache | None = None, log=None,
+               verbose: bool = True, label: str = "cells"):
+    """Warm the cache for ``cells`` and narrate the result — the shared
+    launcher-side warmup used by ``serve --autotune`` and ``train
+    --autotune``.  Returns the ``autotune_cells`` results."""
+    results = autotune_cells(cells, cache=cache, dtype_name=dtype_name)
+    if log is not None:
+        hits = sum(1 for _, _, s in results if s == "hit")
+        skipped = sum(1 for _, _, s in results if s == "skipped")
+        if verbose:
+            for cell, plan, status in results:
+                log(f"tile-cache {status:<7} "
+                    f"{cell.name:<18} m={cell.m:<6} k={cell.k:<6} "
+                    f"n={cell.n:<6} "
+                    f"-> ({plan.bm},{plan.bk},{plan.bn})/{plan.schedule}")
+        log(f"tile-cache: {hits}/{len(results)} {label} hit"
+            + (" — fully warm" if hits == len(results) else
+               f" ({len(results) - hits - skipped} tuned, {skipped} skipped "
+               f"this run)"))
+    return results

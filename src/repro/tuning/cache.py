@@ -1,0 +1,172 @@
+"""Persistent tile-plan cache: measured winners, keyed per GEMM cell.
+
+The cache turns one empirical autotuning pass into a reusable artifact — a
+serving run warms it once (``repro.launch.serve --autotune``) and every later
+run replays the measured winners with zero measurement cost (``--tile-cache``
+alone, i.e. ``mode="cached"``).  This is the software form of the paper's
+one-clock reconfiguration: the per-layer configuration word is looked up, not
+recomputed.
+
+Schema (DESIGN.md §Autotuner):
+
+* file: one JSON object ``{"version": 1, "entries": {key: entry}}``,
+* key: ``"<op_kind>:m<m>:k<k>:n<n>:<dtype>:<backend>"`` — the full identity
+  of one tuned cell (``backend`` because a CPU-interpret measurement must
+  never masquerade as a TPU one),
+* entry: the winning plan (``bm/bk/bn/schedule`` plus the model's
+  utilization/vmem/hbm numbers) with measurement metadata
+  (``measured_us``, ``model_us`` ranking context, ``candidates_timed``).
+
+Corrupted files and version mismatches are ignored with a warning — a stale
+cache must never take down a serving job.  Writes are atomic (tmp + rename)
+so concurrent warmers cannot tear the file.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import warnings
+
+from repro.core.elastic import TileConfig
+
+CACHE_VERSION = 1
+
+# Environment override for the cache location; the CLI ``--tile-cache`` flag
+# and explicit TileCache(path=...) take precedence.
+CACHE_PATH_ENV = "KRAKEN_TILE_CACHE"
+
+
+def cache_key(op_kind: str, m: int, k: int, n: int, dtype_name: str,
+              backend: str) -> str:
+    """The identity of one tuned cell (see schema above)."""
+    return f"{op_kind}:m{m}:k{k}:n{n}:{dtype_name}:{backend}"
+
+
+def config_to_entry(cfg: TileConfig, *, measured_us: float | None = None,
+                    extra: dict | None = None) -> dict:
+    entry = dataclasses.asdict(cfg)
+    if measured_us is not None:
+        entry["measured_us"] = measured_us
+    if extra:
+        entry.update(extra)
+    return entry
+
+
+def entry_to_config(entry: dict) -> TileConfig:
+    return TileConfig(
+        bm=int(entry["bm"]), bk=int(entry["bk"]), bn=int(entry["bn"]),
+        schedule=str(entry["schedule"]),
+        utilization=float(entry["utilization"]),
+        vmem_bytes=int(entry["vmem_bytes"]),
+        hbm_words=int(entry["hbm_words"]),
+    )
+
+
+def default_cache_path() -> str | None:
+    return os.environ.get(CACHE_PATH_ENV) or None
+
+
+class TileCache:
+    """Versioned JSON store of measured tile plans, with hit/miss counters.
+
+    ``path=None`` keeps the cache in-process only (useful for tests and for
+    autotuning without persistence).  ``load()`` is called by the
+    constructor; ``save()`` must be called explicitly (the autotuner saves
+    after every newly tuned cell so a crashed warmup loses at most one
+    measurement).
+    """
+
+    def __init__(self, path: str | None = None):
+        self.path = path if path is not None else default_cache_path()
+        self.entries: dict[str, dict] = {}
+        self.hits = 0
+        self.misses = 0
+        if self.path and os.path.isdir(self.path):
+            warnings.warn(f"tile cache path {self.path!r} is a directory; "
+                          "persistence disabled", stacklevel=2)
+            self.path = None
+        if self.path:
+            self.load()
+
+    # -- persistence --------------------------------------------------------
+
+    def load(self) -> None:
+        if not self.path or not os.path.exists(self.path):
+            return
+        try:
+            with open(self.path) as f:
+                blob = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            warnings.warn(f"tile cache {self.path!r} unreadable ({e}); "
+                          "starting empty", stacklevel=2)
+            return
+        if not isinstance(blob, dict) or blob.get("version") != CACHE_VERSION:
+            warnings.warn(
+                f"tile cache {self.path!r} has version "
+                f"{blob.get('version') if isinstance(blob, dict) else '?'} "
+                f"(want {CACHE_VERSION}); ignoring it", stacklevel=2)
+            return
+        entries = blob.get("entries")
+        if not isinstance(entries, dict):
+            warnings.warn(f"tile cache {self.path!r} malformed entries; "
+                          "starting empty", stacklevel=2)
+            return
+        self.entries = entries
+
+    def save(self) -> None:
+        if not self.path:
+            return
+        blob = {"version": CACHE_VERSION, "entries": self.entries}
+        tmp = None
+        try:
+            d = os.path.dirname(os.path.abspath(self.path))
+            os.makedirs(d, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=d, prefix=".tile_cache.")
+            with os.fdopen(fd, "w") as f:
+                json.dump(blob, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except OSError as e:
+            # Persistence is best-effort: a bad path or full disk must not
+            # take down the job that was only trying to remember its plans.
+            if tmp is not None and os.path.exists(tmp):
+                os.unlink(tmp)
+            warnings.warn(f"tile cache {self.path!r} not saved ({e}); "
+                          "continuing without persistence", stacklevel=2)
+
+    # -- lookup -------------------------------------------------------------
+
+    def get(self, key: str) -> TileConfig | None:
+        entry = self.entries.get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        try:
+            cfg = entry_to_config(entry)
+        except (KeyError, TypeError, ValueError):
+            warnings.warn(f"tile cache entry {key!r} malformed; ignoring",
+                          stacklevel=2)
+            self.misses += 1
+            return None
+        self.hits += 1
+        return cfg
+
+    def peek(self, key: str) -> dict | None:
+        """Raw entry without touching the hit/miss counters."""
+        return self.entries.get(key)
+
+    def put(self, key: str, cfg: TileConfig, *,
+            measured_us: float | None = None,
+            extra: dict | None = None) -> None:
+        self.entries[key] = config_to_entry(cfg, measured_us=measured_us,
+                                            extra=extra)
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    @property
+    def stats(self) -> str:
+        return (f"{self.hits} hits, {self.misses} misses, "
+                f"{len(self.entries)} entries")

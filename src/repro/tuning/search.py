@@ -1,0 +1,262 @@
+"""Empirical tile search: time real kernels, keep the measured winner.
+
+The static model in :mod:`repro.core.elastic` ranks tile candidates by
+closed-form utilization and modeled HBM traffic — the paper's eq. 19
+reasoning.  MPNA and Chain-NN both document how such analytical rankings
+diverge from measured performance once a real memory system is involved, so
+this module closes the loop: it takes the model's top candidates (both
+schedules) and runs each through the *actual* ``kraken_gemm`` /
+``kraken_conv2d_direct`` Pallas kernels with warmup and
+``block_until_ready``, keeping the fastest.
+
+On TPU the kernels run natively; elsewhere they run in Pallas interpret
+mode, which still exercises the genuine grid/BlockSpec structure per
+candidate (the cache records the backend so measurements never leak across
+substrates — see :mod:`repro.tuning.cache`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+
+import numpy as np
+
+from repro.core import elastic
+from repro.core.elastic import TileConfig
+from repro.tuning import cache as tcache
+
+
+def _on_tpu() -> bool:
+    from repro.kernels import ops
+    return ops._on_tpu()
+
+
+def backend_name() -> str:
+    import jax
+    b = jax.default_backend()
+    return b if b == "tpu" else f"{b}-interpret"
+
+
+@dataclasses.dataclass(frozen=True)
+class Timing:
+    config: TileConfig
+    us: float              # median wall-clock microseconds per call
+
+
+def shortlist(candidates: list[TileConfig], top_n: int = 4) -> list[TileConfig]:
+    """Model-guided shortlist: top-N candidates *per schedule*.
+
+    Taking the top-N of each schedule (rather than globally) guarantees the
+    measurement always gets to arbitrate the weight-stationary vs
+    output-stationary question — the one the static model is least equipped
+    to answer, since it prices a VMEM-resident accumulator at zero.
+    """
+    ranked = sorted(candidates, key=lambda c: (c.utilization, -c.hbm_words),
+                    reverse=True)
+    out: list[TileConfig] = []
+    per_sched: dict[str, int] = {}
+    for cfg in ranked:
+        if per_sched.get(cfg.schedule, 0) >= top_n:
+            continue
+        per_sched[cfg.schedule] = per_sched.get(cfg.schedule, 0) + 1
+        out.append(cfg)
+    return out
+
+
+def select_candidates(m: int, k: int, n: int, *, in_bytes: int = 2,
+                      top_n: int = 4) -> list[TileConfig]:
+    """Enumerate the model's candidate lattice and shortlist it."""
+    return shortlist(elastic.enumerate_tiles(m, k, n, in_bytes=in_bytes),
+                     top_n)
+
+
+def run_gemm_candidate(a, b, cfg: TileConfig, *, interpret: bool):
+    """One ``kraken_gemm`` launch under candidate ``cfg``.
+
+    Pads and slices with the hot path's own helper (``ops._pad_to``) so the
+    measurement executes exactly what ``kraken_matmul`` would.
+    """
+    from repro.kernels.kraken_gemm import kraken_gemm
+    from repro.kernels.ops import _pad_to
+    m, _ = a.shape
+    _, n = b.shape
+    ap = _pad_to(a, (cfg.bm, cfg.bk))
+    bp = _pad_to(b, (cfg.bk, cfg.bn))
+    bk = ap.shape[1] if cfg.schedule == "weight_stationary" else cfg.bk
+    out = kraken_gemm(ap, bp, bm=cfg.bm, bk=bk, bn=cfg.bn,
+                      schedule=cfg.schedule, interpret=interpret)
+    return out[:m, :n]
+
+
+def time_gemm_candidate(m: int, k: int, n: int, cfg: TileConfig, *,
+                        dtype=None, reps: int = 3, warmup: int = 1,
+                        interpret: bool | None = None,
+                        seed: int = 0) -> float:
+    """Median microseconds per call for one candidate, properly synced."""
+    import jax
+    import jax.numpy as jnp
+    if interpret is None:
+        interpret = not _on_tpu()
+    dtype = dtype or (jnp.bfloat16 if _on_tpu() else jnp.float32)
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(m, k)), dtype)
+    b = jnp.asarray(rng.normal(size=(k, n)), dtype)
+    f = jax.jit(lambda a, b: run_gemm_candidate(a, b, cfg,
+                                                interpret=interpret))
+    for _ in range(max(warmup, 1)):        # compile + cold caches
+        jax.block_until_ready(f(a, b))
+    samples = []
+    for _ in range(max(reps, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(a, b))
+        samples.append((time.perf_counter() - t0) * 1e6)
+    return statistics.median(samples)
+
+
+def benchmark_candidates(m: int, k: int, n: int,
+                         candidates: list[TileConfig], *,
+                         dtype=None, reps: int = 3,
+                         warmup: int = 1,
+                         interpret: bool | None = None) -> list[Timing]:
+    """Time every candidate; returns timings sorted fastest-first."""
+    timings = [Timing(cfg, time_gemm_candidate(
+        m, k, n, cfg, dtype=dtype, reps=reps, warmup=warmup,
+        interpret=interpret)) for cfg in candidates]
+    return sorted(timings, key=lambda t: t.us)
+
+
+def autotune_gemm(m: int, k: int, n: int, *, in_bytes: int | None = None,
+                  dtype_name: str | None = None,
+                  op_kind: str = "gemm",
+                  top_n: int = 4, reps: int = 3,
+                  candidates: list[TileConfig] | None = None,
+                  cache: tcache.TileCache | None = None,
+                  log=None) -> TileConfig:
+    """Measured tile selection for one GEMM cell, with cache write-through.
+
+    Cache hit: return the persisted winner (no measurement).  Miss: shortlist
+    (from ``candidates`` if the caller already enumerated them — e.g. under a
+    non-default VMEM budget — else from the model's default lattice), time
+    each on the real kernel, persist the fastest (alongside the model's own
+    pick, so ``autotune_report`` can show where measurement overturned the
+    model) and return it.
+
+    ``in_bytes`` defaults to the itemsize of ``dtype_name`` so the VMEM
+    feasibility filter prices tiles in the dtype actually being measured
+    (an fp32 tile is twice a bf16 one).
+    """
+    import jax.numpy as jnp
+    from repro import tuning
+    if cache is None:
+        cache = tcache.TileCache(path=None)
+    dtype_name = dtype_name or ("bfloat16" if _on_tpu() else "float32")
+    if in_bytes is None:
+        in_bytes = jnp.dtype(dtype_name).itemsize
+    key = tcache.cache_key(op_kind, m, k, n, dtype_name, backend_name())
+    hit = cache.get(key)
+    if hit is not None:
+        return hit
+    if candidates is None:
+        candidates = elastic.enumerate_tiles(m, k, n, in_bytes=in_bytes)
+    candidates = shortlist(candidates, top_n)
+    modeled = elastic.model_best(candidates)
+    if not _on_tpu() and m * k * n > tuning.INTERPRET_MACS_CAP:
+        # Production-sized cell on an interpret backend: a single candidate
+        # run would take minutes to hours.  Fall back to the model pick
+        # (uncached, so a real TPU run still gets to measure it).
+        if log is not None:
+            log(f"[autotune] {key}: skipped — {m * k * n:.2e} MACs exceeds "
+                f"the interpret-mode cap; using the model pick (warm this "
+                f"cell on TPU)")
+        return modeled
+    timings = benchmark_candidates(m, k, n, candidates, reps=reps,
+                                   dtype=jnp.dtype(dtype_name).type)
+    winner = timings[0]
+    cache.put(key, winner.config, measured_us=winner.us, extra={
+        "model_pick": dataclasses.asdict(modeled),
+        "candidates_timed": len(timings),
+        "agrees_with_model": _same_plan(winner.config, modeled),
+    })
+    cache.save()
+    if log is not None:
+        log(f"[autotune] {key}: winner ({winner.config.bm},{winner.config.bk},"
+            f"{winner.config.bn})/{winner.config.schedule} "
+            f"{winner.us:.0f}us over {len(timings)} candidates "
+            f"(model {'agrees' if _same_plan(winner.config, modeled) else 'overruled'})")
+    return winner.config
+
+
+def _same_plan(a: TileConfig, b: TileConfig) -> bool:
+    return (a.bm, a.bk, a.bn, a.schedule) == (b.bm, b.bk, b.bn, b.schedule)
+
+
+def conv_cache_key(x_shape, k_shape,
+                   stride: tuple[int, int]) -> tuple[str, int, int, int]:
+    """The ``conv_direct`` cache key for a (pre-padded) conv geometry.
+
+    Shared by :func:`autotune_conv` and the kernel-side lookup in
+    ``kraken_conv._resolve_bco`` so the key derivation cannot drift.
+    Returns ``(key, m_eq, k_eq, c_o)`` — the im2col-equivalent GEMM dims.
+    """
+    n, h, w, c_i = x_shape
+    k_h, k_w, _, c_o = k_shape
+    oh = (h - k_h) // stride[0] + 1
+    ow = (w - k_w) // stride[1] + 1
+    m_eq, k_eq = n * oh * ow, c_i * k_h * k_w
+    key = tcache.cache_key("conv_direct", m_eq, k_eq, c_o, "float32",
+                           backend_name())
+    return key, m_eq, k_eq, c_o
+
+
+def autotune_conv(x_shape: tuple[int, int, int, int],
+                  k_shape: tuple[int, int, int, int], *,
+                  stride: tuple[int, int] = (1, 1),
+                  reps: int = 2,
+                  cache: tcache.TileCache | None = None,
+                  log=None) -> int:
+    """Measured ``bco`` selection for the direct Kraken-dataflow conv kernel.
+
+    Keyed by the conv's im2col-equivalent GEMM geometry under
+    ``op_kind="conv_direct"``; the winning ``bco`` is recorded in the entry's
+    ``bn`` field (the output-channel tile is the conv analogue of bn).
+    Returns the winning ``bco``.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.kraken_conv import kraken_conv2d_direct
+    if cache is None:
+        cache = tcache.TileCache(path=None)
+    key, m_eq, k_eq, c_o = conv_cache_key(x_shape, k_shape, stride)
+    hit = cache.get(key)
+    if hit is not None:
+        return hit.bn
+    interpret = not _on_tpu()
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=x_shape), jnp.float32)
+    kern = jnp.asarray(rng.normal(size=k_shape), jnp.float32)
+    cand_bco = sorted({min(elastic.round_up(c_o, 128), c)
+                       for c in (128, 256, 512)})
+    best_bco, best_us = cand_bco[0], float("inf")
+    for bco in cand_bco:
+        f = jax.jit(lambda x, kern, bco=bco: kraken_conv2d_direct(
+            x, kern, stride=stride, bco=bco, interpret=interpret))
+        jax.block_until_ready(f(x, kern))
+        samples = []
+        for _ in range(max(reps, 1)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(x, kern))
+            samples.append((time.perf_counter() - t0) * 1e6)
+        us = statistics.median(samples)
+        if us < best_us:
+            best_bco, best_us = bco, us
+    cfg = elastic._make_config(m_eq, k_eq, c_o, elastic.SUBLANE,
+                               elastic.round_up(k_eq, elastic.MXU_DIM),
+                               best_bco, "output_stationary", 4)
+    cache.put(key, cfg, measured_us=best_us,
+              extra={"candidates_timed": len(cand_bco), "kind": "conv_bco"})
+    cache.save()
+    if log is not None:
+        log(f"[autotune] {key}: bco={best_bco} {best_us:.0f}us")
+    return best_bco

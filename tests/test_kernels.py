@@ -139,3 +139,41 @@ def test_elastic_prefers_weight_stationary_when_it_fits():
 def test_tile_utilization_exact():
     assert elastic.tile_utilization(256, 256, 256, 128, 128, 128) == 1.0
     assert elastic.tile_utilization(129, 128, 128, 128, 128, 128) == pytest.approx(129 / 256)
+
+
+# ---------------------------------------------------------------------------
+# candidate enumeration (the autotuner's search space)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 8192), k=st.integers(1, 8192), n=st.integers(1, 8192))
+def test_enumerate_tiles_invariants(m, k, n):
+    cands = elastic.enumerate_tiles(m, k, n)
+    assert cands, "candidate list must never be empty"
+    assert len({(c.bm, c.bk, c.bn, c.schedule) for c in cands}) == len(cands)
+    for c in cands:
+        assert c.schedule in ("weight_stationary", "output_stationary")
+        assert 0 < c.utilization <= 1.0
+        if c.schedule == "weight_stationary":
+            assert c.bk >= k  # full-K residency (padded up)
+    # choose_tiles is exactly the model-best of the enumeration.
+    assert elastic.model_best(cands) == elastic.choose_tiles(m, k, n,
+                                                             mode="model")
+
+
+@settings(max_examples=5, deadline=None)
+@given(m=st.integers(1, 96), k=st.integers(1, 96), n=st.integers(1, 96))
+def test_kraken_gemm_parity_over_enumerated_candidates(m, k, n):
+    """Every candidate the autotuner may time must be numerically correct
+    under both schedules (interpret-mode kraken_gemm vs the ref oracle)."""
+    from repro.tuning import search
+    rng = np.random.default_rng(m * 131 + k * 7 + n)
+    a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    want = ref.matmul(a, b)
+    cands = elastic.enumerate_tiles(m, k, n, in_bytes=4)
+    assert {c.schedule for c in cands} == {"weight_stationary",
+                                           "output_stationary"}
+    for cfg in cands:
+        got = search.run_gemm_candidate(a, b, cfg, interpret=True)
+        assert _rel_err(got, want) < 1e-5, (cfg, m, k, n)
