@@ -65,7 +65,7 @@ def main(argv=None) -> None:
         tuning.set_tile_cache(args.tile_cache)
         tuning.set_tile_mode(mode)
 
-    from benchmarks import kernels_bench, paper_tables
+    from benchmarks import kernels_bench, paper_tables, serving_bench
     sections = [
         paper_tables.table1_network_stats,
         paper_tables.table5_conv_comparison,
@@ -78,6 +78,7 @@ def main(argv=None) -> None:
         kernels_bench.swa_bench,
         kernels_bench.dataflow_cycle_bench,
         kernels_bench.decode_attention_bench,
+        serving_bench.serving_bench,
         roofline_summary,
     ]
     print("name,us_per_call,derived")

@@ -1,8 +1,12 @@
-"""Serve a small model with batched requests through the continuous-batching
-server loop (prefill + cached decode, slot refill on completion).
+"""Serve a small model through the paged serving engine (block/paged KV
+cache, length-bucketed batched prefill, FIFO admission, continuous decode).
 
     PYTHONPATH=src python examples/serve_lm.py
-    PYTHONPATH=src python examples/serve_lm.py --arch mixtral-8x22b  # smoke MoE
+    PYTHONPATH=src python examples/serve_lm.py --arch mixtral-8x22b  # MoE+SWA
+    PYTHONPATH=src python examples/serve_lm.py --dense               # legacy
+
+Mixed prompt lengths land in different buckets; ``--repeat 2`` proves the
+warm engine compiles nothing new on the second pass.
 """
 
 import sys
@@ -15,8 +19,8 @@ def main(argv=None):
     if not any(a.startswith("--arch") for a in argv):
         argv = ["--arch", "yi-6b"] + argv
     return serve.main(argv + ["--smoke", "--requests", "6", "--slots", "3",
-                              "--prompt-len", "10", "--max-new", "12",
-                              "--cache-len", "64"])
+                              "--prompt-lens", "5,9,12", "--max-new", "12",
+                              "--cache-len", "64", "--page-size", "8"])
 
 
 if __name__ == "__main__":

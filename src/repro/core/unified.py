@@ -202,20 +202,25 @@ def tunable_cells(cells: list[GemmCell]) -> list[GemmCell]:
     return [c for c in cells if c.kind in KRAKEN_GEMM_KINDS]
 
 
-def serving_cells(cfg, *, slots: int, prompt_len: int,
-                  cache_len: int) -> list[GemmCell]:
-    """The serving work-list: per-slot prefill cells + batched decode cells.
+def serving_cells(cfg, *, slots: int, prompt_len: int, cache_len: int,
+                  prefill_batch: int = 1,
+                  bucket_lens: list[int] | None = None) -> list[GemmCell]:
+    """The serving work-list: prefill cells + batched decode cells.
 
-    Exactly the two jitted programs ``launch/serve.py`` runs — a
-    single-sequence prefill of ``prompt_len`` tokens, and a ``slots``-wide
-    one-token decode against a ``cache_len`` KV cache.  Restricted to the
-    cells the tile path can actually replay (:data:`KRAKEN_GEMM_KINDS`) and
-    deduplicated by (m, k, n) so the autotuner measures each unique cell
-    once.
+    Exactly the jitted programs the serving loop runs — one prefill per
+    prompt-length bucket (``bucket_lens``; default just ``prompt_len``) at
+    ``prefill_batch`` sequences wide, and a ``slots``-wide one-token decode
+    against a ``cache_len`` KV cache.  Restricted to the cells the tile
+    path can actually replay (:data:`KRAKEN_GEMM_KINDS`) and deduplicated
+    by (m, k, n) so the autotuner measures each unique cell once.
     """
-    cells = (arch_cells(cfg, batch=1, seq_q=prompt_len, name="prefill")
-             + arch_cells(cfg, batch=slots, seq_q=1, seq_kv=cache_len,
-                          name="decode"))
+    lens = sorted(set(bucket_lens)) if bucket_lens else [prompt_len]
+    cells: list[GemmCell] = []
+    for blen in lens:
+        cells += arch_cells(cfg, batch=prefill_batch, seq_q=blen,
+                            name=f"prefill_{blen}")
+    cells += arch_cells(cfg, batch=slots, seq_q=1, seq_kv=cache_len,
+                        name="decode")
     return dedup_cells(tunable_cells(cells))
 
 

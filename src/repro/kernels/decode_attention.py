@@ -54,7 +54,7 @@ def _kernel(q_ref, k_ref, v_ref, ksc_ref, vsc_ref, kvpos_ref, qpos_ref,
         q, k, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32) * scale   # [G, BS]
 
-    kv_pos = kvpos_ref[...]                           # [BS]
+    kv_pos = kvpos_ref[0]                             # [BS] (this batch row)
     q_pos = qpos_ref[0]
     mask = (kv_pos >= 0) & (kv_pos <= q_pos)
     if window:
@@ -90,8 +90,10 @@ def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     """One-token GQA attention over a (possibly int8) KV cache.
 
     q: [B, H, D]; k/v: [B, KV, S, D] (int8 if k_scale/v_scale given,
-    scales [B, KV, S] f32); kv_pos: [S] absolute positions (-2^30 empty);
-    q_pos: scalar.  Returns [B, H, D].
+    scales [B, KV, S] f32); kv_pos: [S] shared or [B, S] per-slot absolute
+    positions (-2^30 empty); q_pos: scalar, or [B] per-slot positions
+    (continuous batching: each slot masks at its own length).
+    Returns [B, H, D].
     """
     b, h, d = q.shape
     _, kvh, s, _ = k.shape
@@ -101,11 +103,18 @@ def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     bs = min(block_s, s)
     nblk = ceil_div(s, bs)
     s_pad = nblk * bs
+    # Positions are normalized to per-slot layout ([B, S] / [B]); the shared
+    # forms broadcast — one kernel signature serves both.
+    kv_pos = jnp.asarray(kv_pos, jnp.int32)
+    kv_pos = jnp.broadcast_to(kv_pos.reshape(-1, s), (b, s))
+    qpos_arr = jnp.broadcast_to(
+        jnp.asarray(q_pos, jnp.int32).reshape(-1), (b,))
     if s_pad != s:
         pad = [(0, 0), (0, 0), (0, s_pad - s), (0, 0)]
         k = jnp.pad(k, pad)
         v = jnp.pad(v, pad)
-        kv_pos = jnp.pad(kv_pos, (0, s_pad - s), constant_values=-(2 ** 30))
+        kv_pos = jnp.pad(kv_pos, [(0, 0), (0, s_pad - s)],
+                         constant_values=-(2 ** 30))
         if quantized:
             k_scale = jnp.pad(k_scale, [(0, 0), (0, 0), (0, s_pad - s)])
             v_scale = jnp.pad(v_scale, [(0, 0), (0, 0), (0, s_pad - s)])
@@ -114,8 +123,6 @@ def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         v_scale = jnp.ones((b, kvh, s_pad), jnp.float32)
 
     qg = q.reshape(b, kvh, g, d)
-    qpos_arr = jnp.broadcast_to(jnp.asarray(q_pos, jnp.int32).reshape(1),
-                                (1,))
 
     from jax.experimental.pallas import tpu as pltpu
     grid = (b, kvh, nblk)
@@ -129,8 +136,8 @@ def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
             pl.BlockSpec((1, 1, bs, d), lambda i, j, sb: (i, j, sb, 0)),
             pl.BlockSpec((1, 1, bs), lambda i, j, sb: (i, j, sb)),
             pl.BlockSpec((1, 1, bs), lambda i, j, sb: (i, j, sb)),
-            pl.BlockSpec((bs,), lambda i, j, sb: (sb,)),
-            pl.BlockSpec((1,), lambda i, j, sb: (0,)),
+            pl.BlockSpec((1, bs), lambda i, j, sb: (i, sb)),
+            pl.BlockSpec((1,), lambda i, j, sb: (i,)),
         ],
         out_specs=pl.BlockSpec((1, 1, g, d), lambda i, j, sb: (i, j, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),
@@ -140,7 +147,7 @@ def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
             pltpu.VMEM((g, d), jnp.float32),
         ],
         interpret=interpret,
-    )(qg, k, v, k_scale, v_scale, kv_pos.astype(jnp.int32), qpos_arr)
+    )(qg, k, v, k_scale, v_scale, kv_pos, qpos_arr)
     return out.reshape(b, h, d)
 
 

@@ -66,6 +66,7 @@ def decode_attention(q, k, v, *, kv_pos, q_pos, k_scale=None, v_scale=None,
     a (possibly int8-quantized) KV cache, exact fp32 math.
 
     q: [B, H, D]; k/v: [B, KV, S, D]; scales: [B, KV, S] or None.
+    kv_pos: [S] shared or [B, S] per-slot; q_pos: scalar or [B] per-slot.
     """
     b, h, d = q.shape
     kvh, s = k.shape[1], k.shape[2]
@@ -77,10 +78,12 @@ def decode_attention(q, k, v, *, kv_pos, q_pos, k_scale=None, v_scale=None,
         vf = vf * v_scale[..., None]
     qg = q.reshape(b, kvh, g, d).astype(jnp.float32)
     logits = jnp.einsum("bkgd,bksd->bkgs", qg, kf) / np.sqrt(d)
-    mask = (kv_pos >= 0) & (kv_pos <= q_pos)
+    kvp = kv_pos if jnp.ndim(kv_pos) == 2 else jnp.asarray(kv_pos)[None, :]
+    qp = jnp.reshape(q_pos, (-1, 1))                 # [B|1, 1]
+    mask = (kvp >= 0) & (kvp <= qp)
     if window:
-        mask = mask & (kv_pos > q_pos - window)
-    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+        mask = mask & (kvp > qp - window)
+    logits = jnp.where(mask[:, None, None], logits, -jnp.inf)
     p = jax.nn.softmax(logits, axis=-1)
     p = jnp.where(jnp.isnan(p), 0.0, p)
     out = jnp.einsum("bkgs,bksd->bkgd", p, vf)

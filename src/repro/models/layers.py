@@ -75,11 +75,15 @@ def norm_specs(cfg, prefix: str) -> dict[str, Spec]:
 # ---------------------------------------------------------------------------
 
 def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
-    """x: [..., S, D]; positions: [S] or broadcastable to x[..., S]."""
+    """x: [..., S, D]; positions: [S] shared across the batch, or [B, S]
+    per-slot (continuous batching: every sequence sits at its own absolute
+    position)."""
     d = x.shape[-1]
     half = d // 2
     freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
     ang = positions.astype(jnp.float32)[..., None] * freqs  # [..., S, half]
+    if positions.ndim == 2:  # [B, S, half] -> broadcast over the heads dim
+        ang = ang[:, None]
     cos, sin = jnp.cos(ang), jnp.sin(ang)
     x1, x2 = x[..., :half], x[..., half:]
     out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
@@ -167,13 +171,15 @@ def _gqa_sdpa_direct(q, k, v, *, mask_mode: str, window: int, q_pos, kv_pos) -> 
     logits = jnp.einsum("bkgqd,bksd->bkgqs", qg, k,
                         preferred_element_type=jnp.float32) / math.sqrt(d)
     if mask_mode != "none":
-        qp = q_pos[:, None] if q_pos.ndim == 1 else q_pos
-        kp = kv_pos[None, :] if kv_pos.ndim == 1 else kv_pos
+        # Positions may be shared ([Sq]/[Sk]) or per-slot ([B, Sq]/[B, Sk],
+        # continuous batching); normalize both to [B|1, Sq, Sk].
+        qp = q_pos[None, :, None] if q_pos.ndim == 1 else q_pos[:, :, None]
+        kp = kv_pos[None, None, :] if kv_pos.ndim == 1 else kv_pos[:, None, :]
         # kp >= 0 excludes empty cache slots (pos sentinel is -2^30).
         mask = (kp <= qp) & (kp >= 0)
         if window:
             mask = mask & (kp > qp - window)
-        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        logits = jnp.where(mask[:, None, None], logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgqs,bksd->bkgqd", probs.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
@@ -369,14 +375,19 @@ def _gqa_sdpa(q, k, v, *, mask_mode: str, window: int, q_pos, kv_pos) -> jax.Arr
                             q_pos=q_pos, kv_pos=kv_pos)
 
 
+POS_EMPTY = -(2 ** 30)  # pos sentinel for an empty cache slot (always masked)
+
+
 @dataclasses.dataclass
 class KVCache:
     """Decode cache for one attention layer.
 
     ``k, v``: [B, KV, S_cache, D].  ``pos``: [S_cache] token position held in
-    each slot (-2^30 for empty: always masked out).  For sliding-window
-    layers ``S_cache == window`` and slots are a ring buffer; for full
-    attention ``S_cache`` is the max context.
+    each slot (-2^30 for empty: always masked out), or [B, S_cache] when the
+    cache is built with ``per_slot=True`` — the continuous-batching layout
+    where every batch row advances at its own absolute position.  For
+    sliding-window layers ``S_cache == window`` and slots are a ring buffer;
+    for full attention ``S_cache`` is the max context.
 
     With ``cfg.kv_cache_dtype == "int8"``, ``k``/``v`` store int8 values
     with per-(batch, head, slot) symmetric scales in ``k_scale``/``v_scale``
@@ -400,37 +411,41 @@ class KVCache:
         return getattr(cfg, "kv_cache_dtype", "") == "int8"
 
     @staticmethod
-    def specs(cfg, batch: int, s_cache: int, dtype) -> "KVCache":
+    def specs(cfg, batch: int, s_cache: int, dtype, *,
+              per_slot: bool = False) -> "KVCache":
         kvh, hd = cfg.num_kv_heads, cfg.head_dim
+        pshape = (batch, s_cache) if per_slot else (s_cache,)
         if KVCache._wants_int8(cfg):
             return KVCache(
                 k=jax.ShapeDtypeStruct((batch, kvh, s_cache, hd), jnp.int8),
                 v=jax.ShapeDtypeStruct((batch, kvh, s_cache, hd), jnp.int8),
-                pos=jax.ShapeDtypeStruct((s_cache,), jnp.int32),
+                pos=jax.ShapeDtypeStruct(pshape, jnp.int32),
                 k_scale=jax.ShapeDtypeStruct((batch, kvh, s_cache), jnp.float32),
                 v_scale=jax.ShapeDtypeStruct((batch, kvh, s_cache), jnp.float32),
             )
         return KVCache(
             k=jax.ShapeDtypeStruct((batch, kvh, s_cache, hd), dtype),
             v=jax.ShapeDtypeStruct((batch, kvh, s_cache, hd), dtype),
-            pos=jax.ShapeDtypeStruct((s_cache,), jnp.int32),
+            pos=jax.ShapeDtypeStruct(pshape, jnp.int32),
         )
 
     @staticmethod
-    def init(cfg, batch: int, s_cache: int, dtype) -> "KVCache":
+    def init(cfg, batch: int, s_cache: int, dtype, *,
+             per_slot: bool = False) -> "KVCache":
         kvh, hd = cfg.num_kv_heads, cfg.head_dim
+        pshape = (batch, s_cache) if per_slot else (s_cache,)
         if KVCache._wants_int8(cfg):
             return KVCache(
                 k=jnp.zeros((batch, kvh, s_cache, hd), jnp.int8),
                 v=jnp.zeros((batch, kvh, s_cache, hd), jnp.int8),
-                pos=jnp.full((s_cache,), -(2 ** 30), jnp.int32),
+                pos=jnp.full(pshape, POS_EMPTY, jnp.int32),
                 k_scale=jnp.zeros((batch, kvh, s_cache), jnp.float32),
                 v_scale=jnp.zeros((batch, kvh, s_cache), jnp.float32),
             )
         return KVCache(
             k=jnp.zeros((batch, kvh, s_cache, hd), dtype),
             v=jnp.zeros((batch, kvh, s_cache, hd), dtype),
-            pos=jnp.full((s_cache,), -(2 ** 30), jnp.int32),
+            pos=jnp.full(pshape, POS_EMPTY, jnp.int32),
         )
 
     AXES = {"k": ("batch", "kv_heads", "kv_seq", "head_dim"),
@@ -445,9 +460,92 @@ jax.tree_util.register_dataclass(
 
 
 @dataclasses.dataclass
+class PagedKVCache:
+    """Block/paged decode cache for one attention layer (serving engine).
+
+    ``k, v``: [n_pages, KV, page_size, D] — a pool of fixed-size pages
+    shared by every serving slot.  ``pos``: [n_pages, page_size] absolute
+    token position per page entry (-2^30 = empty).  ``page_table``:
+    [n_slots, max_pages] physical page id per (slot, logical page); rows of
+    unallocated slots hold the out-of-bounds sentinel ``n_pages`` so their
+    scatter updates are dropped.  A slot's logical cache length is
+    ``max_pages * page_size``; token position ``p`` lives at logical index
+    ``p % logical_len`` (ring semantics — sliding-window layers wrap across
+    page boundaries; the position-based mask keeps attention exact).
+
+    Allocation/free of pages is host-side bookkeeping
+    (``repro.serving.paged_kv.PageAllocator``); the device only ever sees
+    gather/scatter through the table — the same program serves any mix of
+    request lengths, which is the serving-side restatement of the paper's
+    one-uniform-dataflow thesis.
+    """
+    k: jax.Array
+    v: jax.Array
+    pos: jax.Array
+    page_table: jax.Array
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[2]
+
+    @property
+    def logical_len(self) -> int:
+        return self.page_table.shape[1] * self.k.shape[2]
+
+    @property
+    def n_pages(self) -> int:
+        return self.k.shape[0]
+
+
+jax.tree_util.register_dataclass(
+    PagedKVCache, ("k", "v", "pos", "page_table"), ())
+
+
+@dataclasses.dataclass
 class AttnOutput:
     y: jax.Array
     cache: KVCache | None = None
+
+
+def _paged_decode(cfg, cache: PagedKVCache, q, k, v, *, positions, window: int):
+    """One-token decode against a paged cache: scatter the new K/V into each
+    slot's page, gather the slot's pages into a contiguous [B, KV, L, D]
+    view, attend with per-slot position masks.
+
+    ``positions`` must be per-slot [B, 1].  Unallocated slots carry the
+    out-of-bounds page sentinel in their table row, so their scatters drop
+    (``mode="drop"``) and their gathers clamp to an arbitrary real page —
+    harmless, because the engine discards their logits and their pos mask
+    never admits future reads.
+    """
+    if positions.ndim != 2:
+        raise ValueError("paged decode needs per-slot [B, 1] positions")
+    if k.shape[2] != 1:
+        raise ValueError("paged cache only serves one-token decode; prefill "
+                         "is bucketed+dense, then scattered into pages")
+    bsz = q.shape[0]
+    ps = cache.page_size
+    logical = cache.logical_len
+    pvec = positions[:, 0].astype(jnp.int32)                   # [B]
+    li = pvec % logical                                        # ring slot
+    rows = jnp.arange(bsz)
+    pp = cache.page_table[rows, li // ps]                      # [B] phys page
+    off = li % ps
+    ck = cache.k.at[pp, :, off].set(k[:, :, 0], mode="drop")
+    cv = cache.v.at[pp, :, off].set(v[:, :, 0], mode="drop")
+    cpos = cache.pos.at[pp, off].set(pvec, mode="drop")
+    new_cache = PagedKVCache(k=ck, v=cv, pos=cpos,
+                             page_table=cache.page_table)
+
+    kvh, hd = cfg.num_kv_heads, cfg.head_dim
+    kg = ck[cache.page_table]                                  # [B,MP,KV,ps,D]
+    vg = cv[cache.page_table]
+    kg = kg.transpose(0, 2, 1, 3, 4).reshape(bsz, kvh, logical, hd)
+    vg = vg.transpose(0, 2, 1, 3, 4).reshape(bsz, kvh, logical, hd)
+    posg = cpos[cache.page_table].reshape(bsz, logical)        # [B, L]
+    out = _gqa_sdpa(q, kg, vg, mask_mode="causal", window=window,
+                    q_pos=positions, kv_pos=posg)
+    return out, new_cache
 
 
 def attention(cfg, params: Params, prefix: str, x: jax.Array, *,
@@ -478,7 +576,10 @@ def attention(cfg, params: Params, prefix: str, x: jax.Array, *,
         k = rope(k, positions, cfg.rope_theta)
 
     new_cache = None
-    if cache is not None:
+    if isinstance(cache, PagedKVCache):
+        out, new_cache = _paged_decode(cfg, cache, q, k, v,
+                                       positions=positions, window=window)
+    elif cache is not None:
         s_cache = cache.k.shape[2]
         s_new = k.shape[2]
         quant = cache.quantized
@@ -488,6 +589,10 @@ def attention(cfg, params: Params, prefix: str, x: jax.Array, *,
             # Prefill: attend over the full (windowed) sequence; the cache
             # keeps the last s_cache tokens, ring-rotated so slot == pos %
             # s_cache (matching what decode's single-slot updates produce).
+            if positions.ndim != 1:
+                raise ValueError("prefill expects shared [S] positions; "
+                                 "per-slot prefill goes through the serving "
+                                 "engine's bucketed batched prefill")
             keep = min(s_new, s_cache)
             k_last = k[:, :, -keep:, :]
             v_last = v[:, :, -keep:, :]
@@ -503,15 +608,53 @@ def attention(cfg, params: Params, prefix: str, x: jax.Array, *,
                     cache.v_scale, vs_new, 0, axis=2), r, axis=2)
             ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k_last, 0, axis=2)
             cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v_last, 0, axis=2)
-            cpos = jax.lax.dynamic_update_slice_in_dim(cache.pos, p_last, 0, axis=0)
             ck = jnp.roll(ck, r, axis=2)
             cv = jnp.roll(cv, r, axis=2)
-            cpos = jnp.roll(cpos, r, axis=0)
+            if cache.pos.ndim == 2:  # per-slot layout: same ring, every row
+                cpos = jax.lax.dynamic_update_slice_in_dim(
+                    cache.pos,
+                    jnp.broadcast_to(p_last, (cache.pos.shape[0], keep)),
+                    0, axis=1)
+                cpos = jnp.roll(cpos, r, axis=1)
+            else:
+                cpos = jax.lax.dynamic_update_slice_in_dim(
+                    cache.pos, p_last, 0, axis=0)
+                cpos = jnp.roll(cpos, r, axis=0)
             new_cache = KVCache(k=ck, v=cv, pos=cpos, k_scale=ks, v_scale=vs)
             out = _gqa_sdpa(q, k, v, mask_mode="causal", window=window,
                             q_pos=positions, kv_pos=positions)
+        elif positions.ndim == 2:
+            # Per-slot decode (continuous batching): every batch row inserts
+            # its token at its *own* ring slot and masks at its own length.
+            if cache.pos.ndim != 2:
+                raise ValueError(
+                    "per-slot decode positions need a per-slot cache; build "
+                    "it with init_caches(..., per_slot_pos=True)")
+            bsz = x.shape[0]
+            pvec = positions[:, 0].astype(jnp.int32)          # [B]
+            slots = pvec % s_cache                            # [B]
+            rows = jnp.arange(bsz)
+            ks = vs = None
+            if quant:
+                k, ks_new = quantize_kv(k)
+                v, vs_new = quantize_kv(v)
+                ks = cache.k_scale.at[rows, :, slots].set(ks_new[:, :, 0])
+                vs = cache.v_scale.at[rows, :, slots].set(vs_new[:, :, 0])
+            ck = cache.k.at[rows, :, slots].set(k[:, :, 0])
+            cv = cache.v.at[rows, :, slots].set(v[:, :, 0])
+            cpos = cache.pos.at[rows, slots].set(pvec)
+            new_cache = KVCache(k=ck, v=cv, pos=cpos, k_scale=ks, v_scale=vs)
+            if quant:
+                from repro.kernels import ops as _ops
+                out = _ops.kraken_decode_attention(
+                    q[:, :, 0], ck, cv, k_scale=ks, v_scale=vs,
+                    kv_pos=cpos, q_pos=pvec, window=window)[:, :, None]
+            else:
+                out = _gqa_sdpa(q, ck, cv, mask_mode="causal", window=window,
+                                q_pos=positions, kv_pos=cpos)
         else:
-            # Decode: insert the token at its ring slot, attend over cache.
+            # Decode, lockstep shim: one shared scalar position — insert the
+            # token at its ring slot, attend over cache.
             slot = positions[0].astype(jnp.int32) % s_cache
             ks = vs = None
             if quant:

@@ -89,7 +89,9 @@ class Model:
         x = jnp.take(params["embed"], tokens, axis=0)
         if cfg.positional == "sinusoidal":
             pos = L.sinusoidal_pos_emb(positions, cfg.d_model)
-            x = x + pos[None].astype(x.dtype)
+            if positions.ndim == 1:    # shared [S] -> broadcast over batch
+                pos = pos[None]
+            x = x + pos.astype(x.dtype)
         if cfg.frontend == "audio_frames" and frontend is not None:
             x = x + frontend.astype(x.dtype)
         return sharding.shard(x, "batch", "seq", "embed")
@@ -149,15 +151,19 @@ class Model:
     def cache_len_for(self, seq_len: int) -> int:
         return seq_len
 
-    def init_caches(self, batch: int, cache_len: int, *, flat: bool = False):
+    def init_caches(self, batch: int, cache_len: int, *, flat: bool = False,
+                    per_slot_pos: bool = False, clamp_window: bool = True):
         return self.stack.cache_tree(
             batch, cache_len, _dtype(self.cfg), abstract=False,
-            n_frontend=self.cfg.num_frontend_tokens, flat=flat)
+            n_frontend=self.cfg.num_frontend_tokens, flat=flat,
+            per_slot=per_slot_pos, clamp_window=clamp_window)
 
-    def cache_specs(self, batch: int, cache_len: int, *, flat: bool = False):
+    def cache_specs(self, batch: int, cache_len: int, *, flat: bool = False,
+                    per_slot_pos: bool = False, clamp_window: bool = True):
         return self.stack.cache_tree(
             batch, cache_len, _dtype(self.cfg), abstract=True,
-            n_frontend=self.cfg.num_frontend_tokens, flat=flat)
+            n_frontend=self.cfg.num_frontend_tokens, flat=flat,
+            per_slot=per_slot_pos, clamp_window=clamp_window)
 
     def cache_axes_list(self, batch: int = 1, cache_len: int = 2, *,
                         flat: bool = False) -> list:
@@ -168,8 +174,11 @@ class Model:
             names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
             rank = len(leaf.shape)
             if "pos" in names:
-                return (("kv_seq",) if flat
-                        else ("layers", "kv_seq"))[-rank:]
+                # per-slot-pos caches carry a leading batch dim on pos
+                if flat:
+                    return ("kv_seq",) if rank == 1 else ("batch", "kv_seq")
+                return (("layers", "kv_seq") if rank == 2
+                        else ("layers", "batch", "kv_seq"))
             if rank >= (3 if flat else 4) and ("k" in names or "v" in names):
                 kv = ("batch", "kv_heads", "kv_seq", "head_dim")
                 return (kv if flat else ("layers",) + kv)[-rank:]
@@ -188,9 +197,20 @@ class Model:
 
     def decode_step(self, params: Params, caches, tokens: jax.Array,
                     pos: jax.Array, frontend: jax.Array | None = None):
-        """tokens [B, 1]; pos scalar int32 (absolute position)."""
-        batch = {"tokens": tokens,
-                 "positions": jnp.reshape(pos, (1,)).astype(jnp.int32),
+        """tokens [B, 1]; pos: [B] int32 per-slot absolute positions.
+
+        A scalar ``pos`` is the deprecated lockstep shim: every slot is
+        assumed to sit at the same absolute position (the pre-serving-engine
+        call convention, kept for existing launchers/tests).  Slots at
+        different sequence lengths MUST use the vector form — the lockstep
+        shim lets shorter slots attend past their own length.
+        """
+        pos = jnp.asarray(pos, jnp.int32)
+        if pos.ndim == 0:
+            positions = jnp.reshape(pos, (1,))          # deprecated lockstep
+        else:
+            positions = pos.reshape(-1, 1)              # [B, 1] per-slot
+        batch = {"tokens": tokens, "positions": positions,
                  "frontend": frontend}
         logits, caches, _ = self.forward(params, batch, mode="decode",
                                          caches=caches)

@@ -99,12 +99,19 @@ def shared_attn_specs(cfg) -> dict[str, Spec]:
 # ---------------------------------------------------------------------------
 
 def slot_cache(cfg, slot: Slot, batch: int, cache_len: int, dtype, *,
-               abstract: bool, n_frontend: int = 0):
+               abstract: bool, n_frontend: int = 0, per_slot: bool = False,
+               clamp_window: bool = True):
+    """``per_slot``: per-batch-row position tracking (continuous batching).
+    ``clamp_window=False``: keep sliding-window layers at the full
+    ``cache_len`` (the serving engine's bucketed prefill writes position-
+    identity rows and windows via the mask alone)."""
     mk = (lambda shape, dt: jax.ShapeDtypeStruct(shape, dt)) if abstract else \
          (lambda shape, dt: jnp.zeros(shape, dt))
     if slot.kind == "attn":
-        s_cache = min(slot.window, cache_len) if slot.window else cache_len
-        return (KVCache.specs if abstract else KVCache.init)(cfg, batch, s_cache, dtype)
+        s_cache = (min(slot.window, cache_len)
+                   if (slot.window and clamp_window) else cache_len)
+        return (KVCache.specs if abstract else KVCache.init)(
+            cfg, batch, s_cache, dtype, per_slot=per_slot)
     if slot.kind == "cross":
         kvh, hd = cfg.num_kv_heads, cfg.head_dim
         return {"k": mk((batch, kvh, n_frontend, hd), dtype),
@@ -123,7 +130,7 @@ def slot_cache(cfg, slot: Slot, batch: int, cache_len: int, dtype, *,
 
 class Ctx(NamedTuple):
     mode: str                      # 'train' | 'prefill' | 'decode'
-    positions: jax.Array           # [S] absolute positions
+    positions: jax.Array           # [S] shared or [B, S] per-slot positions
     frontend: jax.Array | None     # image/audio embeddings [B, P, d]
     shared_params: Params | None   # zamba2 shared block
 
@@ -270,16 +277,19 @@ class LayerStack:
 
     # ---- caches -------------------------------------------------------------
     def cache_tree(self, batch: int, cache_len: int, dtype, *, abstract: bool,
-                   n_frontend: int = 0, flat: bool = False):
+                   n_frontend: int = 0, flat: bool = False,
+                   per_slot: bool = False, clamp_window: bool = True):
         """``flat=False``: per-slot caches stacked over periods (the scan
         layout).  ``flat=True``: one separate buffer per layer (the serving
         layout — each layer's persistent KV buffer aliases in place under
         donation instead of being threaded through a scan carry).
-        §Perf cell-3 iteration 3."""
+        §Perf cell-3 iteration 3.  ``per_slot``/``clamp_window`` are the
+        continuous-batching knobs, see :func:`slot_cache`."""
         cfg = self.cfg
         def one(slot):
             return slot_cache(cfg, slot, batch, cache_len, dtype,
-                              abstract=abstract, n_frontend=n_frontend)
+                              abstract=abstract, n_frontend=n_frontend,
+                              per_slot=per_slot, clamp_window=clamp_window)
         def stacked(slot):
             c = one(slot)
             def add_dim(leaf):
@@ -295,14 +305,17 @@ class LayerStack:
             if self.has_shared:
                 sh = Slot("attn", "none")
                 tree["shared"] = [slot_cache(cfg, sh, batch, cache_len, dtype,
-                                             abstract=abstract)
+                                             abstract=abstract,
+                                             per_slot=per_slot,
+                                             clamp_window=clamp_window)
                                   for _ in range(self.n_periods)]
             return tree
         tree = {"slots": [stacked(s) for s in self.pattern],
                 "tail": [one(self.pattern[i]) for i in range(self.n_tail)]}
         if self.has_shared:
             sh = Slot("attn", "none")
-            c = slot_cache(cfg, sh, batch, cache_len, dtype, abstract=abstract)
+            c = slot_cache(cfg, sh, batch, cache_len, dtype, abstract=abstract,
+                           per_slot=per_slot, clamp_window=clamp_window)
             def add_dim(leaf):
                 if abstract:
                     return jax.ShapeDtypeStruct((self.n_periods,) + leaf.shape, leaf.dtype)

@@ -1,0 +1,24 @@
+"""Serving subsystem: paged KV cache, bucketed prefill, FIFO scheduling.
+
+``launch/serve.py`` and ``examples/serve_lm.py`` are thin frontends over
+:class:`~repro.serving.engine.PagedEngine`; the legacy dense-cache
+continuous-batching loop survives as ``launch.serve.generate`` for the
+architecture families the paged engine does not cover yet.
+"""
+
+from repro.serving.bucketing import bucket_for, default_buckets, pad_prompts
+from repro.serving.engine import JitCounter, PagedEngine, attn_only_stack
+from repro.serving.paged_kv import (PageAllocator, ceil_pages, gather_pages,
+                                    invalidate_beyond, make_pool, reset_pages,
+                                    scatter_prefill)
+from repro.serving.scheduler import (DONE, QUEUED, REJECTED, RUNNING,
+                                     FIFOScheduler, ServeRequest, summarize)
+
+__all__ = [
+    "PagedEngine", "JitCounter", "attn_only_stack", "PageAllocator",
+    "FIFOScheduler",
+    "ServeRequest", "summarize", "bucket_for", "default_buckets",
+    "pad_prompts", "ceil_pages", "make_pool", "scatter_prefill",
+    "reset_pages", "gather_pages", "invalidate_beyond",
+    "QUEUED", "RUNNING", "DONE", "REJECTED",
+]

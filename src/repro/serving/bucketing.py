@@ -1,0 +1,63 @@
+"""Length-bucketed prompt padding: a small, fixed set of prefill shapes.
+
+A shape-polymorphic jitted prefill retraces once per distinct prompt length
+— warm serving then compiles unboundedly as traffic mixes lengths.  Padding
+every prompt up to the next *bucket* caps the compiled-program set at the
+bucket count: the serving-side analogue of the paper's one-configuration-
+serves-every-layer-shape argument (uniform dataflow, Sec. IV).
+
+Buckets are page-aligned multiples growing geometrically (default 2x) so
+short prompts waste at most half their bucket and the count stays
+logarithmic in the max prompt length.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def default_buckets(max_len: int, page_size: int, *, growth: float = 2.0,
+                    first: int | None = None) -> list[int]:
+    """Page-aligned geometric buckets covering 1..max_len."""
+    if max_len <= 0:
+        raise ValueError("max_len must be positive")
+    align = max(1, int(page_size))
+    b = align * max(1, -(-int(first) // align)) if first else align
+    out = [b]
+    while out[-1] < max_len:
+        nxt = int(np.ceil(out[-1] * growth / align)) * align
+        out.append(max(nxt, out[-1] + align))
+    return out
+
+
+def bucket_for(length: int, buckets: list[int]) -> int:
+    """Smallest bucket >= length; raises when the prompt exceeds them all
+    (admission control rejects such requests up front)."""
+    for b in buckets:
+        if length <= b:
+            return b
+    raise ValueError(f"prompt length {length} exceeds largest bucket "
+                     f"{buckets[-1]}")
+
+
+def pad_prompts(prompts: list[np.ndarray], bucket_len: int,
+                n_rows: int) -> tuple[np.ndarray, np.ndarray]:
+    """Right-pad ``prompts`` into a fixed [n_rows, bucket_len] batch.
+
+    Returns (tokens, lengths); rows past ``len(prompts)`` are all-pad with
+    length 0 (batch padding — the engine drops their logits and their cache
+    writes).  Right padding keeps rows position-identical to the unpadded
+    prompt: with a causal mask, logits at column ``len-1`` are exactly the
+    last-token logits of the unpadded prefill.
+    """
+    if len(prompts) > n_rows:
+        raise ValueError(f"{len(prompts)} prompts > {n_rows} rows")
+    tokens = np.zeros((n_rows, bucket_len), np.int32)
+    lengths = np.zeros((n_rows,), np.int32)
+    for i, p in enumerate(prompts):
+        p = np.asarray(p, np.int32).reshape(-1)
+        if len(p) > bucket_len:
+            raise ValueError(f"prompt {i} longer than bucket {bucket_len}")
+        tokens[i, :len(p)] = p
+        lengths[i] = len(p)
+    return tokens, lengths

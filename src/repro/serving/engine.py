@@ -1,0 +1,338 @@
+"""Paged-KV serving engine: bucketed batched prefill + continuous decode.
+
+One engine instance owns
+
+* a **paged KV cache**: per-attention-layer page pools
+  (:class:`~repro.models.layers.PagedKVCache`) with host-side
+  :class:`~repro.serving.paged_kv.PageAllocator` bookkeeping, grouped by
+  ring length (full-attention layers vs each distinct sliding window);
+* a **FIFO scheduler** with admission control and per-request metrics
+  (:mod:`repro.serving.scheduler`);
+* exactly **len(buckets) + 2 compiled programs** at steady state: one
+  batched prefill per prompt-length bucket, one decode step, one page
+  reset — a warm engine never retraces, whatever mix of request lengths
+  arrives.  :class:`JitCounter` is the compilation-count hook that the
+  tests (and the serve CLI's ``--repeat``) assert this with.
+
+The decode program runs every slot each step with **per-slot positions**
+(`Model.decode_step` vector form): each slot masks at its own length, so
+mixed-progress slots coexist in one program — the serving-side restatement
+of Kraken's one-uniform-dataflow thesis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import PagedKVCache
+from repro.models.model import Model
+from repro.serving import bucketing
+from repro.serving.paged_kv import (PageAllocator, ceil_pages, make_pool,
+                                    reset_pages, scatter_prefill)
+from repro.serving.scheduler import (FIFOScheduler, ServeRequest, summarize)
+
+
+class JitCounter:
+    """jax.jit wrapper that counts distinct call signatures.
+
+    A new (shape, dtype) signature == a fresh trace+compile, so
+    ``retraces`` is the compilation count the zero-retrace assertions key
+    on; ``cache_size`` cross-checks against jit's own compiled-program
+    cache when the running jax exposes it.
+    """
+
+    def __init__(self, fn, *, donate_argnums=()):
+        self._jit = jax.jit(fn, donate_argnums=donate_argnums)
+        self.signatures: set = set()
+        self.calls = 0
+
+    def __call__(self, *args):
+        self.signatures.add(tuple(
+            (tuple(leaf.shape), str(leaf.dtype))
+            for leaf in jax.tree.leaves(args) if hasattr(leaf, "shape")))
+        self.calls += 1
+        return self._jit(*args)
+
+    @property
+    def retraces(self) -> int:
+        return len(self.signatures)
+
+    @property
+    def cache_size(self) -> int:
+        if hasattr(self._jit, "_cache_size"):
+            return self._jit._cache_size()
+        return len(self.signatures)
+
+
+def _is_paged(x) -> bool:
+    return isinstance(x, PagedKVCache)
+
+
+def attn_only_stack(model: Model) -> bool:
+    """Every stack slot causal self-attention, no weight-shared block — the
+    families whose prefill is stateless and therefore bucket-paddable.
+    The single source of truth for this predicate (the dense loop's
+    bucketing decision and the engine's eligibility both build on it)."""
+    return (all(s.kind == "attn" for s in model.stack.pattern)
+            and not model.stack.has_shared)
+
+
+class PagedEngine:
+    """Continuous-batching server over a block/paged KV cache.
+
+    Supports attention-family architectures (every stack slot ``attn``, no
+    weight-shared block, fp KV cache) — dense, sliding-window, local/global
+    and MoE-FFN stacks all qualify; SSM/hybrid/cross-attn states are not
+    paged (yet) and raise at construction.
+    """
+
+    @staticmethod
+    def supports(model: Model) -> bool:
+        """Whether this model can serve through the paged engine (frontends
+        use this to fall back to the dense loop instead of crashing)."""
+        return (attn_only_stack(model)
+                and getattr(model.cfg, "kv_cache_dtype", "") != "int8"
+                and model._unroll_decode("decode"))
+
+    def __init__(self, model: Model, params, *, slots: int = 4,
+                 page_size: int = 8, max_len: int = 64,
+                 buckets: list[int] | None = None, max_queue: int = 64,
+                 temperature: float = 0.0, seed: int = 0,
+                 overcommit: float = 1.0):
+        cfg = model.cfg
+        stack = model.stack
+        if not self.supports(model):   # the one eligibility predicate
+            raise NotImplementedError(
+                "PagedEngine needs an all-attention stack (no SSM/hybrid/"
+                "cross state), a non-int8 KV cache, and the unrolled "
+                "flat-cache decode path; serve this model through "
+                "launch.serve.generate instead")
+        self.model, self.params, self.cfg = model, params, cfg
+        self.slots, self.page_size, self.max_len = slots, page_size, max_len
+        self.buckets = sorted(buckets) if buckets else \
+            bucketing.default_buckets(max_len, page_size)
+        self.temperature = temperature
+        self._key = jax.random.key(seed)
+        self.sched = FIFOScheduler(max_queue=max_queue,
+                                   max_total_len=max_len)
+
+        # --- page pools: one allocator per distinct ring length ------------
+        def ring_len(slot):
+            return min(slot.window, max_len) if slot.window else max_len
+
+        self._layer_rings = [ring_len(s) for s in stack.pattern]
+        group_pps = sorted({ceil_pages(r, page_size)
+                            for r in self._layer_rings})
+        self.allocators: dict[int, PageAllocator] = {
+            pps: PageAllocator(
+                n_pages=max(pps, int(np.ceil(slots * pps * overcommit))),
+                pages_per_slot=pps, n_slots=slots)
+            for pps in group_pps}
+        self._group_keys = group_pps
+
+        dt = jnp.dtype(cfg.dtype)
+
+        def leaf(slot):
+            pps = ceil_pages(ring_len(slot), page_size)
+            alloc = self.allocators[pps]
+            return make_pool(cfg, n_pages=alloc.n_pages, page_size=page_size,
+                             max_pages=pps, n_slots=slots, dtype=dt)
+
+        self.pools = {
+            "slots": [[leaf(s) for _ in range(stack.n_periods)]
+                      for s in stack.pattern],
+            "tail": [leaf(stack.pattern[i]) for i in range(stack.n_tail)],
+        }
+
+        # --- the engine's three compiled programs --------------------------
+        def prefill_fn(params, pools, tokens, lengths, slot_ids):
+            bp, s = tokens.shape
+            dense = model.init_caches(bp, s, flat=True, clamp_window=False)
+            batch = {"tokens": tokens,
+                     "positions": jnp.arange(s, dtype=jnp.int32)}
+            logits, dense, _ = model.forward(params, batch, mode="prefill",
+                                             caches=dense)
+            idx = jnp.clip(lengths - 1, 0)[:, None, None]
+            last = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
+            pools = jax.tree.map(
+                lambda pl, dn: scatter_prefill(pl, dn, slot_ids, lengths),
+                pools, dense, is_leaf=_is_paged)
+            return last, pools
+
+        def decode_fn(params, pools, tokens, pos):
+            return model.decode_step(params, pools, tokens, pos)
+
+        def reset_fn(pools, *group_ids):
+            ids = dict(zip(self._group_keys, group_ids))
+            return jax.tree.map(
+                lambda pl: reset_pages(pl, ids[pl.page_table.shape[1]]),
+                pools, is_leaf=_is_paged)
+
+        self._prefill = JitCounter(prefill_fn, donate_argnums=(1,))
+        self._decode = JitCounter(decode_fn, donate_argnums=(1,))
+        self._reset = JitCounter(reset_fn, donate_argnums=(0,))
+
+        # --- per-slot host state ------------------------------------------
+        self.active: list[ServeRequest | None] = [None] * slots
+        self._cur = np.zeros((slots, 1), np.int32)
+        self._pos = np.zeros((slots,), np.int32)
+        self._rid = 0
+        self.decode_steps = 0
+
+    # ---------------------------------------------------------------- API
+    def submit(self, prompt, max_new: int, rid: int | None = None) -> ServeRequest:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if rid is None:
+            rid, self._rid = self._rid, self._rid + 1
+        req = ServeRequest(rid=rid, prompt=prompt, max_new=max_new)
+        if len(prompt) > self.buckets[-1]:
+            # too long for every prefill bucket: hard reject (stamped, so
+            # rejected-request metrics stay meaningful)
+            req.t_submit = self.sched.clock()
+            req.state = "rejected"
+            self.sched.rejected.append(req)
+            return req
+        self.sched.submit(req)
+        return req
+
+    def run_until_idle(self, log=None) -> dict[int, list[int]]:
+        while not self.sched.idle:
+            self.step()
+        if log is not None:
+            log(self.report())
+        return {r.rid: list(r.out) for r in self.sched.done}
+
+    # ------------------------------------------------------------- engine
+    def step(self) -> None:
+        """One scheduler iteration: admit+prefill free slots, then one
+        batched decode step over every live slot."""
+        self._admit_and_prefill()
+        if not any(a is not None for a in self.active):
+            return
+        logits, self.pools = self._decode(
+            self.params, self.pools, jnp.asarray(self._cur),
+            jnp.asarray(self._pos))
+        self.decode_steps += 1
+        nxt = self._sample(logits)
+        finished = 0
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            req.out.append(int(nxt[i]))
+            self._cur[i, 0] = int(nxt[i])
+            self._pos[i] += 1
+            if len(req.out) >= req.max_new:
+                self._finish(i)
+                finished += 1
+        if finished:
+            # sentinel the freed rows on device before the next decode: an
+            # idle slot's writes must drop, not land in pages a later
+            # request may own.  One push per step, however many finished.
+            self._push_tables()
+
+    def _admit_and_prefill(self) -> None:
+        # admit one slot at a time so the page claim lands before the next
+        # can_alloc check — a batch admit would overshoot a tight pool
+        can_alloc = lambda: all(a.can_alloc() for a in self.allocators.values())
+        admitted = []
+        for slot in [i for i, a in enumerate(self.active) if a is None]:
+            got = self.sched.admit([slot], can_alloc)
+            if not got:
+                break
+            for alloc in self.allocators.values():
+                alloc.alloc(got[0].slot)
+            admitted.append(got[0])
+        if not admitted:
+            return
+        self._push_tables()
+        # freed-page hygiene before any new writes: one fixed-shape reset
+        # per admission wave (padded with drop sentinels, so the program
+        # never retraces whatever the wave size)
+        ids = []
+        for g in self._group_keys:
+            alloc = self.allocators[g]
+            flat = [p for req in admitted
+                    for p in alloc.table[req.slot].tolist()]
+            pad = self.slots * alloc.pages_per_slot - len(flat)
+            ids.append(jnp.asarray(flat + [alloc.n_pages] * pad, jnp.int32))
+        self.pools = self._reset(self.pools, *ids)
+
+        by_bucket: dict[int, list[ServeRequest]] = {}
+        for req in admitted:
+            b = bucketing.bucket_for(req.prompt_len, self.buckets)
+            by_bucket.setdefault(b, []).append(req)
+        for blen in sorted(by_bucket):
+            reqs = by_bucket[blen]
+            tokens, lengths = bucketing.pad_prompts(
+                [r.prompt for r in reqs], blen, self.slots)
+            slot_ids = np.full((self.slots,), -1, np.int32)
+            for row, r in enumerate(reqs):
+                slot_ids[row] = r.slot
+            last, self.pools = self._prefill(
+                self.params, self.pools, jnp.asarray(tokens),
+                jnp.asarray(lengths), jnp.asarray(slot_ids))
+            first = self._sample(last)
+            finished = 0
+            for row, req in enumerate(reqs):
+                req.out.append(int(first[row]))
+                req.t_first = self.sched.clock()
+                self.active[req.slot] = req
+                self._cur[req.slot, 0] = int(first[row])
+                self._pos[req.slot] = req.prompt_len
+                if len(req.out) >= req.max_new:   # max_new=1: done at prefill
+                    self._finish(req.slot)
+                    finished += 1
+            if finished:
+                self._push_tables()   # before the next bucket/decode runs
+
+    def _finish(self, slot: int) -> None:
+        """Retire a slot (host bookkeeping only — the caller pushes the
+        updated tables to device once per wave)."""
+        req = self.active[slot]
+        self.active[slot] = None
+        self.sched.complete(req)
+        for alloc in self.allocators.values():
+            alloc.free(slot)
+
+    def _push_tables(self) -> None:
+        # one table *copy* per layer leaf: the pools tree is donated into
+        # the jitted programs, and donation rejects aliased buffers
+        self.pools = jax.tree.map(
+            lambda pl: dataclasses.replace(
+                pl, page_table=jnp.array(
+                    self.allocators[pl.page_table.shape[1]].table)),
+            self.pools, is_leaf=_is_paged)
+
+    def _sample(self, logits) -> np.ndarray:
+        if self.temperature > 0:
+            self._key, sub = jax.random.split(self._key)
+            return np.asarray(jax.random.categorical(
+                sub, logits.astype(jnp.float32) / self.temperature, axis=-1))
+        return np.asarray(jnp.argmax(logits, axis=-1))
+
+    # ------------------------------------------------------------ metrics
+    def stats(self) -> dict:
+        return {
+            "prefill_calls": self._prefill.calls,
+            "prefill_retraces": self._prefill.retraces,
+            "prefill_cache_size": self._prefill.cache_size,
+            "decode_steps": self.decode_steps,
+            "decode_retraces": self._decode.retraces,
+            "buckets": list(self.buckets),
+            "free_pages": {g: a.free_pages
+                           for g, a in self.allocators.items()},
+        }
+
+    def report(self) -> str:
+        s = self.stats()
+        m = summarize(self.sched.done + self.sched.rejected)
+        return (f"served {m.get('done', 0)} req "
+                f"({m.get('rejected', 0)} rejected), "
+                f"{m.get('tokens', 0)} tok @ {m.get('tok_s', 0.0):.1f} tok/s "
+                f"| ttft mean {m.get('ttft_mean_s', 0.0) * 1e3:.0f} ms "
+                f"| prefill retraces={s['prefill_retraces']} "
+                f"decode retraces={s['decode_retraces']}")

@@ -1,0 +1,189 @@
+"""Block/paged KV-cache plumbing for the serving engine.
+
+The device-side cache type (:class:`~repro.models.layers.PagedKVCache`) lives
+next to ``KVCache`` in ``models/layers.py`` — attention consumes it natively.
+This module owns everything around it:
+
+* :class:`PageAllocator` — host-side free-list bookkeeping: fixed-size pages,
+  per-slot page tables, admission-control friendly (``can_alloc``).
+* :func:`scatter_prefill` — write a bucketed batched-prefill dense cache
+  (position-identity rows) into slot pages, masking rows beyond each
+  request's true length and outside its ring window.
+* :func:`reset_pages` — invalidate the position entries of freed/reused
+  pages so a refilled slot never sees its predecessor's tokens.
+* :func:`gather_pages` — per-slot contiguous view of the pool (tests/debug;
+  the decode path gathers inside attention).
+* :func:`invalidate_beyond` — value-based position invalidation for *dense*
+  per-slot caches (the legacy continuous-batching path pads prompts to
+  buckets and must mask the pad rows out).
+
+Ring semantics: token position ``p`` of a slot lives at logical index
+``p % logical_len`` where ``logical_len = max_pages * page_size``; a write
+wraps across page boundaries exactly like the dense ring buffer, and the
+position-based attention mask keeps the result exact as long as
+``logical_len >= window`` (sliding-window layers) or
+``logical_len >= max context`` (full attention).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import KVCache, PagedKVCache, POS_EMPTY
+
+
+def ceil_pages(length: int, page_size: int) -> int:
+    return -(-int(length) // int(page_size))
+
+
+def make_pool(cfg, *, n_pages: int, page_size: int, max_pages: int,
+              n_slots: int, dtype) -> PagedKVCache:
+    """A fresh page pool + all-sentinel table for one attention layer."""
+    kvh, hd = cfg.num_kv_heads, cfg.head_dim
+    return PagedKVCache(
+        k=jnp.zeros((n_pages, kvh, page_size, hd), dtype),
+        v=jnp.zeros((n_pages, kvh, page_size, hd), dtype),
+        pos=jnp.full((n_pages, page_size), POS_EMPTY, jnp.int32),
+        page_table=jnp.full((n_slots, max_pages), n_pages, jnp.int32),
+    )
+
+
+class PageAllocator:
+    """Host-side page bookkeeping for one pool geometry.
+
+    ``n_pages`` physical pages; every slot that is admitted claims exactly
+    ``pages_per_slot`` pages for its whole lifetime (chunked allocation —
+    the FIFO engine trades fragmentation-free simplicity for vLLM's
+    grow-on-demand).  Unallocated table rows hold the out-of-bounds sentinel
+    ``n_pages`` so device scatters drop and gathers clamp.
+    """
+
+    def __init__(self, *, n_pages: int, pages_per_slot: int, n_slots: int):
+        if pages_per_slot <= 0:
+            raise ValueError("pages_per_slot must be positive")
+        self.n_pages = n_pages
+        self.pages_per_slot = pages_per_slot
+        self.n_slots = n_slots
+        self._free: list[int] = list(range(n_pages))
+        self._owned: dict[int, list[int]] = {}
+        self.table = np.full((n_slots, pages_per_slot), n_pages, np.int32)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def can_alloc(self) -> bool:
+        return len(self._free) >= self.pages_per_slot
+
+    def alloc(self, slot: int) -> list[int]:
+        """Claim pages for ``slot``; raises if the slot is live or the pool
+        is exhausted (callers gate on :meth:`can_alloc` for admission)."""
+        if slot in self._owned:
+            raise ValueError(f"slot {slot} already holds pages")
+        if not self.can_alloc():
+            raise RuntimeError("page pool exhausted")
+        pages = [self._free.pop() for _ in range(self.pages_per_slot)]
+        self._owned[slot] = pages
+        self.table[slot] = pages
+        return pages
+
+    def free(self, slot: int) -> list[int]:
+        """Release ``slot``'s pages back to the free list (no-op for a slot
+        that holds none); returns the freed page ids."""
+        pages = self._owned.pop(slot, [])
+        self._free.extend(pages)
+        self.table[slot] = self.n_pages
+        return pages
+
+    def table_array(self) -> jnp.ndarray:
+        return jnp.asarray(self.table)
+
+
+# ---------------------------------------------------------------------------
+# Device-side gather/scatter helpers (all shapes static -> jit-stable)
+# ---------------------------------------------------------------------------
+
+def scatter_prefill(pool: PagedKVCache, dense: KVCache,
+                    slot_ids: jax.Array, lengths: jax.Array) -> PagedKVCache:
+    """Write a bucket's dense prefill cache into the slot pages.
+
+    ``dense`` must be in *position-identity* layout: row ``j`` holds token
+    position ``j`` (what ``init_caches(..., clamp_window=False)`` + a
+    0-based prefill produces).  For each bucket row ``b`` only positions
+    ``max(0, lengths[b] - logical_len) <= j < lengths[b]`` are written —
+    rows past the true length (bucket padding) and positions a ring of
+    ``logical_len`` would already have evicted are dropped.  Rows with
+    ``slot_ids[b] < 0`` (bucket batch padding) write nothing.
+    """
+    n_pages, kvh, ps, hd = pool.k.shape
+    n_slots, mp = pool.page_table.shape
+    logical = mp * ps
+    bp, _, s, _ = dense.k.shape
+
+    j = jnp.arange(s, dtype=jnp.int32)                       # positions
+    lengths = lengths.astype(jnp.int32)[:, None]             # [Bp, 1]
+    valid = (j[None, :] < lengths) & (j[None, :] >= lengths - logical)
+    valid = valid & (slot_ids[:, None] >= 0)
+
+    li = jnp.broadcast_to(j % logical, (bp, s))
+    rows = pool.page_table[jnp.clip(slot_ids, 0, n_slots - 1)]   # [Bp, MP]
+    pp = jnp.take_along_axis(rows, li // ps, axis=1)             # [Bp, S]
+    pp = jnp.where(valid, pp, n_pages)                           # drop sentinel
+    off = li % ps
+
+    ppf, offf = pp.reshape(-1), off.reshape(-1)
+    k_src = dense.k.transpose(0, 2, 1, 3).reshape(bp * s, kvh, hd)
+    v_src = dense.v.transpose(0, 2, 1, 3).reshape(bp * s, kvh, hd)
+    return PagedKVCache(
+        k=pool.k.at[ppf, :, offf].set(k_src, mode="drop"),
+        v=pool.v.at[ppf, :, offf].set(v_src, mode="drop"),
+        pos=pool.pos.at[ppf, offf].set(
+            jnp.broadcast_to(j, (bp, s)).reshape(-1), mode="drop"),
+        page_table=pool.page_table,
+    )
+
+
+def reset_pages(pool: PagedKVCache, page_ids: jax.Array) -> PagedKVCache:
+    """Invalidate ``page_ids``'s position entries (freed-slot hygiene: a
+    refilled slot must never attend to its predecessor's tokens).  Sentinel
+    ids (>= n_pages) are dropped."""
+    return dataclasses.replace(
+        pool, pos=pool.pos.at[page_ids.astype(jnp.int32)].set(
+            POS_EMPTY, mode="drop"))
+
+
+def gather_pages(pool: PagedKVCache) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Contiguous per-slot view: (k [N, KV, L, D], v likewise, pos [N, L]).
+    Unallocated slots gather clamped garbage under an all-masked pos row —
+    callers must treat pos < 0 as empty (they do: it's the mask)."""
+    n_slots, mp = pool.page_table.shape
+    _, kvh, ps, hd = pool.k.shape
+    k = pool.k[pool.page_table].transpose(0, 2, 1, 3, 4)
+    v = pool.v[pool.page_table].transpose(0, 2, 1, 3, 4)
+    pos = pool.pos[pool.page_table].reshape(n_slots, mp * ps)
+    # ensure sentinel rows read as empty even though the gather clamped
+    live = jnp.any(pool.page_table < pool.n_pages, axis=1)
+    pos = jnp.where(live[:, None], pos, POS_EMPTY)
+    return (k.reshape(n_slots, kvh, mp * ps, hd),
+            v.reshape(n_slots, kvh, mp * ps, hd), pos)
+
+
+def invalidate_beyond(cache_tree, length) -> object:
+    """Mask out positions ``>= length`` in every dense KVCache of a tree.
+
+    Value-based: position entries carry the absolute position, so bucket
+    padding (positions ``length .. bucket_len-1``) is erased without knowing
+    the layout.  Non-KVCache leaves (SSM states, cross-attn KV) pass
+    through untouched.
+    """
+    def fix(leaf):
+        if isinstance(leaf, KVCache):
+            return dataclasses.replace(
+                leaf, pos=jnp.where(leaf.pos >= length, POS_EMPTY, leaf.pos))
+        return leaf
+    return jax.tree.map(fix, cache_tree,
+                        is_leaf=lambda x: isinstance(x, KVCache))

@@ -1,0 +1,133 @@
+"""FIFO scheduler with admission control + per-request serving metrics.
+
+Request lifecycle::
+
+    submit() -> QUEUED -> (admit) RUNNING -> DONE
+             -> REJECTED            (queue full / prompt exceeds capacity)
+
+Admission is strictly FIFO: a request is admitted when a decode slot is
+free AND its page allocation fits (the engine checks both).  Metrics are
+wall-clock host timestamps: queue wait, TTFT (submit -> first token), and
+decode throughput, aggregated by :func:`summarize`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Iterable
+
+QUEUED = "queued"
+RUNNING = "running"
+DONE = "done"
+REJECTED = "rejected"
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    rid: int
+    prompt: object                    # np.ndarray [S] int32
+    max_new: int
+    state: str = QUEUED
+    slot: int = -1
+    out: list = dataclasses.field(default_factory=list)
+    # metrics (host wall-clock seconds)
+    t_submit: float = 0.0
+    t_admit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def ttft(self) -> float:
+        return max(0.0, self.t_first - self.t_submit)
+
+    @property
+    def queue_wait(self) -> float:
+        return max(0.0, self.t_admit - self.t_submit)
+
+    @property
+    def decode_tok_s(self) -> float:
+        dt = self.t_done - self.t_first
+        n = max(0, len(self.out) - 1)   # first token comes from prefill
+        return n / dt if dt > 0 else 0.0
+
+
+class FIFOScheduler:
+    """Bounded FIFO queue: ``submit`` applies admission control, ``admit``
+    hands the head of the queue to free slots."""
+
+    def __init__(self, *, max_queue: int = 64, max_total_len: int | None = None,
+                 clock=time.monotonic):
+        self.max_queue = max_queue
+        self.max_total_len = max_total_len
+        self.clock = clock
+        self.queue: deque[ServeRequest] = deque()
+        self.rejected: list[ServeRequest] = []
+        self.running: dict[int, ServeRequest] = {}   # slot -> request
+        self.done: list[ServeRequest] = []
+
+    def submit(self, req: ServeRequest) -> bool:
+        """Queue ``req``; False (state=REJECTED) when the queue is at
+        capacity or the request could never fit the KV budget."""
+        req.t_submit = self.clock()
+        too_long = (self.max_total_len is not None
+                    and req.prompt_len + req.max_new > self.max_total_len)
+        if too_long or len(self.queue) >= self.max_queue:
+            req.state = REJECTED
+            self.rejected.append(req)
+            return False
+        self.queue.append(req)
+        return True
+
+    def admit(self, free_slots: Iterable[int], can_alloc) -> list[ServeRequest]:
+        """FIFO-admit queued requests into ``free_slots`` while
+        ``can_alloc()`` grants pages.  Strict FIFO: the head blocking on
+        pages blocks everything behind it (no head-of-line bypass)."""
+        admitted = []
+        for slot in free_slots:
+            if not self.queue or not can_alloc():
+                break
+            req = self.queue.popleft()
+            req.state = RUNNING
+            req.slot = slot
+            req.t_admit = self.clock()
+            self.running[slot] = req
+            admitted.append(req)
+        return admitted
+
+    def complete(self, req: ServeRequest) -> None:
+        req.state = DONE
+        req.t_done = self.clock()
+        self.running.pop(req.slot, None)
+        req.slot = -1
+        self.done.append(req)
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and not self.running
+
+
+def summarize(requests: list[ServeRequest]) -> dict:
+    """Aggregate per-request metrics into an engine-level report."""
+    done = [r for r in requests if r.state == DONE]
+    if not done:
+        return {"done": 0, "rejected": sum(r.state == REJECTED for r in requests)}
+    t0 = min(r.t_submit for r in done)
+    t1 = max(r.t_done for r in done)
+    toks = sum(len(r.out) for r in done)
+    return {
+        "done": len(done),
+        "rejected": sum(r.state == REJECTED for r in requests),
+        "tokens": toks,
+        "wall_s": t1 - t0,
+        "tok_s": toks / (t1 - t0) if t1 > t0 else 0.0,
+        "ttft_mean_s": sum(r.ttft for r in done) / len(done),
+        "ttft_max_s": max(r.ttft for r in done),
+        "queue_wait_mean_s": sum(r.queue_wait for r in done) / len(done),
+        "decode_tok_s_mean": sum(r.decode_tok_s for r in done) / len(done),
+    }

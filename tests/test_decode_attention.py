@@ -82,6 +82,37 @@ def test_decode_attention_property(kv, group, s, d, filled):
     assert float(jnp.abs(got - want).max()) < 1e-4
 
 
+@pytest.mark.parametrize("quantized", [False, True])
+def test_decode_attention_per_slot_positions(quantized):
+    """Batched kv_pos [B, S] / q_pos [B] (continuous batching: each slot
+    masks at its own length) must equal per-row runs with shared
+    positions."""
+    b, h, kv, s, d = 3, 8, 2, 64, 16
+    q, k, v = _mk(b, h, kv, s, d)
+    filled = np.asarray([5, 23, 64])
+    kv_pos = jnp.stack([jnp.where(jnp.arange(s) < f, jnp.arange(s),
+                                  -(2 ** 30)) for f in filled])
+    q_pos = jnp.asarray(filled - 1, jnp.int32)
+    ks = vs = None
+    if quantized:
+        k, ks = quantize_kv(k)
+        v, vs = quantize_kv(v)
+    got = ops.kraken_decode_attention(q, k, v, k_scale=ks, v_scale=vs,
+                                      kv_pos=kv_pos, q_pos=q_pos,
+                                      window=16, block_s=32,
+                                      interpret=True, use_pallas=True)
+    oracle = ref.decode_attention(q, k, v, k_scale=ks, v_scale=vs,
+                                  kv_pos=kv_pos, q_pos=q_pos, window=16)
+    assert float(jnp.abs(got - oracle).max()) < 1e-5
+    for i in range(b):  # batched == per-row shared-position runs
+        row = ref.decode_attention(
+            q[i:i + 1], k[i:i + 1], v[i:i + 1],
+            k_scale=None if ks is None else ks[i:i + 1],
+            v_scale=None if vs is None else vs[i:i + 1],
+            kv_pos=kv_pos[i], q_pos=int(filled[i]) - 1, window=16)
+        assert float(jnp.abs(got[i:i + 1] - row).max()) < 1e-5
+
+
 def test_quantize_kv_roundtrip():
     x = jnp.asarray(RNG.normal(size=(2, 4, 32, 16)) * 3.0, jnp.float32)
     q8, sc = quantize_kv(x)

@@ -1,0 +1,177 @@
+"""Property tests for the block/paged KV cache.
+
+Run under real hypothesis when installed, or the deterministic stand-in
+from tests/conftest.py on a bare interpreter.  Covered invariants:
+
+* scatter(prefill) -> gather round-trips every position a ring of
+  ``logical_len`` entries would retain, and *only* those (bucket padding
+  and evicted positions never surface);
+* ring writes wrap across page boundaries exactly like the dense ring
+  (window masking stays position-based, so wrap is invisible to attention);
+* slot eviction/refill: a freed slot's pages, reallocated to a new
+  request, never leak the predecessor's tokens once reset;
+* the host-side allocator enforces its pool budget (admission control).
+"""
+
+import dataclasses
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import KVCache, POS_EMPTY, _paged_decode
+from repro.serving import (PageAllocator, gather_pages, make_pool,
+                           reset_pages, scatter_prefill)
+
+CFG = SimpleNamespace(num_kv_heads=2, head_dim=4)
+
+
+def _pool_with_slots(n_slots: int, page_size: int, max_pages: int):
+    alloc = PageAllocator(n_pages=n_slots * max_pages,
+                          pages_per_slot=max_pages, n_slots=n_slots)
+    for s in range(n_slots):
+        alloc.alloc(s)
+    pool = make_pool(CFG, n_pages=alloc.n_pages, page_size=page_size,
+                     max_pages=max_pages, n_slots=n_slots,
+                     dtype=jnp.float32)
+    return dataclasses.replace(pool, page_table=alloc.table_array()), alloc
+
+
+def _identity_dense(rng, bp: int, s: int) -> KVCache:
+    """Dense prefill cache in position-identity layout (row j == pos j)."""
+    kvh, hd = CFG.num_kv_heads, CFG.head_dim
+    return KVCache(
+        k=jnp.asarray(rng.normal(size=(bp, kvh, s, hd)), jnp.float32),
+        v=jnp.asarray(rng.normal(size=(bp, kvh, s, hd)), jnp.float32),
+        pos=jnp.arange(s, dtype=jnp.int32))
+
+
+@settings(max_examples=10, deadline=None)
+@given(page_size=st.integers(1, 4), max_pages=st.integers(1, 3),
+       n_slots=st.integers(1, 3), seed=st.integers(0, 99))
+def test_scatter_gather_round_trip(page_size, max_pages, n_slots, seed):
+    rng = np.random.default_rng(seed)
+    logical = page_size * max_pages
+    s = int(rng.integers(1, 3 * logical + 1))          # bucket length
+    lengths = rng.integers(0, s + 1, size=(n_slots,))  # true lengths <= S
+
+    pool, _ = _pool_with_slots(n_slots, page_size, max_pages)
+    dense = _identity_dense(rng, n_slots, s)
+    pool = scatter_prefill(pool, dense, jnp.arange(n_slots),
+                           jnp.asarray(lengths, jnp.int32))
+    k, v, pos = (np.asarray(t) for t in gather_pages(pool))
+
+    for b in range(n_slots):
+        ln = int(lengths[b])
+        expect = {j % logical: j for j in range(max(0, ln - logical), ln)}
+        for li in range(logical):
+            if li in expect:
+                j = expect[li]
+                assert pos[b, li] == j, (b, li, pos[b])
+                np.testing.assert_array_equal(k[b, :, li], dense.k[b, :, j])
+                np.testing.assert_array_equal(v[b, :, li], dense.v[b, :, j])
+            else:
+                assert pos[b, li] == POS_EMPTY, (b, li, pos[b])
+
+
+@settings(max_examples=8, deadline=None)
+@given(page_size=st.integers(1, 4), max_pages=st.integers(1, 3),
+       seed=st.integers(0, 99))
+def test_batch_padding_rows_write_nothing(page_size, max_pages, seed):
+    """Rows with slot_id < 0 (bucket batch padding) must be dropped."""
+    rng = np.random.default_rng(seed)
+    pool, _ = _pool_with_slots(2, page_size, max_pages)
+    s = page_size * max_pages
+    dense = _identity_dense(rng, 3, s)
+    slot_ids = jnp.asarray([0, -1, -1], jnp.int32)
+    lengths = jnp.asarray([s, s, s], jnp.int32)
+    pool = scatter_prefill(pool, dense, slot_ids, lengths)
+    _, _, pos = (np.asarray(t) for t in gather_pages(pool))
+    assert (pos[0] >= 0).all()              # the real row landed
+    assert (pos[1] == POS_EMPTY).all()      # slot 1 untouched
+
+
+def test_decode_ring_wraps_across_page_boundaries():
+    """Token-by-token paged decode far past the ring length: every write
+    lands at li = pos %% L, crossing page boundaries, and the windowed
+    attention output equals dense attention over the retained suffix."""
+    page_size, max_pages, window = 2, 2, 3
+    logical = page_size * max_pages
+    pool, _ = _pool_with_slots(1, page_size, max_pages)
+    rng = np.random.default_rng(0)
+    kvh, hd = CFG.num_kv_heads, CFG.head_dim
+    ks, vs = [], []
+    for p in range(2 * logical + 1):
+        k = jnp.asarray(rng.normal(size=(1, kvh, 1, hd)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(1, kvh, 1, hd)), jnp.float32)
+        q = jnp.asarray(rng.normal(size=(1, kvh, 1, hd)), jnp.float32)
+        ks.append(k), vs.append(v)
+        out, pool = _paged_decode(CFG, pool, q, k, v,
+                                  positions=jnp.asarray([[p]], jnp.int32),
+                                  window=window)
+        # reference: dense attention over the last `window` positions
+        lo = max(0, p - window + 1)
+        kd = jnp.concatenate(ks[lo:], axis=2)
+        vd = jnp.concatenate(vs[lo:], axis=2)
+        logits = jnp.einsum("bhqd,bhsd->bhqs", q, kd) / np.sqrt(hd)
+        ref = jnp.einsum("bhqs,bhsd->bhqd",
+                         jax.nn.softmax(logits, axis=-1), vd)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+        # cache invariant: exactly the last min(p+1, L) positions resident
+        _, _, pos = gather_pages(pool)
+        pos = np.asarray(pos)[0]
+        resident = sorted(int(x) for x in pos if x != POS_EMPTY)
+        assert resident == list(range(max(0, p + 1 - logical), p + 1))
+
+
+@settings(max_examples=8, deadline=None)
+@given(page_size=st.integers(1, 3), max_pages=st.integers(1, 3),
+       seed=st.integers(0, 99))
+def test_slot_eviction_and_refill(page_size, max_pages, seed):
+    """Free a slot, reallocate its pages to a new request: after the reset
+    no predecessor position survives, and the refill is fully visible."""
+    rng = np.random.default_rng(seed)
+    logical = page_size * max_pages
+    pool, alloc = _pool_with_slots(1, page_size, max_pages)
+
+    la = int(rng.integers(1, logical + 1))
+    pool = scatter_prefill(pool, _identity_dense(rng, 1, logical),
+                           jnp.asarray([0]), jnp.asarray([la], jnp.int32))
+    freed = alloc.free(0)
+    assert alloc.free_pages == alloc.n_pages
+    pages = alloc.alloc(0)          # refill the slot (same page pool)
+    assert sorted(pages) == sorted(freed)
+    pool = dataclasses.replace(pool, page_table=alloc.table_array())
+    pool = reset_pages(pool, jnp.asarray(pages, jnp.int32))
+
+    lb = int(rng.integers(0, la + 1))   # shorter successor: stale tail risk
+    dense_b = _identity_dense(rng, 1, logical)
+    pool = scatter_prefill(pool, dense_b, jnp.asarray([0]),
+                           jnp.asarray([lb], jnp.int32))
+    k, _, pos = (np.asarray(t) for t in gather_pages(pool))
+    resident = sorted(int(x) for x in pos[0] if x != POS_EMPTY)
+    assert resident == list(range(lb)), (la, lb, pos[0])
+    for j in resident:
+        np.testing.assert_array_equal(k[0, :, j % logical], dense_b.k[0, :, j])
+
+
+def test_allocator_admission_control():
+    """The pool budget gates admission: one slot's pages available, two
+    slots wanted."""
+    alloc = PageAllocator(n_pages=3, pages_per_slot=3, n_slots=2)
+    assert alloc.can_alloc()
+    alloc.alloc(0)
+    assert not alloc.can_alloc()
+    with pytest.raises(RuntimeError):
+        alloc.alloc(1)
+    with pytest.raises(ValueError):
+        alloc.alloc(0)              # double-alloc of a live slot
+    assert (alloc.table[1] == alloc.n_pages).all()   # sentinel row
+    alloc.free(0)
+    assert alloc.can_alloc()
+    assert (alloc.table[0] == alloc.n_pages).all()
+    assert alloc.free(0) == []      # double-free is a no-op

@@ -1,0 +1,223 @@
+"""Serving-engine lockdown: paged continuous batching must be
+token-identical to sequential per-request prefill+decode, never retrace
+once warm, and enforce admission control.
+
+The sequential reference is the pre-engine calling convention — per-request
+``model.prefill`` + scalar-position ``decode_step`` over a dense cache —
+so these tests pin the engine's batched/bucketed/paged path to the simplest
+possible semantics, for a dense arch (yi-6b) and a sliding-window MoE arch
+(mixtral; its smoke window of 8 forces ring wrap across page boundaries).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, smoke_config
+from repro.models.model import Model
+from repro.serving import PagedEngine
+
+ARCHS = ["yi-6b", "mixtral-8x22b"]
+_SETUP: dict = {}
+
+
+def setup_arch(arch):
+    if arch not in _SETUP:
+        cfg = dataclasses.replace(smoke_config(get_arch(arch)),
+                                  dtype="float32",
+                                  capacity_factor=64.0)  # drop-free MoE
+        model = Model(cfg)
+        params = model.init(jax.random.key(0))
+        _SETUP[arch] = (cfg, model, params)
+    return _SETUP[arch]
+
+
+def sequential_greedy(model, params, prompt, max_new, cache_len=32):
+    """Per-request reference: prefill + scalar-pos decode, greedy."""
+    caches = model.init_caches(1, cache_len, flat=True)
+    logits, caches = model.prefill(
+        params, {"tokens": jnp.asarray(prompt[None]),
+                 "positions": jnp.arange(len(prompt), dtype=jnp.int32)},
+        caches)
+    seq = [int(jnp.argmax(logits[0, -1]))]
+    while len(seq) < max_new:
+        logits, caches = model.decode_step(
+            params, caches, jnp.asarray([[seq[-1]]], jnp.int32),
+            jnp.int32(len(prompt) + len(seq) - 1))
+        seq.append(int(jnp.argmax(logits[0])))
+    return seq
+
+
+def mixed_prompts(cfg, lens, seed=7):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, (l,)).astype(np.int32)
+            for l in lens]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_engine_matches_sequential(arch):
+    """Greedy paged continuous batching over mixed-length prompts ==
+    sequential per-request generation, token for token."""
+    cfg, model, params = setup_arch(arch)
+    prompts = mixed_prompts(cfg, [3, 5, 9, 12])
+    max_new = 5
+    ref = {i: sequential_greedy(model, params, p, max_new)
+           for i, p in enumerate(prompts)}
+
+    # 2 slots for 4 requests: slots are evicted and refilled mid-run
+    eng = PagedEngine(model, params, slots=2, page_size=4, max_len=32)
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new, rid=i)
+    done = eng.run_until_idle()
+    for i in ref:
+        assert done[i] == ref[i], (arch, i, done[i], ref[i])
+    # every page returned to the pool once the queue drained
+    for alloc in eng.allocators.values():
+        assert alloc.free_pages == alloc.n_pages
+
+
+def test_warm_engine_never_retraces():
+    """Warm serving with mixed prompt lengths compiles each bucket at most
+    once: a second workload over the same buckets adds zero programs."""
+    cfg, model, params = setup_arch("yi-6b")
+    eng = PagedEngine(model, params, slots=2, page_size=4, max_len=32)
+    for p in mixed_prompts(cfg, [3, 5, 9, 12], seed=1):
+        eng.submit(p, 4)
+    eng.run_until_idle()
+    s1 = eng.stats()
+    assert s1["prefill_retraces"] <= len(eng.buckets)
+    assert s1["decode_retraces"] == 1
+    assert s1["prefill_cache_size"] == s1["prefill_retraces"]
+
+    # same buckets, different lengths/content/arrival order
+    for p in mixed_prompts(cfg, [12, 2, 4, 6, 10], seed=2):
+        eng.submit(p, 4)
+    eng.run_until_idle()
+    s2 = eng.stats()
+    assert s2["prefill_retraces"] == s1["prefill_retraces"], (s1, s2)
+    assert s2["decode_retraces"] == s1["decode_retraces"]
+    assert s2["prefill_cache_size"] == s1["prefill_cache_size"]
+    assert s2["prefill_calls"] > s1["prefill_calls"]   # it did serve
+
+
+def test_admission_control_and_metrics():
+    cfg, model, params = setup_arch("yi-6b")
+    eng = PagedEngine(model, params, slots=2, page_size=4, max_len=16,
+                      max_queue=2)
+    # prompt + max_new beyond the KV budget: rejected up front
+    r = eng.submit(np.zeros(12, np.int32), max_new=8)
+    assert r.state == "rejected"
+    # queue capacity: third queued request bounces
+    a = eng.submit(np.zeros(4, np.int32), 2)
+    b = eng.submit(np.zeros(4, np.int32), 2)
+    c = eng.submit(np.zeros(4, np.int32), 2)
+    assert [a.state, b.state, c.state] == ["queued", "queued", "rejected"]
+    done = eng.run_until_idle()
+    assert sorted(done) == [a.rid, b.rid]
+    for req in eng.sched.done:
+        assert req.t_first >= req.t_admit >= req.t_submit
+        assert req.t_done >= req.t_first
+        assert len(req.out) == 2
+    from repro.serving import summarize
+    m = summarize(eng.sched.done + eng.sched.rejected)
+    assert m["done"] == 2 and m["rejected"] == 2
+    assert m["tokens"] == 4 and m["tok_s"] > 0
+
+
+def test_engine_rejects_unsupported_families():
+    cfg, model, params = None, None, None
+    cfg = dataclasses.replace(smoke_config(get_arch("rwkv6-3b")),
+                              dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    with pytest.raises(NotImplementedError):
+        PagedEngine(model, params, slots=2, page_size=4, max_len=16)
+
+
+@pytest.mark.parametrize("kv_dtype", ["", "int8"])
+def test_dense_generate_per_slot_positions(kv_dtype):
+    """The legacy dense loop (launch.serve.generate) with *mixed* prompt
+    lengths: each slot must decode at its own position.  The pre-fix code
+    passed pos.max() for every slot — shorter slots attended past their own
+    length and diverged from sequential generation.  The int8 variant
+    exercises the per-slot quantized scatter + batched-position kernel
+    path."""
+    from repro.launch.serve import Request, generate
+    cfg, model, params = setup_arch("yi-6b")
+    if kv_dtype:
+        cfg = dataclasses.replace(cfg, kv_cache_dtype=kv_dtype)
+        model = Model(cfg)   # params are KV-dtype independent
+    prompts = mixed_prompts(cfg, [3, 7, 12], seed=5)
+    max_new = 4
+    stats: dict = {}
+    reqs = [Request(rid=i, prompt=p, max_new=max_new)
+            for i, p in enumerate(prompts)]
+    # max_new=1 must finish at the prefill token (no stray decode step),
+    # exactly like the paged engine
+    reqs.append(Request(rid=99, prompt=prompts[0], max_new=1))
+    done = generate(model, params, reqs, batch_slots=3, cache_len=32,
+                    log=lambda *a: None, stats=stats)
+    for i, p in enumerate(prompts):
+        assert done[i] == sequential_greedy(model, params, p, max_new), i
+    assert done[99] == sequential_greedy(model, params, prompts[0], 1)
+    # bucketed prefill: three lengths, but at most one trace per bucket used
+    used = {min(b for b in stats["buckets"] if len(p) <= b) for p in prompts}
+    assert stats["prefill_retraces"] <= len(used)
+
+
+def test_dense_generate_off_boundary_cache_len():
+    """cache_len that is not a bucket boundary (12: buckets would be
+    [8, 16]) must not ring-evict real prompt tokens — buckets are capped at
+    cache_len, and prompts beyond it are rejected, not truncated."""
+    from repro.launch.serve import Request, generate
+    cfg, model, params = setup_arch("yi-6b")
+    prompts = mixed_prompts(cfg, [10, 5], seed=11)
+    stats: dict = {}
+    reqs = [Request(rid=i, prompt=p, max_new=2)
+            for i, p in enumerate(prompts)]
+    reqs.append(Request(rid=9, prompt=mixed_prompts(cfg, [13])[0], max_new=2))
+    done = generate(model, params, reqs, batch_slots=2, cache_len=12,
+                    log=lambda *a: None, stats=stats)
+    for i, p in enumerate(prompts):
+        assert done[i] == sequential_greedy(model, params, p, 2,
+                                            cache_len=12), i
+    assert 9 not in done and stats["rejected"] == [9]
+    assert max(stats["buckets"]) == 12
+
+    # a rejected head must not strand the queue behind it (1 slot: the
+    # reject happens with no slot active)
+    stats2: dict = {}
+    done2 = generate(model, params,
+                     [Request(rid=0, prompt=mixed_prompts(cfg, [20])[0],
+                              max_new=2),
+                      Request(rid=1, prompt=prompts[1], max_new=2)],
+                     batch_slots=1, cache_len=12, log=lambda *a: None,
+                     stats=stats2)
+    assert stats2["rejected"] == [0]
+    assert done2[1] == sequential_greedy(model, params, prompts[1], 2,
+                                         cache_len=12)
+
+
+@pytest.mark.slow
+def test_engine_soak_window_wrap_and_page_pressure():
+    """Longer soak on the sliding-window arch: decode far past the window
+    (ring wrap across page boundaries) under page-pool pressure
+    (overcommit < 1 defers admission), still token-identical."""
+    cfg, model, params = setup_arch("mixtral-8x22b")
+    prompts = mixed_prompts(cfg, [2, 3, 5, 8, 11, 12, 4, 6], seed=9)
+    max_new = 12   # window is 8: every request wraps its ring
+    ref = {i: sequential_greedy(model, params, p, max_new)
+           for i, p in enumerate(prompts)}
+    eng = PagedEngine(model, params, slots=3, page_size=4, max_len=32,
+                      overcommit=0.7)   # fewer pages than slots*pps
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new, rid=i)
+    done = eng.run_until_idle()
+    for i in ref:
+        assert done[i] == ref[i], (i, done[i], ref[i])
+    m = eng.stats()
+    assert m["prefill_retraces"] <= len(eng.buckets)
+    assert m["decode_retraces"] == 1
