@@ -111,3 +111,34 @@ def decode_attention_bench() -> list[tuple]:
     return [("decode_attention_int8", us,
              f"maxerr_vs_exact={err:.2e}|kv_bytes_ratio="
              f"{q_bytes / fp_bytes:.2f}|hbm_read=int8_fused_dequant")]
+
+
+def paged_decode_bench() -> list[tuple]:
+    """Fused paged-attention decode kernel (interpret): correctness vs the
+    dense-gather oracle + the gather-vs-fused per-token traffic model."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops, ref
+    from repro.tuning.search import steady_state_pool
+
+    slots, kvh, g, ps, mp, d = 4, 2, 4, 8, 8, 64
+    logical = ps * mp
+    q, k, v, pos, table, q_pos, _, _ = steady_state_pool(
+        slots, logical, d, page_size=ps, kv_heads=kvh, q_heads=kvh * g)
+
+    run = lambda: ops.kraken_paged_attention(
+        q, k, v, pos_pages=pos, page_table=table, q_pos=q_pos,
+        pages_per_block=4, interpret=True, use_pallas=True)
+    us = _timeit(lambda: jax.block_until_ready(run()), reps=1)
+    err = float(jnp.abs(run() - ref.paged_decode_attention(
+        q, k, v, pos_pages=pos, page_table=table, q_pos=q_pos)).max())
+    from repro.serving import PoolLayout, modeled_decode_bytes
+    gather_b, fused_b = modeled_decode_bytes(PoolLayout(
+        n_pages=slots * mp, kv_heads=kvh, page_size=ps, head_dim=d,
+        n_slots=slots, max_pages=mp, logical_len=logical,
+        itemsize=k.dtype.itemsize))
+    return [("paged_decode_fused_vs_gather", us,
+             f"maxerr_vs_ref={err:.2e}|modeled_gather_B_per_tok={gather_b}|"
+             f"modeled_fused_B_per_tok={fused_b}|"
+             f"hbm_reduction={gather_b / fused_b:.1f}x")]

@@ -78,6 +78,7 @@ def main(argv=None) -> None:
         kernels_bench.swa_bench,
         kernels_bench.dataflow_cycle_bench,
         kernels_bench.decode_attention_bench,
+        kernels_bench.paged_decode_bench,
         serving_bench.serving_bench,
         roofline_summary,
     ]

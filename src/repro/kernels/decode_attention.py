@@ -13,9 +13,14 @@ forfeits the win, so this is kernel-or-nothing: the Kraken lesson again
 Layout per grid step (b, kv_head, s_block):
   q      [1, 1, G, D]       resident across s_blocks (output-stationary)
   k8/v8  [1, 1, BS, D] int8 streamed from the cache
-  scale  [1, 1, BS]     f32
+  scale  [1, 1, BS]     f32  (quantized path only — the fp signature
+                             carries no dummy scale operands)
   kv_pos [BS]           absolute position per slot (-2^30 = empty)
   acc/m/l VMEM scratch  online softmax state, G x D
+
+BS is chosen to divide the cache length (``_divisible_block``) so the
+per-token path never pads — padding k/v would copy the whole cache every
+decode call.
 
 The s_block loop is the innermost grid dim; partial softmax state never
 leaves VMEM — the same output-stationary accumulation discipline as the
@@ -33,9 +38,18 @@ from jax.experimental import pallas as pl
 from repro.core.elastic import ceil_div
 
 
-def _kernel(q_ref, k_ref, v_ref, ksc_ref, vsc_ref, kvpos_ref, qpos_ref,
-            o_ref, m_ref, l_ref, acc_ref, *, nblk: int, window: int,
+def _kernel(q_ref, k_ref, v_ref, *refs, nblk: int, window: int,
             scale: float, quantized: bool):
+    # scale operands exist only on the quantized path — the fp kernel
+    # signature carries no dummy ones-tensors (they used to be allocated
+    # and streamed on every decode call)
+    if quantized:
+        ksc_ref, vsc_ref, kvpos_ref, qpos_ref = refs[:4]
+        o_ref, m_ref, l_ref, acc_ref = refs[4:]
+    else:
+        ksc_ref = vsc_ref = None
+        kvpos_ref, qpos_ref = refs[:2]
+        o_ref, m_ref, l_ref, acc_ref = refs[2:]
     sblk = pl.program_id(2)
 
     @pl.when(sblk == 0)
@@ -81,6 +95,28 @@ def _kernel(q_ref, k_ref, v_ref, ksc_ref, vsc_ref, kvpos_ref, qpos_ref,
                        ).astype(o_ref.dtype)
 
 
+_SUBLANE = 8
+
+
+def _divisible_block(s: int, block_s: int) -> int:
+    """A kv block that divides the cache length, so the per-token path never
+    pads.  An earlier revision unconditionally ``jnp.pad``-ed k/v (a
+    whole-cache copy per decode call) whenever ``block_s`` didn't divide S;
+    the engine's cache lengths are page-aligned by construction, so the
+    right fix is picking the block to match.  Only sublane-aligned divisors
+    are considered (an unaligned KV block neither matches TPU native tiling
+    nor spans the axis — Mosaic would reject it at lowering); falls back to
+    the requested block (pad path) when none exists within 8x of the
+    request — e.g. S = 2p for a large prime p."""
+    bs = min(block_s, s)
+    if s % bs == 0:
+        return bs
+    for d in range((bs // _SUBLANE) * _SUBLANE, 0, -_SUBLANE):
+        if s % d == 0:
+            return d if d * 8 >= bs else bs
+    return bs
+
+
 def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                      kv_pos: jnp.ndarray, q_pos: jnp.ndarray,
                      k_scale: jnp.ndarray | None = None,
@@ -100,7 +136,7 @@ def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     g = h // kvh
     quantized = k_scale is not None
     sc = 1.0 / (d ** 0.5)
-    bs = min(block_s, s)
+    bs = _divisible_block(s, block_s)
     nblk = ceil_div(s, bs)
     s_pad = nblk * bs
     # Positions are normalized to per-slot layout ([B, S] / [B]); the shared
@@ -110,6 +146,9 @@ def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     qpos_arr = jnp.broadcast_to(
         jnp.asarray(q_pos, jnp.int32).reshape(-1), (b,))
     if s_pad != s:
+        # Last resort (no usable block divides S): padding k/v here copies
+        # the whole cache *every decode call* — the engine's page-aligned
+        # cache lengths never take this branch (_divisible_block).
         pad = [(0, 0), (0, 0), (0, s_pad - s), (0, 0)]
         k = jnp.pad(k, pad)
         v = jnp.pad(v, pad)
@@ -118,11 +157,26 @@ def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         if quantized:
             k_scale = jnp.pad(k_scale, [(0, 0), (0, 0), (0, s_pad - s)])
             v_scale = jnp.pad(v_scale, [(0, 0), (0, 0), (0, s_pad - s)])
-    if not quantized:  # dummy scale operands keep one kernel signature
-        k_scale = jnp.ones((b, kvh, s_pad), jnp.float32)
-        v_scale = jnp.ones((b, kvh, s_pad), jnp.float32)
 
     qg = q.reshape(b, kvh, g, d)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d), lambda i, j, sb: (i, j, 0, 0)),
+        pl.BlockSpec((1, 1, bs, d), lambda i, j, sb: (i, j, sb, 0)),
+        pl.BlockSpec((1, 1, bs, d), lambda i, j, sb: (i, j, sb, 0)),
+    ]
+    args = [qg, k, v]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, 1, bs), lambda i, j, sb: (i, j, sb)),
+            pl.BlockSpec((1, 1, bs), lambda i, j, sb: (i, j, sb)),
+        ]
+        args += [k_scale, v_scale]
+    in_specs += [
+        pl.BlockSpec((1, bs), lambda i, j, sb: (i, sb)),
+        pl.BlockSpec((1,), lambda i, j, sb: (i,)),
+    ]
+    args += [kv_pos, qpos_arr]
 
     from jax.experimental.pallas import tpu as pltpu
     grid = (b, kvh, nblk)
@@ -130,15 +184,7 @@ def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         functools.partial(_kernel, nblk=nblk, window=window, scale=sc,
                           quantized=quantized),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, g, d), lambda i, j, sb: (i, j, 0, 0)),
-            pl.BlockSpec((1, 1, bs, d), lambda i, j, sb: (i, j, sb, 0)),
-            pl.BlockSpec((1, 1, bs, d), lambda i, j, sb: (i, j, sb, 0)),
-            pl.BlockSpec((1, 1, bs), lambda i, j, sb: (i, j, sb)),
-            pl.BlockSpec((1, 1, bs), lambda i, j, sb: (i, j, sb)),
-            pl.BlockSpec((1, bs), lambda i, j, sb: (i, sb)),
-            pl.BlockSpec((1,), lambda i, j, sb: (i,)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, g, d), lambda i, j, sb: (i, j, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),
         scratch_shapes=[
@@ -147,7 +193,7 @@ def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
             pltpu.VMEM((g, d), jnp.float32),
         ],
         interpret=interpret,
-    )(qg, k, v, k_scale, v_scale, kv_pos, qpos_arr)
+    )(*args)
     return out.reshape(b, h, d)
 
 

@@ -141,3 +141,39 @@ def kraken_decode_attention(q, k, v, *, kv_pos, q_pos,
     return _dec(q, k, v, kv_pos=kv_pos, q_pos=q_pos, k_scale=k_scale,
                 v_scale=v_scale, window=window, block_s=block_s,
                 interpret=bool(interpret))
+
+
+def kraken_paged_attention(q, k_pages, v_pages, *, pos_pages, page_table,
+                           q_pos, k_scale=None, v_scale=None,
+                           window: int = 0,
+                           pages_per_block: int | None = None,
+                           use_pallas: bool | None = None,
+                           interpret: bool | None = None):
+    """One-token GQA attention straight off a (possibly int8) page pool.
+
+    The fused serving kernel (kernels/paged_attention.py): the page-table
+    walk happens *inside* the grid via scalar-prefetched table/position
+    operands, so per-token HBM traffic is the slot's live pages once — not
+    the dense re-materialization of the whole cache the old decode path
+    paid twice over.  ``pages_per_block`` defaults through the process-wide
+    tile policy (``op_kind="paged_decode"`` cache entries, keyed
+    ``m/k/n`` <- slots/logical_len/head_dim).
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas and not interpret:
+        return ref.paged_decode_attention(
+            q, k_pages, v_pages, pos_pages=pos_pages, page_table=page_table,
+            q_pos=q_pos, k_scale=k_scale, v_scale=v_scale, window=window)
+    from repro.kernels import paged_attention as pa
+    if pages_per_block is None:
+        mp = page_table.shape[1]
+        ps = k_pages.shape[2]
+        pages_per_block = pa.resolve_pages_per_block(
+            slots=q.shape[0], logical_len=mp * ps, head_dim=q.shape[-1],
+            page_size=ps, max_pages=mp, dtype_name=k_pages.dtype.name,
+            kv_heads=k_pages.shape[1], q_heads=q.shape[1], window=window)
+    return pa.paged_decode_attention(
+        q, k_pages, v_pages, pos_pages=pos_pages, page_table=page_table,
+        q_pos=q_pos, k_scale=k_scale, v_scale=v_scale, window=window,
+        pages_per_block=pages_per_block, interpret=bool(interpret))

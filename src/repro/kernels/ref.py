@@ -60,6 +60,34 @@ def sliding_window_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     return jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32)).astype(q.dtype)
 
 
+def paged_decode_attention(q, k_pages, v_pages, *, pos_pages, page_table,
+                           q_pos, k_scale=None, v_scale=None,
+                           window: int = 0):
+    """Oracle for kernels/paged_attention.py: dense-gather the page pool
+    through the table, then exact one-token attention.
+
+    q: [B, H, D]; k_pages/v_pages: [n_pages, KV, ps, D]; pos_pages:
+    [n_pages, ps]; page_table: [B, MP] (sentinel ``n_pages`` = dead page);
+    scales: [n_pages, KV, ps] or None; q_pos: [B] (or scalar).  Dead pages
+    gather clamped garbage under an all-masked pos row, exactly the fused
+    kernel's skip semantics, so a slot with no live page returns zeros.
+    """
+    n_pages, kvh, ps, d = k_pages.shape
+    b, mp = page_table.shape
+    tbl = jnp.clip(page_table, 0, n_pages - 1)
+    live = jnp.repeat(page_table < n_pages, ps, axis=1)       # [B, MP*ps]
+    k = k_pages[tbl].transpose(0, 2, 1, 3, 4).reshape(b, kvh, mp * ps, d)
+    v = v_pages[tbl].transpose(0, 2, 1, 3, 4).reshape(b, kvh, mp * ps, d)
+    pos = jnp.where(live, pos_pages[tbl].reshape(b, mp * ps), -(2 ** 30))
+    ks = vs = None
+    if k_scale is not None:
+        ks = k_scale[tbl].transpose(0, 2, 1, 3).reshape(b, kvh, mp * ps)
+        vs = v_scale[tbl].transpose(0, 2, 1, 3).reshape(b, kvh, mp * ps)
+    qp = jnp.broadcast_to(jnp.asarray(q_pos, jnp.int32).reshape(-1), (b,))
+    return decode_attention(q, k, v, kv_pos=pos, q_pos=qp,
+                            k_scale=ks, v_scale=vs, window=window)
+
+
 def decode_attention(q, k, v, *, kv_pos, q_pos, k_scale=None, v_scale=None,
                      window: int = 0):
     """Oracle for kernels/decode_attention.py: one-token GQA attention over

@@ -209,14 +209,18 @@ def _slot_set(full_tree, one_tree, i: int):
 
 def warm_tile_cache(cfg, *, slots: int, prompt_lens: list[int],
                     cache_len: int, autotune: bool, prefill_batch: int = 1,
-                    log=print) -> None:
+                    paged_geoms: list[tuple[int, int, int]] | None = None,
+                    page_size: int = 8, log=print) -> None:
     """Warm (or verify) the tile-plan cache for this server's GEMM cells.
 
     Enumerates the prefill cells of every prompt bucket plus the batched
     decode cells, autotunes each cache miss, and reports per-cell hit/tuned
     status — the second run of a warmed server reports hits for every cell.
-    After warmup the process-wide tile mode is "cached", so the serving hot
-    path replays measured winners and never benchmarks.
+    ``paged_geoms`` (paged-engine servers) additionally tunes the fused
+    paged-decode kernel's ``pages_per_block`` per pool geometry under
+    ``op_kind="paged_decode"``, so ``--autotune`` warmup covers decode
+    attention too.  After warmup the process-wide tile mode is "cached", so
+    the serving hot path replays measured winners and never benchmarks.
     """
     from repro import tuning
     from repro.core.unified import serving_cells
@@ -229,9 +233,35 @@ def warm_tile_cache(cfg, *, slots: int, prompt_lens: list[int],
         # Key/measure in the model's compute dtype: the hot path looks
         # plans up under the activation dtype's name.
         tuning.warm_cells(cells, cache=cache, dtype_name=cfg.dtype, log=log)
+        # Key on the *pool* dtype, which is what the serve-time ppb lookup
+        # keys on (k_pages.dtype.name): int8 pools must warm int8 entries,
+        # not compute-dtype ones that would never be hit.
+        pool_dtype = ("int8" if getattr(cfg, "kv_cache_dtype", "") == "int8"
+                      else cfg.dtype)
+        for g_slots, logical, head_dim, window in paged_geoms or []:
+            key = tuning.cache_key("paged_decode", g_slots, logical, head_dim,
+                                   pool_dtype, tuning.backend_name())
+            mp = max(1, logical // page_size)
+            was_hit = tuning.lookup_paged_decode(
+                cache, key, page_size=page_size, max_pages=mp,
+                count=False) is not None
+            ppb = tuning.autotune_paged_decode(
+                g_slots, logical, head_dim, page_size=page_size,
+                kv_heads=cfg.num_kv_heads, q_heads=cfg.num_heads,
+                window=window, dtype_name=pool_dtype, cache=cache, log=log)
+            # a cell the interpret-mode cap skipped persists nothing
+            tuned = tuning.lookup_paged_decode(
+                cache, key, page_size=page_size, max_pages=mp,
+                count=False) is not None
+            status = "hit" if was_hit else "tuned" if tuned else "skipped"
+            log(f"tile-cache {status:<7} "
+                f"paged_decode       m={g_slots:<6} k={logical:<6} "
+                f"n={head_dim:<6} -> pages_per_block={ppb}")
     else:
         log(f"tile-cache: loaded {len(cache)} entries from "
-            f"{cache.path or '<memory>'} for {len(cells)} serving cells")
+            f"{cache.path or '<memory>'} for {len(cells)} serving cells"
+            + (f" + {len(paged_geoms)} paged-decode geoms" if paged_geoms
+               else ""))
     tuning.set_tile_mode("cached")
 
 
@@ -257,6 +287,13 @@ def main(argv=None) -> int:
     p.add_argument("--temperature", type=float, default=0.0)
     p.add_argument("--dense", action="store_true",
                    help="legacy dense-cache loop instead of the paged engine")
+    p.add_argument("--paged-kernel", default=None,
+                   choices=["auto", "fused", "interpret", "reference"],
+                   help="paged decode attention implementation (default: "
+                        "$KRAKEN_PAGED_DECODE, else auto — fused Pallas "
+                        "kernel on TPU, dense-gather reference elsewhere; "
+                        "'interpret' runs the fused kernel in Pallas "
+                        "interpret mode for off-TPU validation)")
     p.add_argument("--repeat", type=int, default=1,
                    help="serve the workload N times through one engine; a "
                         "warm pass must print zero retraces")
@@ -295,7 +332,12 @@ def main(argv=None) -> int:
             warm_tile_cache(cfg, slots=args.slots,
                             prompt_lens=servable(buckets),
                             cache_len=args.cache_len, autotune=args.autotune,
-                            prefill_batch=args.slots)
+                            prefill_batch=args.slots,
+                            paged_geoms=PagedEngine.pool_geoms(
+                                model, slots=args.slots,
+                                page_size=args.page_size,
+                                max_len=args.cache_len),
+                            page_size=args.page_size)
         else:
             # the dense loop buckets too (attn families): warm the shapes
             # it actually compiles, not the raw prompt lengths
@@ -316,7 +358,9 @@ def main(argv=None) -> int:
     if use_engine:
         eng = PagedEngine(model, params, slots=args.slots,
                           page_size=args.page_size, max_len=args.cache_len,
-                          temperature=args.temperature)
+                          temperature=args.temperature,
+                          decode_kernel=args.paged_kernel)
+        print(f"# paged decode kernel: {eng.decode_kernel}")
         done = {}
         for rep in range(max(1, args.repeat)):
             before = (eng._prefill.retraces, eng._decode.retraces)

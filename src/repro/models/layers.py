@@ -475,14 +475,28 @@ class PagedKVCache:
 
     Allocation/free of pages is host-side bookkeeping
     (``repro.serving.paged_kv.PageAllocator``); the device only ever sees
-    gather/scatter through the table — the same program serves any mix of
-    request lengths, which is the serving-side restatement of the paper's
+    scatter through the table — decode attention walks the table *inside*
+    the fused Pallas kernel (kernels/paged_attention.py), so the same
+    program serves any mix of request lengths at slot-sized HBM traffic,
+    which is the serving-side restatement of the paper's
     one-uniform-dataflow thesis.
+
+    With an int8 pool (``cfg.kv_cache_dtype == "int8"``), ``k``/``v`` hold
+    int8 values with per-(page, head, offset) symmetric scales in
+    ``k_scale``/``v_scale`` ([n_pages, KV, page_size] f32); dequantization
+    fuses into the kernel's score/context dot products exactly like
+    ``decode_attention``'s dense int8 path.
     """
     k: jax.Array
     v: jax.Array
     pos: jax.Array
     page_table: jax.Array
+    k_scale: jax.Array | None = None
+    v_scale: jax.Array | None = None
+
+    @property
+    def quantized(self) -> bool:
+        return self.k_scale is not None
 
     @property
     def page_size(self) -> int:
@@ -498,7 +512,7 @@ class PagedKVCache:
 
 
 jax.tree_util.register_dataclass(
-    PagedKVCache, ("k", "v", "pos", "page_table"), ())
+    PagedKVCache, ("k", "v", "pos", "page_table", "k_scale", "v_scale"), ())
 
 
 @dataclasses.dataclass
@@ -509,15 +523,24 @@ class AttnOutput:
 
 def _paged_decode(cfg, cache: PagedKVCache, q, k, v, *, positions, window: int):
     """One-token decode against a paged cache: scatter the new K/V into each
-    slot's page, gather the slot's pages into a contiguous [B, KV, L, D]
-    view, attend with per-slot position masks.
+    slot's page, then attend **straight off the page pools** with the fused
+    flash-decode kernel (kernels/paged_attention.py) — the page-table walk
+    happens inside the kernel's grid, so no dense ``[B, KV, L, D]`` view is
+    ever materialized on the hot path.
+
+    The old full-table gather survives only as the reference implementation
+    (mode ``"reference"``: the off-TPU default, and the oracle the property
+    tests pin the kernel to); ``kernels.paged_attention.set_paged_decode_mode``
+    / ``$KRAKEN_PAGED_DECODE`` select per process, the engine's
+    ``decode_kernel=`` per program.
 
     ``positions`` must be per-slot [B, 1].  Unallocated slots carry the
     out-of-bounds page sentinel in their table row, so their scatters drop
-    (``mode="drop"``) and their gathers clamp to an arbitrary real page —
-    harmless, because the engine discards their logits and their pos mask
-    never admits future reads.
+    (``mode="drop"``) and their reads are skipped (fused) or clamped+masked
+    (reference) — harmless, because the engine discards their logits and
+    their pos mask never admits future reads.
     """
+    from repro.kernels import paged_attention as _pa
     if positions.ndim != 2:
         raise ValueError("paged decode needs per-slot [B, 1] positions")
     if k.shape[2] != 1:
@@ -531,20 +554,41 @@ def _paged_decode(cfg, cache: PagedKVCache, q, k, v, *, positions, window: int):
     rows = jnp.arange(bsz)
     pp = cache.page_table[rows, li // ps]                      # [B] phys page
     off = li % ps
+    ksc = vsc = None
+    if cache.quantized:
+        from repro.kernels.decode_attention import quantize_kv
+        k, ks_new = quantize_kv(k)
+        v, vs_new = quantize_kv(v)
+        ksc = cache.k_scale.at[pp, :, off].set(ks_new[:, :, 0], mode="drop")
+        vsc = cache.v_scale.at[pp, :, off].set(vs_new[:, :, 0], mode="drop")
     ck = cache.k.at[pp, :, off].set(k[:, :, 0], mode="drop")
     cv = cache.v.at[pp, :, off].set(v[:, :, 0], mode="drop")
     cpos = cache.pos.at[pp, off].set(pvec, mode="drop")
     new_cache = PagedKVCache(k=ck, v=cv, pos=cpos,
-                             page_table=cache.page_table)
+                             page_table=cache.page_table,
+                             k_scale=ksc, v_scale=vsc)
 
-    kvh, hd = cfg.num_kv_heads, cfg.head_dim
-    kg = ck[cache.page_table]                                  # [B,MP,KV,ps,D]
-    vg = cv[cache.page_table]
-    kg = kg.transpose(0, 2, 1, 3, 4).reshape(bsz, kvh, logical, hd)
-    vg = vg.transpose(0, 2, 1, 3, 4).reshape(bsz, kvh, logical, hd)
-    posg = cpos[cache.page_table].reshape(bsz, logical)        # [B, L]
-    out = _gqa_sdpa(q, kg, vg, mask_mode="causal", window=window,
-                    q_pos=positions, kv_pos=posg)
+    mode = _pa.resolve_paged_decode_mode()
+    if mode == "reference":
+        kvh, hd = cfg.num_kv_heads, cfg.head_dim
+        kg = ck[cache.page_table]                              # [B,MP,KV,ps,D]
+        vg = cv[cache.page_table]
+        kg = kg.transpose(0, 2, 1, 3, 4).reshape(bsz, kvh, logical, hd)
+        vg = vg.transpose(0, 2, 1, 3, 4).reshape(bsz, kvh, logical, hd)
+        posg = cpos[cache.page_table].reshape(bsz, logical)    # [B, L]
+        if cache.quantized:
+            ksg = ksc[cache.page_table].transpose(0, 2, 1, 3)
+            vsg = vsc[cache.page_table].transpose(0, 2, 1, 3)
+            kg = kg.astype(jnp.float32) * ksg.reshape(bsz, kvh, logical)[..., None]
+            vg = vg.astype(jnp.float32) * vsg.reshape(bsz, kvh, logical)[..., None]
+        out = _gqa_sdpa(q, kg, vg, mask_mode="causal", window=window,
+                        q_pos=positions, kv_pos=posg)
+    else:
+        out = ops.kraken_paged_attention(
+            q[:, :, 0], ck, cv, pos_pages=cpos,
+            page_table=cache.page_table, q_pos=pvec,
+            k_scale=ksc, v_scale=vsc, window=window,
+            use_pallas=True, interpret=(mode == "interpret"))[:, :, None]
     return out, new_cache
 
 

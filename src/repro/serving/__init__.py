@@ -8,8 +8,10 @@ architecture families the paged engine does not cover yet.
 
 from repro.serving.bucketing import bucket_for, default_buckets, pad_prompts
 from repro.serving.engine import JitCounter, PagedEngine, attn_only_stack
-from repro.serving.paged_kv import (PageAllocator, ceil_pages, gather_pages,
-                                    invalidate_beyond, make_pool, reset_pages,
+from repro.serving.paged_kv import (PageAllocator, PoolLayout, ceil_pages,
+                                    gather_pages, invalidate_beyond,
+                                    make_pool, modeled_decode_bytes,
+                                    pool_layout, reset_pages,
                                     scatter_prefill)
 from repro.serving.scheduler import (DONE, QUEUED, REJECTED, RUNNING,
                                      FIFOScheduler, ServeRequest, summarize)
@@ -19,6 +21,7 @@ __all__ = [
     "FIFOScheduler",
     "ServeRequest", "summarize", "bucket_for", "default_buckets",
     "pad_prompts", "ceil_pages", "make_pool", "scatter_prefill",
-    "reset_pages", "gather_pages", "invalidate_beyond",
+    "reset_pages", "gather_pages", "invalidate_beyond", "PoolLayout",
+    "pool_layout", "modeled_decode_bytes",
     "QUEUED", "RUNNING", "DONE", "REJECTED",
 ]

@@ -98,11 +98,35 @@ class PagedEngine:
                 and getattr(model.cfg, "kv_cache_dtype", "") != "int8"
                 and model._unroll_decode("decode"))
 
+    @staticmethod
+    def _ring_len(slot, max_len: int) -> int:
+        """A layer's pool ring length: its sliding window, capped at (or
+        defaulting to) the engine's max context."""
+        return min(slot.window, max_len) if slot.window else max_len
+
+    @classmethod
+    def pool_geoms(cls, model: Model, *, slots: int, page_size: int,
+                   max_len: int) -> list[tuple[int, int, int, int]]:
+        """The distinct ``(slots, logical_len, head_dim, window)``
+        paged-decode cell geometries an engine with these knobs traces —
+        the first three are the identity the ``op_kind="paged_decode"``
+        autotune cache is keyed on, the window is the masking protocol the
+        measurement must run under.  Derived here, next to the pool
+        construction itself, so ``serve --autotune`` warmup can never drift
+        from what the decode program looks up."""
+        geoms = set()
+        for s in model.stack.pattern:
+            logical = ceil_pages(cls._ring_len(s, max_len),
+                                 page_size) * page_size
+            geoms.add((slots, logical, model.cfg.head_dim, s.window))
+        return sorted(geoms)
+
     def __init__(self, model: Model, params, *, slots: int = 4,
                  page_size: int = 8, max_len: int = 64,
                  buckets: list[int] | None = None, max_queue: int = 64,
                  temperature: float = 0.0, seed: int = 0,
-                 overcommit: float = 1.0):
+                 overcommit: float = 1.0, decode_kernel: str | None = None):
+        from repro.kernels import paged_attention as _pa
         cfg = model.cfg
         stack = model.stack
         if not self.supports(model):   # the one eligibility predicate
@@ -121,10 +145,8 @@ class PagedEngine:
                                    max_total_len=max_len)
 
         # --- page pools: one allocator per distinct ring length ------------
-        def ring_len(slot):
-            return min(slot.window, max_len) if slot.window else max_len
-
-        self._layer_rings = [ring_len(s) for s in stack.pattern]
+        self._layer_rings = [self._ring_len(s, max_len)
+                             for s in stack.pattern]
         group_pps = sorted({ceil_pages(r, page_size)
                             for r in self._layer_rings})
         self.allocators: dict[int, PageAllocator] = {
@@ -137,7 +159,7 @@ class PagedEngine:
         dt = jnp.dtype(cfg.dtype)
 
         def leaf(slot):
-            pps = ceil_pages(ring_len(slot), page_size)
+            pps = ceil_pages(self._ring_len(slot, max_len), page_size)
             alloc = self.allocators[pps]
             return make_pool(cfg, n_pages=alloc.n_pages, page_size=page_size,
                              max_pages=pps, n_slots=slots, dtype=dt)
@@ -163,8 +185,16 @@ class PagedEngine:
                 pools, dense, is_leaf=_is_paged)
             return last, pools
 
+        # Resolve the decode attention implementation once (``decode_kernel``
+        # argument > $KRAKEN_PAGED_DECODE > auto: fused on TPU, dense-gather
+        # reference elsewhere) and pin it into this engine's trace — two
+        # engines with different kernels coexist in one process.
+        with _pa.use_paged_decode_mode(decode_kernel):
+            self.decode_kernel = _pa.resolve_paged_decode_mode()
+
         def decode_fn(params, pools, tokens, pos):
-            return model.decode_step(params, pools, tokens, pos)
+            with _pa.use_paged_decode_mode(self.decode_kernel):
+                return model.decode_step(params, pools, tokens, pos)
 
         def reset_fn(pools, *group_ids):
             ids = dict(zip(self._group_keys, group_ids))
@@ -322,6 +352,7 @@ class PagedEngine:
             "prefill_cache_size": self._prefill.cache_size,
             "decode_steps": self.decode_steps,
             "decode_retraces": self._decode.retraces,
+            "decode_kernel": self.decode_kernel,
             "buckets": list(self.buckets),
             "free_pages": {g: a.free_pages
                            for g, a in self.allocators.items()},

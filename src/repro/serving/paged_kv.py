@@ -28,6 +28,7 @@ position-based attention mask keeps the result exact as long as
 from __future__ import annotations
 
 import dataclasses
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -42,14 +43,66 @@ def ceil_pages(length: int, page_size: int) -> int:
 
 def make_pool(cfg, *, n_pages: int, page_size: int, max_pages: int,
               n_slots: int, dtype) -> PagedKVCache:
-    """A fresh page pool + all-sentinel table for one attention layer."""
+    """A fresh page pool + all-sentinel table for one attention layer.
+
+    ``cfg.kv_cache_dtype == "int8"`` builds a quantized pool: int8 values
+    plus per-(page, head, offset) f32 scales, the paged twin of
+    ``KVCache``'s int8 layout — dequantization fuses into the paged-decode
+    kernel so the HBM read stays half-width.
+    """
     kvh, hd = cfg.num_kv_heads, cfg.head_dim
+    ksc = vsc = None
+    if getattr(cfg, "kv_cache_dtype", "") == "int8":
+        dtype = jnp.int8
+        ksc = jnp.zeros((n_pages, kvh, page_size), jnp.float32)
+        vsc = jnp.zeros((n_pages, kvh, page_size), jnp.float32)
     return PagedKVCache(
         k=jnp.zeros((n_pages, kvh, page_size, hd), dtype),
         v=jnp.zeros((n_pages, kvh, page_size, hd), dtype),
         pos=jnp.full((n_pages, page_size), POS_EMPTY, jnp.int32),
         page_table=jnp.full((n_slots, max_pages), n_pages, jnp.int32),
+        k_scale=ksc, v_scale=vsc,
     )
+
+
+class PoolLayout(NamedTuple):
+    """The pool-geometry constants the fused kernel (and its autotuner /
+    traffic models) need — one derivation, shared by the kernel wrapper,
+    the warmers, and the benchmarks."""
+    n_pages: int
+    kv_heads: int
+    page_size: int
+    head_dim: int
+    n_slots: int
+    max_pages: int
+    logical_len: int
+    itemsize: int
+
+
+def pool_layout(pool: PagedKVCache) -> PoolLayout:
+    n_pages, kvh, ps, hd = pool.k.shape
+    n_slots, mp = pool.page_table.shape
+    return PoolLayout(n_pages=n_pages, kv_heads=kvh, page_size=ps,
+                      head_dim=hd, n_slots=n_slots, max_pages=mp,
+                      logical_len=mp * ps, itemsize=pool.k.dtype.itemsize)
+
+
+def modeled_decode_bytes(lay: PoolLayout) -> tuple[int, int]:
+    """Modeled per-token attention HBM bytes for one pool, both decode
+    paths: ``(gather_bytes, fused_bytes)``.
+
+    gather+flash re-materializes every slot's pages as a dense
+    [B, KV, L, D] tensor each token — read the pool, write the copy, read
+    the copy inside attention: 3x the slot-resident KV and position bytes.
+    The fused kernel walks the table in-grid and reads each live page
+    exactly once (plus the scalar table and position rows).  The single
+    source of this model — the benchmarks all price against it.
+    """
+    slot_kv = 2 * (lay.n_slots * lay.kv_heads * lay.logical_len
+                   * lay.head_dim * lay.itemsize)
+    pos_bytes = lay.n_slots * lay.logical_len * 4
+    tbl_bytes = lay.n_slots * lay.max_pages * 4
+    return 3 * (slot_kv + pos_bytes) + tbl_bytes, slot_kv + pos_bytes + tbl_bytes
 
 
 class PageAllocator:
@@ -138,12 +191,21 @@ def scatter_prefill(pool: PagedKVCache, dense: KVCache,
     ppf, offf = pp.reshape(-1), off.reshape(-1)
     k_src = dense.k.transpose(0, 2, 1, 3).reshape(bp * s, kvh, hd)
     v_src = dense.v.transpose(0, 2, 1, 3).reshape(bp * s, kvh, hd)
+    ksc, vsc = pool.k_scale, pool.v_scale
+    if pool.quantized:
+        # int8 prefill: the dense cache carries [Bp, KV, S] scales — scatter
+        # them alongside the values, same (page, offset) addressing
+        ks_src = dense.k_scale.transpose(0, 2, 1).reshape(bp * s, kvh)
+        vs_src = dense.v_scale.transpose(0, 2, 1).reshape(bp * s, kvh)
+        ksc = pool.k_scale.at[ppf, :, offf].set(ks_src, mode="drop")
+        vsc = pool.v_scale.at[ppf, :, offf].set(vs_src, mode="drop")
     return PagedKVCache(
         k=pool.k.at[ppf, :, offf].set(k_src, mode="drop"),
         v=pool.v.at[ppf, :, offf].set(v_src, mode="drop"),
         pos=pool.pos.at[ppf, offf].set(
             jnp.broadcast_to(j, (bp, s)).reshape(-1), mode="drop"),
         page_table=pool.page_table,
+        k_scale=ksc, v_scale=vsc,
     )
 
 

@@ -192,6 +192,172 @@ def _same_plan(a: TileConfig, b: TileConfig) -> bool:
     return (a.bm, a.bk, a.bn, a.schedule) == (b.bm, b.bk, b.bn, b.schedule)
 
 
+def paged_decode_candidates(page_size: int, max_pages: int) -> list[int]:
+    """The ``pages_per_block`` lattice for the fused paged-decode kernel:
+    every power of two up to the whole table, the table itself, and the
+    static default."""
+    from repro.kernels.paged_attention import default_pages_per_block
+    cands = {max_pages, default_pages_per_block(page_size, max_pages)}
+    ppb = 1
+    while ppb <= max_pages:
+        cands.add(ppb)
+        ppb *= 2
+    return sorted(c for c in cands if 1 <= c <= max_pages)
+
+
+def lookup_paged_decode(cache: tcache.TileCache, key: str, *,
+                        page_size: int, max_pages: int,
+                        count: bool = True) -> int | None:
+    """A validated ``paged_decode`` cache hit, or None.
+
+    The key's ``m/k/n`` (slots/logical_len/head_dim) under-determines the
+    cell: the same logical length can be built from different page sizes,
+    and a ``pages_per_block`` tuned for 8-token pages means nothing for
+    16-token ones.  The entry records its ``page_size``; a mismatch is a
+    miss (autotune then re-measures for the layout actually being served).
+    ``count=False`` peeks without touching the hit/miss counters (status
+    reporting around a call that will do its own counted lookup).
+    """
+    entry = cache.peek(key)
+    if not entry or entry.get("page_size") != page_size:
+        if entry is not None and count:
+            cache.misses += 1
+        return None
+    try:
+        ppb = int(entry["bn"])
+    except (KeyError, TypeError, ValueError):
+        return None
+    if count:
+        cache.hits += 1
+    return max(1, min(ppb, max_pages))
+
+
+def steady_state_pool(slots: int, logical_len: int, head_dim: int, *,
+                      page_size: int, kv_heads: int = 1,
+                      q_heads: int | None = None,
+                      dtype_name: str = "float32", seed: int = 0):
+    """A page pool at serving steady state: every slot full (ring at
+    ``q_pos = logical_len - 1``), shuffled physical pages, position-exact
+    rows — the one fixture the paged-decode autotuner times and the kernel
+    benchmarks reuse (a layout change here updates both).
+
+    Returns ``(q, k, v, pos_pages, page_table, q_pos, k_scale, v_scale)``;
+    the scales are ``None`` unless ``dtype_name == "int8"``.  A
+    ``logical_len`` that page-size does not divide gets a ceil-sized table
+    whose tail offsets stay empty (the engine's pools are page-aligned by
+    construction; this keeps the public API crash-free off that path).
+    """
+    import jax.numpy as jnp
+    q_heads = q_heads or kv_heads
+    max_pages = max(1, -(-logical_len // max(1, page_size)))
+    rng = np.random.default_rng(seed)
+    n_pages = slots * max_pages
+    table = jnp.asarray(
+        rng.permutation(n_pages).reshape(slots, max_pages), jnp.int32)
+    vals_k = rng.normal(size=(n_pages, kv_heads, page_size, head_dim))
+    vals_v = rng.normal(size=(n_pages, kv_heads, page_size, head_dim))
+    ksc = vsc = None
+    if dtype_name == "int8":
+        k = jnp.asarray(np.clip(np.round(vals_k * 40), -127, 127), jnp.int8)
+        v = jnp.asarray(np.clip(np.round(vals_v * 40), -127, 127), jnp.int8)
+        sc_shape = (n_pages, kv_heads, page_size)
+        ksc = jnp.asarray(rng.uniform(0.01, 0.1, sc_shape), jnp.float32)
+        vsc = jnp.asarray(rng.uniform(0.01, 0.1, sc_shape), jnp.float32)
+        q_dt = jnp.float32
+    else:
+        q_dt = jnp.dtype(dtype_name)
+        k = jnp.asarray(vals_k, q_dt)
+        v = jnp.asarray(vals_v, q_dt)
+    from repro.kernels.paged_attention import POS_EMPTY
+    pos = np.full((n_pages, page_size), POS_EMPTY, np.int32)
+    tbl_np = np.asarray(table)
+    idx = np.arange(logical_len)
+    for b in range(slots):
+        pos[tbl_np[b, idx // page_size], idx % page_size] = idx
+    q = jnp.asarray(rng.normal(size=(slots, q_heads, head_dim)), q_dt)
+    q_pos = jnp.full((slots,), logical_len - 1, jnp.int32)
+    return q, k, v, jnp.asarray(pos), table, q_pos, ksc, vsc
+
+
+def autotune_paged_decode(slots: int, logical_len: int, head_dim: int, *,
+                          page_size: int, kv_heads: int = 1,
+                          q_heads: int | None = None, window: int = 0,
+                          dtype_name: str | None = None, reps: int = 3,
+                          warmup: int = 1,
+                          cache: tcache.TileCache | None = None,
+                          log=None) -> int:
+    """Measured ``pages_per_block`` for the fused paged-decode kernel.
+
+    Keyed ``op_kind="paged_decode"`` with ``m/k/n`` <- slots / logical_len /
+    head_dim (the decode cell's identity); the winning ``pages_per_block``
+    is recorded in the entry's ``bn`` field, the same convention as
+    ``conv_direct``'s ``bco``.  The measurement serves a steady-state pool:
+    every slot full (ring at ``q_pos = logical_len - 1``), shuffled physical
+    pages — the block-layout question the static model cannot answer.
+    Returns the winning ``pages_per_block``.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.paged_attention import paged_decode_attention
+    if cache is None:
+        cache = tcache.TileCache(path=None)
+    dtype_name = dtype_name or ("bfloat16" if _on_tpu() else "float32")
+    max_pages = max(1, -(-logical_len // max(1, page_size)))
+    key = tcache.cache_key("paged_decode", slots, logical_len, head_dim,
+                           dtype_name, backend_name())
+    hit = lookup_paged_decode(cache, key, page_size=page_size,
+                              max_pages=max_pages)
+    if hit is not None:
+        return hit
+    q_heads = q_heads or kv_heads
+    from repro import tuning
+    if (not _on_tpu()
+            and slots * q_heads * logical_len * head_dim
+            > tuning.INTERPRET_MACS_CAP):
+        from repro.kernels.paged_attention import default_pages_per_block
+        if log is not None:
+            log(f"[autotune] {key}: skipped — interpret-mode cap; using the "
+                f"static pages_per_block (warm this cell on TPU)")
+        return default_pages_per_block(page_size, max_pages)
+
+    interpret = not _on_tpu()
+    q, k, v, pos, table, q_pos, ksc, vsc = steady_state_pool(
+        slots, logical_len, head_dim, page_size=page_size,
+        kv_heads=kv_heads, q_heads=q_heads, dtype_name=dtype_name)
+
+    candidates = paged_decode_candidates(page_size, max_pages)
+    best_ppb, best_us = candidates[0], float("inf")
+    for ppb in candidates:
+        f = jax.jit(lambda q, k, v, pos, table, q_pos, ksc, vsc, ppb=ppb:
+                    paged_decode_attention(
+                        q, k, v, pos_pages=pos, page_table=table,
+                        q_pos=q_pos, k_scale=ksc, v_scale=vsc,
+                        window=window, pages_per_block=ppb,
+                        interpret=interpret))
+        for _ in range(max(warmup, 1)):
+            jax.block_until_ready(f(q, k, v, pos, table, q_pos, ksc, vsc))
+        samples = []
+        for _ in range(max(reps, 1)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(q, k, v, pos, table, q_pos, ksc, vsc))
+            samples.append((time.perf_counter() - t0) * 1e6)
+        us = statistics.median(samples)
+        if us < best_us:
+            best_ppb, best_us = ppb, us
+    cfg = elastic._make_config(slots, logical_len, head_dim, elastic.SUBLANE,
+                               elastic.round_up(logical_len, elastic.MXU_DIM),
+                               best_ppb, "output_stationary", 4)
+    cache.put(key, cfg, measured_us=best_us,
+              extra={"candidates_timed": len(candidates),
+                     "kind": "paged_decode_ppb", "page_size": page_size,
+                     "window": window})
+    cache.save()
+    if log is not None:
+        log(f"[autotune] {key}: pages_per_block={best_ppb} {best_us:.0f}us "
+            f"over {len(candidates)} candidates")
+    return best_ppb
+
+
 def conv_cache_key(x_shape, k_shape,
                    stride: tuple[int, int]) -> tuple[str, int, int, int]:
     """The ``conv_direct`` cache key for a (pre-padded) conv geometry.

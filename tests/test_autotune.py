@@ -307,6 +307,58 @@ def test_autotune_conv_round_trip(tmp_path):
     assert all(k.startswith("conv_direct:") for k in cache2.entries)
 
 
+def test_autotune_paged_decode_round_trip(tmp_path):
+    """op_kind="paged_decode": tune -> persist -> fresh-instance reload
+    replays the winning pages_per_block without re-measuring, under its own
+    key namespace keyed m/k/n <- slots/logical_len/head_dim."""
+    path = str(tmp_path / "plans.json")
+    ppb = search.autotune_paged_decode(2, 16, 8, page_size=4, kv_heads=2,
+                                       q_heads=4, reps=1,
+                                       cache=tcache.TileCache(path))
+    assert 1 <= ppb <= 4
+    cache2 = tcache.TileCache(path)
+    key = tcache.cache_key("paged_decode", 2, 16, 8, "float32",
+                           search.backend_name())
+    entry = cache2.peek(key)
+    assert entry is not None and entry["bn"] == ppb
+    assert entry["kind"] == "paged_decode_ppb" and entry["measured_us"] > 0
+    assert all(k.startswith("paged_decode:") for k in cache2.entries)
+    assert search.autotune_paged_decode(2, 16, 8, page_size=4, kv_heads=2,
+                                        q_heads=4, reps=1,
+                                        cache=cache2) == ppb
+    assert cache2.hits == 1 and cache2.misses == 0
+
+
+def test_resolve_pages_per_block_modes(tmp_path):
+    """The kernel-side ppb lookup honors the process-wide tile policy:
+    "model" ignores the cache, "cached" replays a persisted winner (even one
+    the static default would never pick) and falls back on a miss."""
+    from repro.core import elastic
+    from repro.kernels.paged_attention import (default_pages_per_block,
+                                               resolve_pages_per_block)
+    geom = dict(slots=2, logical_len=16, head_dim=8, page_size=4,
+                max_pages=4, dtype_name="float32")
+    static = default_pages_per_block(4, 4)
+    assert resolve_pages_per_block(**geom) == static   # mode=model default
+
+    cache = tuning.set_tile_cache(tcache.TileCache(path=None))
+    key = tcache.cache_key("paged_decode", 2, 16, 8, "float32",
+                           search.backend_name())
+    cfg = elastic._make_config(2, 16, 8, elastic.SUBLANE, 128, 3,
+                               "output_stationary", 4)
+    cache.put(key, cfg, extra={"page_size": 4})        # ppb=3: not the default
+    tuning.set_tile_mode("cached")
+    assert resolve_pages_per_block(**geom) == 3
+    assert resolve_pages_per_block(**{**geom, "logical_len": 32,
+                                     "max_pages": 8}) == \
+        default_pages_per_block(4, 8)                  # miss -> static
+    # same m/k/n from a different page layout: the key under-determines the
+    # cell, so the entry's recorded page_size gates the replay
+    assert resolve_pages_per_block(**{**geom, "page_size": 2,
+                                     "max_pages": 8}) == \
+        default_pages_per_block(2, 8)
+
+
 def test_serving_cells_dedup_and_coverage():
     from repro.configs import get_arch, smoke_config
     from repro.core.unified import serving_cells
