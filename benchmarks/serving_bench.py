@@ -1,11 +1,13 @@
-"""Serving-path micro-benchmark: dense continuous batching vs paged engine.
+"""Serving-path micro-benchmark over the uniform-engine families.
 
-One mixed-length workload served twice through each path (first pass warms
-the compile caches; the second pass is timed), reporting decode throughput
-and the compile counts — the paged engine's bucketed prefill should show a
-constant program count while the tok/s stays at least at parity with the
-dense loop on this smoke-sized workload (its real win, slot-sized cache
-traffic and zero warm retraces, shows at production cache lengths).
+One mixed-length workload served twice through the engine per architecture
+(first pass warms the compile caches; the second pass is timed), reporting
+decode throughput and the warm-pass compile deltas — the engine's bucketed
+prefill shows a constant program count for every family, which is the
+uniformity claim priced: attention (yi-6b), RWKV (rwkv6-3b), and hybrid
+Mamba+shared-attention (zamba2-1.2b) all run the same three programs.
+A second table compares the two paged-decode attention paths
+(dense-gather reference vs fused Pallas kernel).
 """
 
 from __future__ import annotations
@@ -13,71 +15,56 @@ from __future__ import annotations
 import dataclasses
 import time
 
+ENGINE_ARCHS = ("yi-6b", "rwkv6-3b", "zamba2-1.2b")
+
 
 def _workload(rng, vocab: int, requests: int, lens: list[int]):
     return [rng.integers(0, vocab, size=(lens[i % len(lens)],)).astype("int32")
             for i in range(requests)]
 
 
-def dense_vs_paged(arch: str = "yi-6b", *, requests: int = 6,
-                   slots: int = 2, max_new: int = 8,
-                   lens: tuple = (4, 7, 12), cache_len: int = 32) -> list[tuple]:
+def _run_pass(eng, rng, vocab, requests, lens, max_new):
+    # sched.done accumulates across passes on one engine: count only the
+    # tokens this pass produced
+    before = sum(len(r.out) for r in eng.sched.done)
+    t0 = time.perf_counter()
+    for p in _workload(rng, vocab, requests, lens):
+        eng.submit(p, max_new)
+    eng.run_until_idle()
+    dt = time.perf_counter() - t0
+    return (sum(len(r.out) for r in eng.sched.done) - before) / dt
+
+
+def engine_families(archs=ENGINE_ARCHS, *, requests: int = 6, slots: int = 2,
+                    max_new: int = 8, lens: tuple = (4, 7, 12),
+                    cache_len: int = 32) -> list[tuple]:
+    """Every architecture family through the one engine: tok/s on the warm
+    pass plus the warm-pass retrace deltas (must be 0+0 — the zero-retrace
+    guarantee now holds for the recurrent families too)."""
     import numpy as np
     import jax
 
     from repro.configs import get_arch, smoke_config
-    from repro.launch.serve import Request, generate
     from repro.models.model import Model
     from repro.serving import PagedEngine
 
-    cfg = dataclasses.replace(smoke_config(get_arch(arch)), dtype="float32")
-    model = Model(cfg)
-    params = model.init(jax.random.key(0))
-    rng = np.random.default_rng(0)
     rows = []
-
-    def run_dense():
-        reqs = [Request(rid=i, prompt=p, max_new=max_new)
-                for i, p in enumerate(_workload(rng, cfg.vocab_size,
-                                                requests, list(lens)))]
-        stats: dict = {}
-        t0 = time.perf_counter()
-        done = generate(model, params, reqs, batch_slots=slots,
-                        cache_len=cache_len, log=lambda *a: None,
-                        stats=stats)
-        dt = time.perf_counter() - t0
-        toks = sum(len(v) for v in done.values())
-        return toks / dt, stats
-
-    def run_paged(eng):
-        # sched.done accumulates across passes on one engine: count only
-        # the tokens this pass produced
-        before = sum(len(r.out) for r in eng.sched.done)
-        t0 = time.perf_counter()
-        for i, p in enumerate(_workload(rng, cfg.vocab_size, requests,
-                                        list(lens))):
-            eng.submit(p, max_new)
-        eng.run_until_idle()
-        dt = time.perf_counter() - t0
-        toks = sum(len(r.out) for r in eng.sched.done) - before
-        return toks / dt
-
-    run_dense()                      # warm
-    tok_s_dense, stats = run_dense()  # timed
-    rows.append((f"serving_dense_{arch}", 1e6 / max(tok_s_dense, 1e-9),
-                 f"tok_s={tok_s_dense:.1f}|prefill_traces="
-                 f"{stats['prefill_retraces']}"))
-
-    eng = PagedEngine(model, params, slots=slots, page_size=8,
-                      max_len=cache_len)
-    run_paged(eng)                   # warm
-    before = (eng._prefill.retraces, eng._decode.retraces)
-    tok_s_paged = run_paged(eng)     # timed (and warm => zero new traces)
-    rows.append((f"serving_paged_{arch}", 1e6 / max(tok_s_paged, 1e-9),
-                 f"tok_s={tok_s_paged:.1f}|speedup_vs_dense="
-                 f"{tok_s_paged / max(tok_s_dense, 1e-9):.2f}x|"
-                 f"warm_retraces={eng._prefill.retraces - before[0]}"
-                 f"+{eng._decode.retraces - before[1]}"))
+    for arch in archs:
+        cfg = dataclasses.replace(smoke_config(get_arch(arch)),
+                                  dtype="float32")
+        model = Model(cfg)
+        params = model.init(jax.random.key(0))
+        rng = np.random.default_rng(0)
+        eng = PagedEngine(model, params, slots=slots, page_size=8,
+                          max_len=cache_len)
+        _run_pass(eng, rng, cfg.vocab_size, requests, list(lens), max_new)
+        before = (eng._prefill.retraces, eng._decode.retraces)
+        tok_s = _run_pass(eng, rng, cfg.vocab_size, requests, list(lens),
+                          max_new)
+        rows.append((f"serving_engine_{arch}", 1e6 / max(tok_s, 1e-9),
+                     f"family={cfg.family}|tok_s={tok_s:.1f}|"
+                     f"warm_retraces={eng._prefill.retraces - before[0]}"
+                     f"+{eng._decode.retraces - before[1]}"))
     return rows
 
 
@@ -106,7 +93,6 @@ def _measured_gather_bytes(eng) -> float | None:
     the measured stand-in for the modeled 3x (None when the backend does
     not expose bytes)."""
     import jax
-    import jax.numpy as jnp
 
     from repro.models.layers import PagedKVCache
 
@@ -159,13 +145,8 @@ def paged_decode_paths(arch: str = "yi-6b", *, requests: int = 6,
     on_tpu = jax.default_backend() == "tpu"
 
     def run(eng):
-        before = sum(len(r.out) for r in eng.sched.done)
-        t0 = time.perf_counter()
-        for p in _workload(rng, cfg.vocab_size, requests, list(lens)):
-            eng.submit(p, max_new)
-        eng.run_until_idle()
-        dt = time.perf_counter() - t0
-        return (sum(len(r.out) for r in eng.sched.done) - before) / dt
+        return _run_pass(eng, rng, cfg.vocab_size, requests, list(lens),
+                         max_new)
 
     rows = []
     eng = PagedEngine(model, params, slots=slots, page_size=8,
@@ -198,7 +179,7 @@ def paged_decode_paths(arch: str = "yi-6b", *, requests: int = 6,
 
 
 def serving_bench() -> list[tuple]:
-    return dense_vs_paged() + paged_decode_paths()
+    return engine_families() + paged_decode_paths()
 
 
 if __name__ == "__main__":

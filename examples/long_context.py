@@ -42,7 +42,8 @@ def run(arch: str, *, cache_len: int = 32, horizon: int = 128,
     decode = jax.jit(model.decode_step, donate_argnums=(1,))
     t0 = time.time()
     for pos in range(8, 8 + horizon):
-        logits, caches = decode(params, caches, tok, jnp.int32(pos))
+        logits, caches = decode(params, caches, tok,
+                                jnp.full((batch,), pos, jnp.int32))
         tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
         assert not bool(jnp.any(jnp.isnan(logits))), (arch, pos)
     dt = time.time() - t0

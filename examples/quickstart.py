@@ -53,7 +53,10 @@ def main():
     tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
     out = [int(tok[0, 0])]
     for t in range(8, 16):
-        logits, caches = model.decode_step(params, caches, tok, jnp.int32(t))
+        # pos is per-slot [B]: lockstep decode just passes the same
+        # position for every row
+        logits, caches = model.decode_step(params, caches, tok,
+                                           jnp.full((1,), t, jnp.int32))
         tok = jnp.argmax(logits, axis=-1)[:, None]
         out.append(int(tok[0, 0]))
     print(f"decoded tokens: {out}")

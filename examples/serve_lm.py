@@ -1,12 +1,15 @@
-"""Serve a small model through the paged serving engine (block/paged KV
-cache, length-bucketed batched prefill, FIFO admission, continuous decode).
+"""Serve a small model through the serving engine (uniform LayerState
+tree: paged KV pools + recurrent slot rows, length-bucketed batched
+prefill, FIFO admission, continuous decode).
 
     PYTHONPATH=src python examples/serve_lm.py
     PYTHONPATH=src python examples/serve_lm.py --arch mixtral-8x22b  # MoE+SWA
-    PYTHONPATH=src python examples/serve_lm.py --dense               # legacy
+    PYTHONPATH=src python examples/serve_lm.py --arch rwkv6-3b       # RWKV
+    PYTHONPATH=src python examples/serve_lm.py --arch zamba2-1.2b    # hybrid
 
-Mixed prompt lengths land in different buckets; ``--repeat 2`` proves the
-warm engine compiles nothing new on the second pass.
+Every registry architecture serves through the same engine.  Mixed prompt
+lengths land in different buckets; ``--repeat 2`` proves the warm engine
+compiles nothing new on the second pass.
 """
 
 import sys

@@ -149,6 +149,38 @@ def moe_cells(*, tokens: int, d_model: int, d_ff: int, n_experts: int,
     )
 
 
+def ssm_cells(cfg, *, tokens: int, name: str = "ssm") -> list[GemmCell]:
+    """The projection GEMMs of the attention-free mixers — the uniform-
+    dataflow work of the RWKV6 and Mamba2 layers (the recurrences
+    themselves are scans, outside the GEMM cell vocabulary; DESIGN.md §5).
+
+    ``family == "ssm"`` lowers the RWKV6 time-mix + decay LoRA and the
+    channel-mix FFN; ``family == "hybrid"`` lowers the Mamba2 in/out
+    projections (the shared attention block's cells come from
+    :func:`attention_cells`, num_heads > 0).  The cell shapes are read
+    straight off the layers' parameter specs (every 2-D spec is one
+    ``x @ w`` through ``dense``), so the autotune work-list can never
+    drift from the GEMMs the model actually executes.  These are the
+    cells the ``serve --autotune`` warm-up must measure for the recurrent
+    families the engine serves.
+    """
+    fam = getattr(cfg, "family", "")
+    if fam == "ssm":
+        from repro.models.ssm import rwkv_channel_specs, rwkv_specs
+        specs = {**rwkv_specs(cfg), **rwkv_channel_specs(cfg)}
+    elif fam == "hybrid":
+        from repro.models.ssm import mamba_specs
+        specs = mamba_specs(cfg)
+    else:
+        return []
+    return [matmul_cell(tokens, s.shape[0], s.shape[1],
+                        name=f"{name}_{pname}")
+            for pname, s in specs.items()
+            # every 2-D spec except the depthwise conv taps (those apply
+            # via a windowed einsum, not the dense GEMM path)
+            if len(s.shape) == 2 and "conv" not in pname]
+
+
 def arch_cells(cfg, *, batch: int, seq_q: int, seq_kv: int | None = None,
                include_logits: bool = True, name: str = "") -> list[GemmCell]:
     """Lower one step of an architecture config to its unique GEMM cells.
@@ -172,6 +204,7 @@ def arch_cells(cfg, *, batch: int, seq_q: int, seq_kv: int | None = None,
             num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
             head_dim=cfg.head_dim, causal=seq_q > 1, window=window,
             name=f"{prefix}_attn")
+    cells += ssm_cells(cfg, tokens=t, name=f"{prefix}_ssm")
     if getattr(cfg, "num_experts", 0):
         cells += moe_cells(tokens=t, d_model=cfg.d_model,
                            d_ff=getattr(cfg, "moe_d_ff", 0) or cfg.d_ff,

@@ -93,7 +93,7 @@ def lower_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
                                            cell.seq_len, mesh, rules,
                                            flat=True)
             tok = jax.ShapeDtypeStruct((cell.global_batch, 1), jnp.int32)
-            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            pos = jax.ShapeDtypeStruct((cell.global_batch,), jnp.int32)
             step = S.make_decode_step(model)
             # Donate the caches: with unrolled decode layers XLA aliases the
             # persistent KV buffers in place (vLLM-style), so each step's

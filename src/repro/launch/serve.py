@@ -1,226 +1,52 @@
-"""Serving launcher: a thin frontend over the paged serving engine.
+"""Serving launcher: a thin frontend over the serving engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
         --requests 8 --max-new 16 --prompt-lens 5,9,12
 
-Default path is :class:`repro.serving.engine.PagedEngine` — block/paged KV
-cache, length-bucketed batched prefill (a warm engine never retraces),
-FIFO admission + per-request metrics.  ``--repeat 2`` serves the workload
-twice through one engine and prints the second pass's compile deltas
-(the CI smoke asserts ``prefill retraces=0 decode retraces=0``).
+The one path is :class:`repro.serving.engine.PagedEngine` — the uniform
+LayerState tree (paged KV pools for attention layers, slot-row states for
+RWKV/Mamba/cross-attn), length-bucketed batched prefill (a warm engine
+never retraces), FIFO admission + per-request metrics.  Every architecture
+in the registry serves through it: ``--arch rwkv6-3b`` and
+``--arch zamba2-1.2b`` run the same programs as ``--arch yi-6b``.
+``--repeat 2`` serves the workload twice through one engine and prints the
+second pass's compile deltas (the CI smoke asserts
+``prefill retraces=0 decode retraces=0``).
 
-``--dense`` (and non-attention architecture families: SSM/hybrid/cross)
-routes through :func:`generate`, the legacy dense-cache continuous-batching
-loop.  It now decodes with **per-slot positions** — the old call passed
-``pos.max()`` for every slot, letting shorter sequences attend past their
-own length — and, for attention-family archs, pads prompts to the same
-length buckets so warm serving compiles each bucket at most once.
+The legacy dense-cache continuous-batching loop (and its ``--dense``
+escape hatch) was deleted; its sequential per-request form survives only
+as the equivalence oracle in ``tests/test_serving_engine.py``.
 """
 
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import sys
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch, smoke_config
 from repro.models.model import Model
 
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray
-    max_new: int
-    out: list = dataclasses.field(default_factory=list)
-
-
-def _attn_only(model: Model) -> bool:
-    from repro.serving.engine import attn_only_stack
-    return attn_only_stack(model)
-
-
-def dense_prefill_buckets(model: Model, cache_len: int) -> list[int] | None:
-    """The dense loop's prompt buckets (attention families only) — the one
-    source of truth, so tile-cache warming enumerates the same prefill
-    shapes :func:`generate` actually compiles.  Buckets are capped at
-    ``cache_len``: a bucket beyond it would ring-evict real prompt tokens
-    out of the prefill sub-cache."""
-    if not _attn_only(model):
-        return None
-    from repro.serving import bucketing
-    buckets = [b for b in bucketing.default_buckets(cache_len, 8)
-               if b <= cache_len]
-    if not buckets or buckets[-1] < cache_len:
-        buckets.append(cache_len)
-    return buckets
-
-
-def generate(model: Model, params, requests: list[Request], *,
-             batch_slots: int = 4, cache_len: int = 64,
-             temperature: float = 0.0, seed: int = 0,
-             log=print, stats: dict | None = None) -> dict[int, list[int]]:
-    """Legacy continuous-batching loop over a dense per-slot KV cache.
-
-    Kept for the architecture families the paged engine does not page yet
-    (SSM states, hybrid shared-attention, cross-attn KV).  Decode runs with
-    per-slot positions; for attention-family archs prompts are padded to
-    length buckets (pad rows invalidated before entering the cache) so a
-    warm mix of prompt lengths compiles one prefill per bucket.  Pass a
-    ``stats`` dict to read back the compile counters.
-    """
-    from repro.serving import bucketing, invalidate_beyond
-    from repro.serving.engine import JitCounter
-
-    queue = list(requests)
-    active: list[Request | None] = [None] * batch_slots
-    pos = np.zeros(batch_slots, np.int32)
-    done: dict[int, list[int]] = {}
-    rejected: list[int] = []
-    attn_only = _attn_only(model)
-    buckets = dense_prefill_buckets(model, cache_len)
-
-    # Flat per-layer cache buffers (the serving layout): with the cache
-    # argument donated, every layer's KV buffer aliases in place — a decode
-    # step touches one slot per layer, not the whole cache (§Perf cell 3).
-    # per_slot_pos: each slot masks/advances at its own absolute position.
-    caches = model.init_caches(batch_slots, cache_len, flat=True,
-                               per_slot_pos=True,
-                               clamp_window=not attn_only)
-    decode = jax.jit(model.decode_step, donate_argnums=(1,))
-    key = jax.random.key(seed)
-
-    def _prefill_padded(params, tokens, length):
-        """Bucket-padded single-request prefill: tokens [1, bucket_len],
-        true ``length``; position-identity cache rows, pads invalidated."""
-        sub = model.init_caches(1, cache_len, flat=True, per_slot_pos=True,
-                                clamp_window=False)
-        batch = {"tokens": tokens,
-                 "positions": jnp.arange(tokens.shape[1], dtype=jnp.int32)}
-        logits, sub, _ = model.forward(params, batch, mode="prefill",
-                                       caches=sub)
-        last = jnp.take_along_axis(
-            logits, jnp.reshape(length - 1, (1, 1, 1)), axis=1)[:, 0]
-        return last, invalidate_beyond(sub, length)
-
-    def _prefill_exact(params, tokens):
-        """Exact-shape prefill (non-attn families): retraces per distinct
-        prompt length — the price of stateful SSM prefill."""
-        sub = model.init_caches(1, cache_len, flat=True, per_slot_pos=True)
-        batch = {"tokens": tokens,
-                 "positions": jnp.arange(tokens.shape[1], dtype=jnp.int32)}
-        last, sub = model.prefill(params, batch, sub)
-        return last[:, -1], sub
-
-    prefill = JitCounter(_prefill_padded if attn_only else _prefill_exact)
-
-    cur_tok = np.zeros((batch_slots, 1), np.int32)
-    steps = 0
-    t0 = time.time()
-    while queue or any(a is not None for a in active):
-        # fill empty slots (continuous batching); keep draining the queue
-        # past rejections and prefill-complete requests so nothing is lost
-        for i in range(batch_slots):
-            while active[i] is None and queue:
-                req = queue.pop(0)
-                sl = len(req.prompt)
-                if attn_only and sl > buckets[-1]:
-                    # admission control, mirroring the paged engine: a
-                    # prompt beyond every bucket (== cache_len) is rejected,
-                    # not silently truncated or crashed on
-                    rejected.append(req.rid)
-                    log(f"req {req.rid}: prompt {sl} > cache {buckets[-1]}, "
-                        "rejected")
-                    continue
-                active[i] = req
-                if attn_only:
-                    blen = bucketing.bucket_for(sl, buckets)
-                    toks, _ = bucketing.pad_prompts([req.prompt], blen, 1)
-                    logits, sub = prefill(params, jnp.asarray(toks),
-                                          jnp.int32(sl))
-                else:
-                    logits, sub = prefill(params,
-                                          jnp.asarray(req.prompt[None, :]))
-                caches = _slot_set(caches, sub, i)
-                cur_tok[i, 0] = int(jnp.argmax(logits[0]))
-                req.out.append(int(cur_tok[i, 0]))
-                pos[i] = sl
-                if len(req.out) >= req.max_new:   # max_new=1: done at prefill
-                    done[req.rid] = req.out
-                    active[i] = None
-
-        if not any(a is not None for a in active):
-            break
-        logits, caches = decode(params, caches, jnp.asarray(cur_tok),
-                                jnp.asarray(pos))
-        steps += 1
-        if temperature > 0:
-            key, sub_key = jax.random.split(key)
-            nxt = jax.random.categorical(sub_key, logits / temperature,
-                                         axis=-1)
-        else:
-            nxt = jnp.argmax(logits, axis=-1)
-        nxt = np.asarray(nxt)
-        for i in range(batch_slots):
-            req = active[i]
-            if req is None:
-                continue
-            tok = int(nxt[i])
-            req.out.append(tok)
-            cur_tok[i, 0] = tok
-            pos[i] += 1
-            if len(req.out) >= req.max_new:
-                done[req.rid] = req.out
-                active[i] = None
-    dt = time.time() - t0
-    if stats is not None:
-        stats.update(prefill_calls=prefill.calls,
-                     prefill_retraces=prefill.retraces,
-                     decode_steps=steps, rejected=rejected,
-                     buckets=list(buckets) if buckets else None)
-    if steps:
-        log(f"decode: {steps} steps, {steps * batch_slots / dt:.1f} tok/s "
-            f"(batch {batch_slots}, {prefill.retraces} prefill traces)")
-    return done
-
-
-def _slot_set(full_tree, one_tree, i: int):
-    """Write a 1-batch cache tree into slot i of the full tree."""
-    def setter(full, one):
-        if not hasattr(full, "ndim"):
-            return full
-        # batch is the leading dim after the layers dim for stacked caches,
-        # or the leading dim for tail caches; match by shape difference.
-        if full.shape == one.shape:
-            return one
-        for axis in range(full.ndim):
-            if (full.shape[:axis] == one.shape[:axis]
-                    and one.shape[axis] == 1 and full.shape[axis] > 1
-                    and full.shape[axis + 1:] == one.shape[axis + 1:]):
-                return jax.lax.dynamic_update_slice_in_dim(full, one, i, axis)
-        return full
-    return jax.tree.map(setter, full_tree, one_tree)
-
-
 def warm_tile_cache(cfg, *, slots: int, prompt_lens: list[int],
                     cache_len: int, autotune: bool, prefill_batch: int = 1,
-                    paged_geoms: list[tuple[int, int, int]] | None = None,
+                    paged_geoms: list[tuple[int, int, int, int]] | None = None,
                     page_size: int = 8, log=print) -> None:
     """Warm (or verify) the tile-plan cache for this server's GEMM cells.
 
     Enumerates the prefill cells of every prompt bucket plus the batched
-    decode cells, autotunes each cache miss, and reports per-cell hit/tuned
-    status — the second run of a warmed server reports hits for every cell.
-    ``paged_geoms`` (paged-engine servers) additionally tunes the fused
+    decode cells (attention projections *and* the RWKV/Mamba projection
+    GEMMs of the recurrent families — the work-list follows
+    ``core.unified.arch_cells``), autotunes each cache miss, and reports
+    per-cell hit/tuned status — the second run of a warmed server reports
+    hits for every cell.  ``paged_geoms`` additionally tunes the fused
     paged-decode kernel's ``pages_per_block`` per pool geometry under
-    ``op_kind="paged_decode"``, so ``--autotune`` warmup covers decode
-    attention too.  After warmup the process-wide tile mode is "cached", so
-    the serving hot path replays measured winners and never benchmarks.
+    ``op_kind="paged_decode"`` (empty for attention-free archs), so
+    ``--autotune`` warmup covers decode attention too.  After warmup the
+    process-wide tile mode is "cached", so the serving hot path replays
+    measured winners and never benchmarks.
     """
     from repro import tuning
     from repro.core.unified import serving_cells
@@ -285,8 +111,7 @@ def main(argv=None) -> int:
     p.add_argument("--cache-len", type=int, default=64)
     p.add_argument("--page-size", type=int, default=8)
     p.add_argument("--temperature", type=float, default=0.0)
-    p.add_argument("--dense", action="store_true",
-                   help="legacy dense-cache loop instead of the paged engine")
+    p.add_argument("--dense", action="store_true", help=argparse.SUPPRESS)
     p.add_argument("--paged-kernel", default=None,
                    choices=["auto", "fused", "interpret", "reference"],
                    help="paged decode attention implementation (default: "
@@ -304,48 +129,38 @@ def main(argv=None) -> int:
                    help="tile-plan cache file (also: $KRAKEN_TILE_CACHE); "
                         "without --autotune, replays it read-only")
     args = p.parse_args(argv)
+    if args.dense:
+        p.error(
+            "--dense was removed: the legacy dense-cache loop is gone and "
+            "every architecture (dense/MoE/SWA/RWKV/Mamba/hybrid/VLM) now "
+            "serves through the PagedEngine's uniform LayerState tree "
+            "(repro.serving.engine; DESIGN.md §10).  Just drop the flag.")
 
     cfg = get_arch(args.arch)
     if args.smoke:
         cfg = smoke_config(cfg)
     model = Model(cfg)
     from repro.serving import PagedEngine
-    use_engine = not args.dense and PagedEngine.supports(model)
-    if not args.dense and not use_engine:
-        print(f"# {args.arch}: not paged-engine-servable (family/KV dtype/"
-              "decode layout) — falling back to the dense loop")
 
     lens = _parse_lens(args.prompt_lens, args.prompt_len)
     if args.tile_cache or args.autotune:
         from repro import tuning
         from repro.serving import bucketing
         tuning.set_tile_cache(args.tile_cache)
-        def servable(bks):
-            """Over-long prompts are rejected at admission, not prefilled —
-            don't let them crash (or pollute) the warm-up."""
-            keep = [l for l in lens if l <= bks[-1]]
-            return sorted({bucketing.bucket_for(l, bks) for l in keep}) \
-                or [bks[0]]
-        if use_engine:
-            buckets = bucketing.default_buckets(args.cache_len,
-                                                args.page_size)
-            warm_tile_cache(cfg, slots=args.slots,
-                            prompt_lens=servable(buckets),
-                            cache_len=args.cache_len, autotune=args.autotune,
-                            prefill_batch=args.slots,
-                            paged_geoms=PagedEngine.pool_geoms(
-                                model, slots=args.slots,
-                                page_size=args.page_size,
-                                max_len=args.cache_len),
-                            page_size=args.page_size)
-        else:
-            # the dense loop buckets too (attn families): warm the shapes
-            # it actually compiles, not the raw prompt lengths
-            dbuckets = dense_prefill_buckets(model, args.cache_len)
-            warm_tile_cache(cfg, slots=args.slots,
-                            prompt_lens=servable(dbuckets) if dbuckets
-                            else lens,
-                            cache_len=args.cache_len, autotune=args.autotune)
+        buckets = bucketing.default_buckets(args.cache_len, args.page_size)
+        # Over-long prompts are rejected at admission, not prefilled —
+        # don't let them crash (or pollute) the warm-up.
+        keep = [l for l in lens if l <= buckets[-1]]
+        served_buckets = sorted({bucketing.bucket_for(l, buckets)
+                                 for l in keep}) or [buckets[0]]
+        warm_tile_cache(cfg, slots=args.slots, prompt_lens=served_buckets,
+                        cache_len=args.cache_len, autotune=args.autotune,
+                        prefill_batch=args.slots,
+                        paged_geoms=PagedEngine.pool_geoms(
+                            model, slots=args.slots,
+                            page_size=args.page_size,
+                            max_len=args.cache_len),
+                        page_size=args.page_size)
 
     params = model.init(jax.random.key(0))
     rng = np.random.default_rng(0)
@@ -355,37 +170,25 @@ def main(argv=None) -> int:
                              size=(lens[i % len(lens)],)).astype(np.int32)
                 for i in range(args.requests)]
 
-    if use_engine:
-        eng = PagedEngine(model, params, slots=args.slots,
-                          page_size=args.page_size, max_len=args.cache_len,
-                          temperature=args.temperature,
-                          decode_kernel=args.paged_kernel)
-        print(f"# paged decode kernel: {eng.decode_kernel}")
-        done = {}
-        for rep in range(max(1, args.repeat)):
-            before = (eng._prefill.retraces, eng._decode.retraces)
-            for req in make_prompts():
-                eng.submit(req, args.max_new)
-            done = eng.run_until_idle()
-            dp = eng._prefill.retraces - before[0]
-            dd = eng._decode.retraces - before[1]
-            print(f"pass {rep + 1}: prefill retraces={dp} "
-                  f"decode retraces={dd}")
-            print(eng.report())
-    else:
-        if args.repeat > 1:
-            print("# --repeat only measures warm passes on the paged "
-                  "engine; the dense loop serves one pass")
-        reqs = [Request(rid=i, prompt=pr, max_new=args.max_new)
-                for i, pr in enumerate(make_prompts())]
-        stats: dict = {}
-        done = generate(model, params, reqs, batch_slots=args.slots,
-                        cache_len=args.cache_len,
-                        temperature=args.temperature, stats=stats)
-        print(f"pass 1: prefill retraces={stats['prefill_retraces']}")
+    eng = PagedEngine(model, params, slots=args.slots,
+                      page_size=args.page_size, max_len=args.cache_len,
+                      temperature=args.temperature,
+                      decode_kernel=args.paged_kernel)
+    print(f"# paged decode kernel: {eng.decode_kernel}")
+    done = {}
+    for rep in range(max(1, args.repeat)):
+        before = (eng._prefill.retraces, eng._decode.retraces)
+        for req in make_prompts():
+            eng.submit(req, args.max_new)
+        done = eng.run_until_idle()
+        dp = eng._prefill.retraces - before[0]
+        dd = eng._decode.retraces - before[1]
+        print(f"pass {rep + 1}: prefill retraces={dp} "
+              f"decode retraces={dd}")
+        print(eng.report())
     for rid in sorted(done):
         print(f"req {rid}: {done[rid][:8]}...")
-    expected = args.requests * (max(1, args.repeat) if use_engine else 1)
+    expected = args.requests * max(1, args.repeat)
     print(f"served {len(done)}/{expected} requests")
     return 0
 

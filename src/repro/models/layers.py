@@ -382,10 +382,10 @@ POS_EMPTY = -(2 ** 30)  # pos sentinel for an empty cache slot (always masked)
 class KVCache:
     """Decode cache for one attention layer.
 
-    ``k, v``: [B, KV, S_cache, D].  ``pos``: [S_cache] token position held in
-    each slot (-2^30 for empty: always masked out), or [B, S_cache] when the
-    cache is built with ``per_slot=True`` — the continuous-batching layout
-    where every batch row advances at its own absolute position.  For
+    ``k, v``: [B, KV, S_cache, D].  ``pos``: [B, S_cache] token position
+    held in each slot (-2^30 for empty: always masked out) — every batch
+    row advances at its own absolute position, the one decode-state layout
+    (lockstep decode is just the special case where all rows agree).  For
     sliding-window layers ``S_cache == window`` and slots are a ring buffer;
     for full attention ``S_cache`` is the max context.
 
@@ -411,10 +411,9 @@ class KVCache:
         return getattr(cfg, "kv_cache_dtype", "") == "int8"
 
     @staticmethod
-    def specs(cfg, batch: int, s_cache: int, dtype, *,
-              per_slot: bool = False) -> "KVCache":
+    def specs(cfg, batch: int, s_cache: int, dtype) -> "KVCache":
         kvh, hd = cfg.num_kv_heads, cfg.head_dim
-        pshape = (batch, s_cache) if per_slot else (s_cache,)
+        pshape = (batch, s_cache)
         if KVCache._wants_int8(cfg):
             return KVCache(
                 k=jax.ShapeDtypeStruct((batch, kvh, s_cache, hd), jnp.int8),
@@ -430,10 +429,9 @@ class KVCache:
         )
 
     @staticmethod
-    def init(cfg, batch: int, s_cache: int, dtype, *,
-             per_slot: bool = False) -> "KVCache":
+    def init(cfg, batch: int, s_cache: int, dtype) -> "KVCache":
         kvh, hd = cfg.num_kv_heads, cfg.head_dim
-        pshape = (batch, s_cache) if per_slot else (s_cache,)
+        pshape = (batch, s_cache)
         if KVCache._wants_int8(cfg):
             return KVCache(
                 k=jnp.zeros((batch, kvh, s_cache, hd), jnp.int8),
@@ -450,7 +448,7 @@ class KVCache:
 
     AXES = {"k": ("batch", "kv_heads", "kv_seq", "head_dim"),
             "v": ("batch", "kv_heads", "kv_seq", "head_dim"),
-            "pos": ("kv_seq",),
+            "pos": ("batch", "kv_seq"),
             "k_scale": ("batch", "kv_heads", "kv_seq"),
             "v_scale": ("batch", "kv_heads", "kv_seq")}
 
@@ -629,14 +627,11 @@ def attention(cfg, params: Params, prefix: str, x: jax.Array, *,
         quant = cache.quantized
         if quant:
             from repro.kernels.decode_attention import quantize_kv
-        if s_new > 1:
-            # Prefill: attend over the full (windowed) sequence; the cache
-            # keeps the last s_cache tokens, ring-rotated so slot == pos %
-            # s_cache (matching what decode's single-slot updates produce).
-            if positions.ndim != 1:
-                raise ValueError("prefill expects shared [S] positions; "
-                                 "per-slot prefill goes through the serving "
-                                 "engine's bucketed batched prefill")
+        if positions.ndim == 1:
+            # Prefill (shared [S] positions, S >= 1): attend over the full
+            # (windowed) sequence; the cache keeps the last s_cache tokens,
+            # ring-rotated so slot == pos % s_cache (matching what decode's
+            # single-slot updates produce).
             keep = min(s_new, s_cache)
             k_last = k[:, :, -keep:, :]
             v_last = v[:, :, -keep:, :]
@@ -654,26 +649,25 @@ def attention(cfg, params: Params, prefix: str, x: jax.Array, *,
             cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v_last, 0, axis=2)
             ck = jnp.roll(ck, r, axis=2)
             cv = jnp.roll(cv, r, axis=2)
-            if cache.pos.ndim == 2:  # per-slot layout: same ring, every row
-                cpos = jax.lax.dynamic_update_slice_in_dim(
-                    cache.pos,
-                    jnp.broadcast_to(p_last, (cache.pos.shape[0], keep)),
-                    0, axis=1)
-                cpos = jnp.roll(cpos, r, axis=1)
-            else:
-                cpos = jax.lax.dynamic_update_slice_in_dim(
-                    cache.pos, p_last, 0, axis=0)
-                cpos = jnp.roll(cpos, r, axis=0)
+            cpos = jax.lax.dynamic_update_slice_in_dim(
+                cache.pos,
+                jnp.broadcast_to(p_last, (cache.pos.shape[0], keep)),
+                0, axis=1)
+            cpos = jnp.roll(cpos, r, axis=1)
             new_cache = KVCache(k=ck, v=cv, pos=cpos, k_scale=ks, v_scale=vs)
             out = _gqa_sdpa(q, k, v, mask_mode="causal", window=window,
                             q_pos=positions, kv_pos=positions)
-        elif positions.ndim == 2:
-            # Per-slot decode (continuous batching): every batch row inserts
-            # its token at its *own* ring slot and masks at its own length.
-            if cache.pos.ndim != 2:
+        else:
+            # Per-slot decode: every batch row inserts its token at its
+            # *own* ring slot and masks at its own length (lockstep decode
+            # is the special case where all rows carry the same position —
+            # the scalar-position shim was removed with the legacy dense
+            # serving loop).
+            if s_new != 1:
                 raise ValueError(
-                    "per-slot decode positions need a per-slot cache; build "
-                    "it with init_caches(..., per_slot_pos=True)")
+                    "per-slot positions with multi-token input: per-slot "
+                    "prefill goes through the serving engine's bucketed "
+                    "batched prefill, not the dense cache path")
             bsz = x.shape[0]
             pvec = positions[:, 0].astype(jnp.int32)          # [B]
             slots = pvec % s_cache                            # [B]
@@ -693,31 +687,6 @@ def attention(cfg, params: Params, prefix: str, x: jax.Array, *,
                 out = _ops.kraken_decode_attention(
                     q[:, :, 0], ck, cv, k_scale=ks, v_scale=vs,
                     kv_pos=cpos, q_pos=pvec, window=window)[:, :, None]
-            else:
-                out = _gqa_sdpa(q, ck, cv, mask_mode="causal", window=window,
-                                q_pos=positions, kv_pos=cpos)
-        else:
-            # Decode, lockstep shim: one shared scalar position — insert the
-            # token at its ring slot, attend over cache.
-            slot = positions[0].astype(jnp.int32) % s_cache
-            ks = vs = None
-            if quant:
-                k, ks_new = quantize_kv(k)
-                v, vs_new = quantize_kv(v)
-                ks = jax.lax.dynamic_update_slice_in_dim(
-                    cache.k_scale, ks_new, slot, axis=2)
-                vs = jax.lax.dynamic_update_slice_in_dim(
-                    cache.v_scale, vs_new, slot, axis=2)
-            ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k, slot, axis=2)
-            cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v, slot, axis=2)
-            cpos = jax.lax.dynamic_update_slice_in_dim(
-                cache.pos, positions.astype(jnp.int32), slot, axis=0)
-            new_cache = KVCache(k=ck, v=cv, pos=cpos, k_scale=ks, v_scale=vs)
-            if quant:
-                from repro.kernels import ops as _ops
-                out = _ops.kraken_decode_attention(
-                    q[:, :, 0], ck, cv, k_scale=ks, v_scale=vs,
-                    kv_pos=cpos, q_pos=positions[0], window=window)[:, :, None]
             else:
                 out = _gqa_sdpa(q, ck, cv, mask_mode="causal", window=window,
                                 q_pos=positions, kv_pos=cpos)

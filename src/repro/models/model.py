@@ -113,7 +113,8 @@ class Model:
         frontend = batch.get("frontend")
         x = self._embed(params, tokens, positions, frontend)
         ctx = Ctx(mode=mode, positions=positions, frontend=frontend,
-                  shared_params=params["stack"].get("shared"))
+                  shared_params=params["stack"].get("shared"),
+                  lengths=batch.get("lengths"))
         x, new_caches, aux = self.stack.apply(params["stack"], x, ctx,
                                               caches=caches, remat=remat,
                                               unroll=self._unroll_decode(mode))
@@ -152,18 +153,18 @@ class Model:
         return seq_len
 
     def init_caches(self, batch: int, cache_len: int, *, flat: bool = False,
-                    per_slot_pos: bool = False, clamp_window: bool = True):
+                    clamp_window: bool = True):
         return self.stack.cache_tree(
             batch, cache_len, _dtype(self.cfg), abstract=False,
             n_frontend=self.cfg.num_frontend_tokens, flat=flat,
-            per_slot=per_slot_pos, clamp_window=clamp_window)
+            clamp_window=clamp_window)
 
     def cache_specs(self, batch: int, cache_len: int, *, flat: bool = False,
-                    per_slot_pos: bool = False, clamp_window: bool = True):
+                    clamp_window: bool = True):
         return self.stack.cache_tree(
             batch, cache_len, _dtype(self.cfg), abstract=True,
             n_frontend=self.cfg.num_frontend_tokens, flat=flat,
-            per_slot=per_slot_pos, clamp_window=clamp_window)
+            clamp_window=clamp_window)
 
     def cache_axes_list(self, batch: int = 1, cache_len: int = 2, *,
                         flat: bool = False) -> list:
@@ -174,11 +175,9 @@ class Model:
             names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
             rank = len(leaf.shape)
             if "pos" in names:
-                # per-slot-pos caches carry a leading batch dim on pos
-                if flat:
-                    return ("kv_seq",) if rank == 1 else ("batch", "kv_seq")
-                return (("layers", "kv_seq") if rank == 2
-                        else ("layers", "batch", "kv_seq"))
+                # pos is always per-slot: [B, S_cache] (+ layers if stacked)
+                return ("batch", "kv_seq") if flat \
+                    else ("layers", "batch", "kv_seq")
             if rank >= (3 if flat else 4) and ("k" in names or "v" in names):
                 kv = ("batch", "kv_heads", "kv_seq", "head_dim")
                 return (kv if flat else ("layers",) + kv)[-rank:]
@@ -199,17 +198,19 @@ class Model:
                     pos: jax.Array, frontend: jax.Array | None = None):
         """tokens [B, 1]; pos: [B] int32 per-slot absolute positions.
 
-        A scalar ``pos`` is the deprecated lockstep shim: every slot is
-        assumed to sit at the same absolute position (the pre-serving-engine
-        call convention, kept for existing launchers/tests).  Slots at
-        different sequence lengths MUST use the vector form — the lockstep
-        shim lets shorter slots attend past their own length.
+        Every slot masks and advances at its own absolute position —
+        lockstep decode is just the special case where all entries of
+        ``pos`` agree (``jnp.full((B,), t)``).  The scalar lockstep shim
+        was removed with the legacy dense serving loop: it let shorter
+        slots attend past their own length the moment rows diverged.
         """
         pos = jnp.asarray(pos, jnp.int32)
-        if pos.ndim == 0:
-            positions = jnp.reshape(pos, (1,))          # deprecated lockstep
-        else:
-            positions = pos.reshape(-1, 1)              # [B, 1] per-slot
+        if pos.ndim != 1:
+            raise ValueError(
+                "decode_step needs per-slot positions pos: [B] int32 (the "
+                "scalar lockstep shim was removed; for lockstep decode pass "
+                "jnp.full((batch,), t))")
+        positions = pos.reshape(-1, 1)                  # [B, 1] per-slot
         batch = {"tokens": tokens, "positions": positions,
                  "frontend": frontend}
         logits, caches, _ = self.forward(params, batch, mode="decode",

@@ -95,14 +95,39 @@ def _heads(x, h):
     return x.reshape(b, s, h, d // h)
 
 
+def _valid_mask(lengths: jax.Array | None, b: int, s: int):
+    """[B, S] bool: position < row length (bucketed batched prefill — rows
+    are right-padded to the bucket; the recurrence must not see the pads)."""
+    if lengths is None:
+        return None
+    return jnp.arange(s, dtype=jnp.int32)[None, :] < \
+        lengths.astype(jnp.int32)[:, None]
+
+
+def _last_valid(x: jax.Array, lengths: jax.Array | None) -> jax.Array:
+    """x[:, length-1, :] per row ([B, d]); x[:, -1, :] when unmasked."""
+    if lengths is None:
+        return x[:, -1, :]
+    idx = jnp.clip(lengths.astype(jnp.int32) - 1, 0)[:, None, None]
+    return jnp.take_along_axis(x, idx, axis=1)[:, 0]
+
+
 def rwkv_mix(cfg, params: Params, prefix: str, x: jax.Array,
-             state: RwkvState | None = None):
+             state: RwkvState | None = None,
+             lengths: jax.Array | None = None):
     """RWKV6 time-mixing over a full sequence (train/prefill).
 
     Per head h, per step t:  S_t = diag(w_t) S_{t-1} + k_t v_t^T
                              y_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
     Chunked evaluation with exact inter-chunk state.
     Returns (y, new_state).
+
+    ``lengths`` ([B] int32, bucketed batched prefill): positions at and
+    beyond a row's length are masked out of the recurrence (``w = 1``,
+    ``k = 0`` — the same identity-step mechanism the CHUNK padding uses),
+    so ``new_state`` is exactly the state after ``lengths[b]`` real tokens,
+    whatever the bucket width.  Outputs at masked positions are garbage
+    and must be discarded by the caller.
     """
     b, s, d = x.shape
     h = cfg.ssm_heads or (d // 64)
@@ -119,6 +144,10 @@ def rwkv_mix(cfg, params: Params, prefix: str, x: jax.Array,
     vh = _heads(v, h).astype(jnp.float32)
     wh = _heads(w, h)                      # decay in (0,1), [B,S,H,Dh]
     uh = u.reshape(h, dh)
+    valid = _valid_mask(lengths, b, s)
+    if valid is not None:
+        kh = kh * valid[:, :, None, None]
+        wh = jnp.where(valid[:, :, None, None], wh, 1.0)
 
     pad = -s % CHUNK
     if pad:
@@ -168,7 +197,7 @@ def rwkv_mix(cfg, params: Params, prefix: str, x: jax.Array,
     yn = (yn - mu) * jax.lax.rsqrt(var + 64e-5)
     y = (yn.reshape(b, s, d) * params[f"{prefix}_ln_gamma"]).astype(x.dtype)
     out = dense(y * g, params[f"{prefix}_wo"])
-    new_state = RwkvState(s=s_final, x_prev=x[:, -1, :])
+    new_state = RwkvState(s=s_final, x_prev=_last_valid(x, lengths))
     return out, new_state
 
 
@@ -208,15 +237,17 @@ def rwkv_channel_specs(cfg, prefix: str = "cmix") -> dict[str, Spec]:
 
 
 def rwkv_channel_mix(cfg, params: Params, prefix: str, x: jax.Array,
-                     x_prev: jax.Array):
-    """RWKV channel mixing (the FFN); x_prev [B, d] for token shift."""
+                     x_prev: jax.Array, lengths: jax.Array | None = None):
+    """RWKV channel mixing (the FFN); x_prev [B, d] for token shift.
+    Token-shift is causal, so valid outputs never see bucket pads; only the
+    carried ``x_prev`` needs the per-row last *valid* token (``lengths``)."""
     xs = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
     mk = x + (xs - x) * params[f"{prefix}_mix_k"]
     mr = x + (xs - x) * params[f"{prefix}_mix_r"]
     k = dense(mk, params[f"{prefix}_wk"], activation="relu") ** 2
     k = sharding.shard(k, "batch", "seq", "mlp")
     r = jax.nn.sigmoid(dense(mr, params[f"{prefix}_wr"]))
-    return r * dense(k, params[f"{prefix}_wv"]), x[:, -1, :]
+    return r * dense(k, params[f"{prefix}_wv"]), _last_valid(x, lengths)
 
 
 # ===========================================================================
@@ -269,8 +300,13 @@ def mamba_state_specs(cfg, batch: int, dtype) -> MambaState:
         conv=jax.ShapeDtypeStruct((batch, cfg.conv_kernel - 1, conv_dim), dtype))
 
 
-def _mamba_project(cfg, params, prefix, x, conv_state):
-    """Shared front: in_proj -> causal conv1d -> (z, xs, B, C, dt)."""
+def _mamba_project(cfg, params, prefix, x, conv_state, lengths=None):
+    """Shared front: in_proj -> causal conv1d -> (z, xs, B, C, dt).
+
+    ``lengths`` ([B], bucketed prefill): the carried conv window must hold
+    the inputs ending at each row's *true* length, not the bucket's — the
+    window for row b after L real tokens sits at ``full[b, L : L+K-1]``.
+    """
     b, s, d = x.shape
     h = cfg.ssm_heads or (2 * d // 64)
     din = 2 * d
@@ -280,7 +316,13 @@ def _mamba_project(cfg, params, prefix, x, conv_state):
     # causal depthwise conv over seq with rolling state.
     kk = cfg.conv_kernel
     full = jnp.concatenate([conv_state, xbc], axis=1)       # [B, K-1+S, cd]
-    new_conv = full[:, -(kk - 1):, :] if kk > 1 else conv_state
+    if kk <= 1:
+        new_conv = conv_state
+    elif lengths is None:
+        new_conv = full[:, -(kk - 1):, :]
+    else:
+        idx = lengths.astype(jnp.int32)[:, None] + jnp.arange(kk - 1)[None, :]
+        new_conv = jnp.take_along_axis(full, idx[:, :, None], axis=1)
     wins = jnp.stack([full[:, i:i + s, :] for i in range(kk)], axis=2)
     xbc = jnp.einsum("bskc,kc->bsc", wins, params[f"{prefix}_conv_w"])
     xbc = jax.nn.silu(xbc + params[f"{prefix}_conv_b"])
@@ -290,17 +332,27 @@ def _mamba_project(cfg, params, prefix, x, conv_state):
 
 
 def mamba_mix(cfg, params: Params, prefix: str, x: jax.Array,
-              state: MambaState | None = None):
-    """Mamba2 block over a sequence, chunked SSD evaluation."""
+              state: MambaState | None = None,
+              lengths: jax.Array | None = None):
+    """Mamba2 block over a sequence, chunked SSD evaluation.
+
+    ``lengths`` ([B], bucketed prefill): pad positions take ``dt = 0`` — an
+    identity step (decay 1, zero input weight, the same mechanism the CHUNK
+    padding uses) — so the carried state is exact at each row's true
+    length.  Outputs at masked positions are garbage and discarded.
+    """
     b, s, d = x.shape
     if state is None:
         state = mamba_state_init(cfg, b, x.dtype)
     z, xs, bmat, cmat, dt, new_conv, h, din, n = _mamba_project(
-        cfg, params, prefix, x, state.conv)
+        cfg, params, prefix, x, state.conv, lengths=lengths)
     dh = din // h
     a = -jnp.exp(params[f"{prefix}_a_log"].astype(jnp.float32))  # [H] < 0
     xh = xs.reshape(b, s, h, dh).astype(jnp.float32)
     dtf = dt.astype(jnp.float32)
+    valid = _valid_mask(lengths, b, s)
+    if valid is not None:
+        dtf = dtf * valid[:, :, None]
     la = dtf * a[None, None, :]                                 # log-decay [B,S,H]
 
     pad = -s % CHUNK

@@ -99,19 +99,20 @@ def shared_attn_specs(cfg) -> dict[str, Spec]:
 # ---------------------------------------------------------------------------
 
 def slot_cache(cfg, slot: Slot, batch: int, cache_len: int, dtype, *,
-               abstract: bool, n_frontend: int = 0, per_slot: bool = False,
+               abstract: bool, n_frontend: int = 0,
                clamp_window: bool = True):
-    """``per_slot``: per-batch-row position tracking (continuous batching).
-    ``clamp_window=False``: keep sliding-window layers at the full
+    """``clamp_window=False``: keep sliding-window layers at the full
     ``cache_len`` (the serving engine's bucketed prefill writes position-
-    identity rows and windows via the mask alone)."""
+    identity rows and windows via the mask alone).  Every KV cache carries
+    per-slot positions (``pos [B, S_cache]``) — the one decode-state
+    layout, shared by lockstep and continuous-batching callers alike."""
     mk = (lambda shape, dt: jax.ShapeDtypeStruct(shape, dt)) if abstract else \
          (lambda shape, dt: jnp.zeros(shape, dt))
     if slot.kind == "attn":
         s_cache = (min(slot.window, cache_len)
                    if (slot.window and clamp_window) else cache_len)
         return (KVCache.specs if abstract else KVCache.init)(
-            cfg, batch, s_cache, dtype, per_slot=per_slot)
+            cfg, batch, s_cache, dtype)
     if slot.kind == "cross":
         kvh, hd = cfg.num_kv_heads, cfg.head_dim
         return {"k": mk((batch, kvh, n_frontend, hd), dtype),
@@ -133,6 +134,9 @@ class Ctx(NamedTuple):
     positions: jax.Array           # [S] shared or [B, S] per-slot positions
     frontend: jax.Array | None     # image/audio embeddings [B, P, d]
     shared_params: Params | None   # zamba2 shared block
+    lengths: jax.Array | None = None   # [B] true row lengths (bucketed
+                                   # prefill: recurrent layers mask the pads
+                                   # out of their carried state)
 
 
 def _sp(x):
@@ -168,8 +172,13 @@ def apply_slot(cfg, slot: Slot, params: Params, x: jax.Array, cache,
         new_cache = out.cache
     elif slot.kind == "cross":
         h = _gather_seq(L.apply_norm(cfg, params, "attn_norm", x))
-        if ctx.mode == "decode":
-            # kv computed at prefill and frozen in the cache.
+        if ctx.mode == "decode" or (ctx.frontend is None
+                                    and cache is not None):
+            # kv computed at prefill and frozen in the cache.  Text-only
+            # serving never supplies a frontend: attend over the cached KV
+            # as-is (all-zero KV attends to nothing useful and contributes
+            # a zero residual) — identical between the sequential oracle
+            # and the engine's bucketed prefill.
             out_y = _cross_from_cache(cfg, params, h, cache, pos)
             x = _residual(x, out_y)
             new_cache = cache
@@ -185,7 +194,8 @@ def apply_slot(cfg, slot: Slot, params: Params, x: jax.Array, cache,
         if ctx.mode == "decode":
             y, st_new = SSM.rwkv_step(cfg, params, "rwkv", h, st)
         else:
-            y, st_new = SSM.rwkv_mix(cfg, params, "rwkv", h, st)
+            y, st_new = SSM.rwkv_mix(cfg, params, "rwkv", h, st,
+                                     lengths=ctx.lengths)
         x = _residual(x, y)
         new_cache = dict(cache, rwkv=st_new) if cache is not None else None
     elif slot.kind == "mamba":
@@ -193,7 +203,8 @@ def apply_slot(cfg, slot: Slot, params: Params, x: jax.Array, cache,
         if ctx.mode == "decode":
             y, st_new = SSM.mamba_step(cfg, params, "mamba", h, cache)
         else:
-            y, st_new = SSM.mamba_mix(cfg, params, "mamba", h, cache)
+            y, st_new = SSM.mamba_mix(cfg, params, "mamba", h, cache,
+                                      lengths=ctx.lengths)
         x = _residual(x, y)
         new_cache = st_new
     else:
@@ -211,7 +222,8 @@ def apply_slot(cfg, slot: Slot, params: Params, x: jax.Array, cache,
         h = _gather_seq(L.apply_norm(cfg, params, "mlp_norm", x))
         xp = cache["cmix_x_prev"] if cache is not None else jnp.zeros(
             (x.shape[0], cfg.d_model), x.dtype)
-        y, xp_new = SSM.rwkv_channel_mix(cfg, params, "cmix", h, xp)
+        y, xp_new = SSM.rwkv_channel_mix(cfg, params, "cmix", h, xp,
+                                         lengths=ctx.lengths)
         x = _residual(x, y)
         if new_cache is not None:
             new_cache = dict(new_cache, cmix_x_prev=xp_new)
@@ -278,18 +290,18 @@ class LayerStack:
     # ---- caches -------------------------------------------------------------
     def cache_tree(self, batch: int, cache_len: int, dtype, *, abstract: bool,
                    n_frontend: int = 0, flat: bool = False,
-                   per_slot: bool = False, clamp_window: bool = True):
+                   clamp_window: bool = True):
         """``flat=False``: per-slot caches stacked over periods (the scan
         layout).  ``flat=True``: one separate buffer per layer (the serving
         layout — each layer's persistent KV buffer aliases in place under
         donation instead of being threaded through a scan carry).
-        §Perf cell-3 iteration 3.  ``per_slot``/``clamp_window`` are the
-        continuous-batching knobs, see :func:`slot_cache`."""
+        §Perf cell-3 iteration 3.  ``clamp_window`` is the bucketed-prefill
+        knob, see :func:`slot_cache`."""
         cfg = self.cfg
         def one(slot):
             return slot_cache(cfg, slot, batch, cache_len, dtype,
                               abstract=abstract, n_frontend=n_frontend,
-                              per_slot=per_slot, clamp_window=clamp_window)
+                              clamp_window=clamp_window)
         def stacked(slot):
             c = one(slot)
             def add_dim(leaf):
@@ -306,7 +318,6 @@ class LayerStack:
                 sh = Slot("attn", "none")
                 tree["shared"] = [slot_cache(cfg, sh, batch, cache_len, dtype,
                                              abstract=abstract,
-                                             per_slot=per_slot,
                                              clamp_window=clamp_window)
                                   for _ in range(self.n_periods)]
             return tree
@@ -315,7 +326,7 @@ class LayerStack:
         if self.has_shared:
             sh = Slot("attn", "none")
             c = slot_cache(cfg, sh, batch, cache_len, dtype, abstract=abstract,
-                           per_slot=per_slot, clamp_window=clamp_window)
+                           clamp_window=clamp_window)
             def add_dim(leaf):
                 if abstract:
                     return jax.ShapeDtypeStruct((self.n_periods,) + leaf.shape, leaf.dtype)

@@ -1,27 +1,33 @@
-"""Serving subsystem: paged KV cache, bucketed prefill, FIFO scheduling.
+"""Serving subsystem: the uniform LayerState tree, paged KV pools,
+bucketed prefill, FIFO scheduling.
 
 ``launch/serve.py`` and ``examples/serve_lm.py`` are thin frontends over
-:class:`~repro.serving.engine.PagedEngine`; the legacy dense-cache
-continuous-batching loop survives as ``launch.serve.generate`` for the
-architecture families the paged engine does not cover yet.
+:class:`~repro.serving.engine.PagedEngine`.  Every architecture family
+serves through the engine — the per-layer decode state (paged KV, RWKV,
+Mamba, cross-attn KV) sits behind the :mod:`repro.serving.state`
+protocol; the legacy dense continuous-batching loop was deleted (its
+sequential per-request form survives only as the tests' oracle).
 """
 
 from repro.serving.bucketing import bucket_for, default_buckets, pad_prompts
-from repro.serving.engine import JitCounter, PagedEngine, attn_only_stack
+from repro.serving.engine import JitCounter, PagedEngine
 from repro.serving.paged_kv import (PageAllocator, PoolLayout, ceil_pages,
-                                    gather_pages, invalidate_beyond,
-                                    make_pool, modeled_decode_bytes,
-                                    pool_layout, reset_pages,
-                                    scatter_prefill)
+                                    gather_pages, make_pool,
+                                    modeled_decode_bytes, pool_layout,
+                                    reset_pages, scatter_prefill)
 from repro.serving.scheduler import (DONE, QUEUED, REJECTED, RUNNING,
                                      FIFOScheduler, ServeRequest, summarize)
+from repro.serving.state import (PagedKVState, SlotRowState, StateGeometry,
+                                 StateTree, build_state_tree,
+                                 stack_is_stateable)
 
 __all__ = [
-    "PagedEngine", "JitCounter", "attn_only_stack", "PageAllocator",
-    "FIFOScheduler",
+    "PagedEngine", "JitCounter", "PageAllocator", "FIFOScheduler",
     "ServeRequest", "summarize", "bucket_for", "default_buckets",
     "pad_prompts", "ceil_pages", "make_pool", "scatter_prefill",
-    "reset_pages", "gather_pages", "invalidate_beyond", "PoolLayout",
+    "reset_pages", "gather_pages", "PoolLayout",
     "pool_layout", "modeled_decode_bytes",
+    "PagedKVState", "SlotRowState", "StateGeometry", "StateTree",
+    "build_state_tree", "stack_is_stateable",
     "QUEUED", "RUNNING", "DONE", "REJECTED",
 ]

@@ -1,15 +1,18 @@
-"""Paged-KV serving engine: bucketed batched prefill + continuous decode.
+"""Serving engine: bucketed batched prefill + continuous decode over the
+uniform :class:`~repro.serving.state.LayerState` tree.
 
 One engine instance owns
 
-* a **paged KV cache**: per-attention-layer page pools
-  (:class:`~repro.models.layers.PagedKVCache`) with host-side
-  :class:`~repro.serving.paged_kv.PageAllocator` bookkeeping, grouped by
-  ring length (full-attention layers vs each distinct sliding window);
+* a **state tree** (:mod:`repro.serving.state`): one LayerState per layer
+  of the flat stack — paged KV pools for attention layers (full, sliding-
+  window, and zamba2's weight-shared block), dense slot-row states for
+  RWKV/Mamba recurrences and frozen cross-attention KV.  *Every*
+  architecture in the config registry serves through this tree; there is
+  no family special-casing and no legacy dense loop;
 * a **FIFO scheduler** with admission control and per-request metrics
   (:mod:`repro.serving.scheduler`);
 * exactly **len(buckets) + 2 compiled programs** at steady state: one
-  batched prefill per prompt-length bucket, one decode step, one page
+  batched prefill per prompt-length bucket, one decode step, one slot
   reset — a warm engine never retraces, whatever mix of request lengths
   arrives.  :class:`JitCounter` is the compilation-count hook that the
   tests (and the serve CLI's ``--repeat``) assert this with.
@@ -17,23 +20,20 @@ One engine instance owns
 The decode program runs every slot each step with **per-slot positions**
 (`Model.decode_step` vector form): each slot masks at its own length, so
 mixed-progress slots coexist in one program — the serving-side restatement
-of Kraken's one-uniform-dataflow thesis.
+of Kraken's one-uniform-dataflow thesis, now closed over every layer kind
+(DESIGN.md §10).
 """
 
 from __future__ import annotations
-
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.layers import PagedKVCache
 from repro.models.model import Model
 from repro.serving import bucketing
-from repro.serving.paged_kv import (PageAllocator, ceil_pages, make_pool,
-                                    reset_pages, scatter_prefill)
 from repro.serving.scheduler import (FIFOScheduler, ServeRequest, summarize)
+from repro.serving.state import build_state_tree, stack_is_stateable
 
 
 class JitCounter:
@@ -68,41 +68,23 @@ class JitCounter:
         return len(self.signatures)
 
 
-def _is_paged(x) -> bool:
-    return isinstance(x, PagedKVCache)
-
-
-def attn_only_stack(model: Model) -> bool:
-    """Every stack slot causal self-attention, no weight-shared block — the
-    families whose prefill is stateless and therefore bucket-paddable.
-    The single source of truth for this predicate (the dense loop's
-    bucketing decision and the engine's eligibility both build on it)."""
-    return (all(s.kind == "attn" for s in model.stack.pattern)
-            and not model.stack.has_shared)
-
-
 class PagedEngine:
-    """Continuous-batching server over a block/paged KV cache.
+    """Continuous-batching server over the uniform LayerState tree.
 
-    Supports attention-family architectures (every stack slot ``attn``, no
-    weight-shared block, fp KV cache) — dense, sliding-window, local/global
-    and MoE-FFN stacks all qualify; SSM/hybrid/cross-attn states are not
-    paged (yet) and raise at construction.
+    Serves every architecture whose stack slots expose a
+    :class:`~repro.serving.state.LayerState` — which, by construction of
+    the slot vocabulary, is every config in the registry: dense,
+    sliding-window, local/global, MoE-FFN, RWKV, Mamba/hybrid, cross-attn
+    VLM, and int8-KV variants alike.
     """
 
     @staticmethod
     def supports(model: Model) -> bool:
-        """Whether this model can serve through the paged engine (frontends
-        use this to fall back to the dense loop instead of crashing)."""
-        return (attn_only_stack(model)
-                and getattr(model.cfg, "kv_cache_dtype", "") != "int8"
-                and model._unroll_decode("decode"))
-
-    @staticmethod
-    def _ring_len(slot, max_len: int) -> int:
-        """A layer's pool ring length: its sliding window, capped at (or
-        defaulting to) the engine's max context."""
-        return min(slot.window, max_len) if slot.window else max_len
+        """Whether this model can serve through the engine — true iff every
+        stack slot kind has a LayerState implementation (the protocol's
+        coverage predicate; fails loudly for a future slot kind added
+        without one)."""
+        return stack_is_stateable(model)
 
     @classmethod
     def pool_geoms(cls, model: Model, *, slots: int, page_size: int,
@@ -111,15 +93,11 @@ class PagedEngine:
         paged-decode cell geometries an engine with these knobs traces —
         the first three are the identity the ``op_kind="paged_decode"``
         autotune cache is keyed on, the window is the masking protocol the
-        measurement must run under.  Derived here, next to the pool
-        construction itself, so ``serve --autotune`` warmup can never drift
-        from what the decode program looks up."""
-        geoms = set()
-        for s in model.stack.pattern:
-            logical = ceil_pages(cls._ring_len(s, max_len),
-                                 page_size) * page_size
-            geoms.add((slots, logical, model.cfg.head_dim, s.window))
-        return sorted(geoms)
+        measurement must run under.  Derived from the state tree itself
+        (zamba2's weight-shared pools included), so ``serve --autotune``
+        warmup can never drift from what the decode program looks up."""
+        return build_state_tree(model, slots=slots, page_size=page_size,
+                                max_len=max_len).paged_geoms()
 
     def __init__(self, model: Model, params, *, slots: int = 4,
                  page_size: int = 8, max_len: int = 64,
@@ -128,13 +106,11 @@ class PagedEngine:
                  overcommit: float = 1.0, decode_kernel: str | None = None):
         from repro.kernels import paged_attention as _pa
         cfg = model.cfg
-        stack = model.stack
         if not self.supports(model):   # the one eligibility predicate
             raise NotImplementedError(
-                "PagedEngine needs an all-attention stack (no SSM/hybrid/"
-                "cross state), a non-int8 KV cache, and the unrolled "
-                "flat-cache decode path; serve this model through "
-                "launch.serve.generate instead")
+                "a stack slot of this model has no LayerState "
+                "implementation (repro.serving.state) — add one; the "
+                "engine has no fallback path")
         self.model, self.params, self.cfg = model, params, cfg
         self.slots, self.page_size, self.max_len = slots, page_size, max_len
         self.buckets = sorted(buckets) if buckets else \
@@ -144,45 +120,25 @@ class PagedEngine:
         self.sched = FIFOScheduler(max_queue=max_queue,
                                    max_total_len=max_len)
 
-        # --- page pools: one allocator per distinct ring length ------------
-        self._layer_rings = [self._ring_len(s, max_len)
-                             for s in stack.pattern]
-        group_pps = sorted({ceil_pages(r, page_size)
-                            for r in self._layer_rings})
-        self.allocators: dict[int, PageAllocator] = {
-            pps: PageAllocator(
-                n_pages=max(pps, int(np.ceil(slots * pps * overcommit))),
-                pages_per_slot=pps, n_slots=slots)
-            for pps in group_pps}
-        self._group_keys = group_pps
-
-        dt = jnp.dtype(cfg.dtype)
-
-        def leaf(slot):
-            pps = ceil_pages(self._ring_len(slot, max_len), page_size)
-            alloc = self.allocators[pps]
-            return make_pool(cfg, n_pages=alloc.n_pages, page_size=page_size,
-                             max_pages=pps, n_slots=slots, dtype=dt)
-
-        self.pools = {
-            "slots": [[leaf(s) for _ in range(stack.n_periods)]
-                      for s in stack.pattern],
-            "tail": [leaf(stack.pattern[i]) for i in range(stack.n_tail)],
-        }
+        # --- the uniform state tree ---------------------------------------
+        self.state = build_state_tree(model, slots=slots,
+                                      page_size=page_size, max_len=max_len,
+                                      overcommit=overcommit)
+        self.pools = self.state.init_device()
 
         # --- the engine's three compiled programs --------------------------
         def prefill_fn(params, pools, tokens, lengths, slot_ids):
             bp, s = tokens.shape
             dense = model.init_caches(bp, s, flat=True, clamp_window=False)
             batch = {"tokens": tokens,
-                     "positions": jnp.arange(s, dtype=jnp.int32)}
+                     "positions": jnp.arange(s, dtype=jnp.int32),
+                     "lengths": lengths}
             logits, dense, _ = model.forward(params, batch, mode="prefill",
                                              caches=dense)
             idx = jnp.clip(lengths - 1, 0)[:, None, None]
             last = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
-            pools = jax.tree.map(
-                lambda pl, dn: scatter_prefill(pl, dn, slot_ids, lengths),
-                pools, dense, is_leaf=_is_paged)
+            pools = self.state.scatter_prefill(pools, dense, slot_ids,
+                                               lengths)
             return last, pools
 
         # Resolve the decode attention implementation once (``decode_kernel``
@@ -193,14 +149,16 @@ class PagedEngine:
             self.decode_kernel = _pa.resolve_paged_decode_mode()
 
         def decode_fn(params, pools, tokens, pos):
+            # decode_view is the protocol's per-layer hook for producing
+            # what decode consumes (identity for every state kind today —
+            # the model reads pools and slot rows natively; a future
+            # speculative-decode or prefix-cache view hangs here)
+            view = self.state.decode_view(pools, pos)
             with _pa.use_paged_decode_mode(self.decode_kernel):
-                return model.decode_step(params, pools, tokens, pos)
+                return model.decode_step(params, view, tokens, pos)
 
-        def reset_fn(pools, *group_ids):
-            ids = dict(zip(self._group_keys, group_ids))
-            return jax.tree.map(
-                lambda pl: reset_pages(pl, ids[pl.page_table.shape[1]]),
-                pools, is_leaf=_is_paged)
+        def reset_fn(pools, slot_ids):
+            return self.state.reset(pools, slot_ids)
 
         self._prefill = JitCounter(prefill_fn, donate_argnums=(1,))
         self._decode = JitCounter(decode_fn, donate_argnums=(1,))
@@ -259,37 +217,35 @@ class PagedEngine:
                 self._finish(i)
                 finished += 1
         if finished:
-            # sentinel the freed rows on device before the next decode: an
-            # idle slot's writes must drop, not land in pages a later
-            # request may own.  One push per step, however many finished.
+            # sentinel the freed page-table rows on device before the next
+            # decode: an idle slot's KV writes must drop, not land in pages
+            # a later request may own.  (Recurrent slot-row states need no
+            # sentinel — an idle slot only ever writes its own row, which
+            # the next admission resets and overwrites.)  One push per
+            # step, however many finished.
             self._push_tables()
 
     def _admit_and_prefill(self) -> None:
         # admit one slot at a time so the page claim lands before the next
-        # can_alloc check — a batch admit would overshoot a tight pool
-        can_alloc = lambda: all(a.can_alloc() for a in self.allocators.values())
+        # can_admit check — a batch admit would overshoot a tight pool
         admitted = []
         for slot in [i for i, a in enumerate(self.active) if a is None]:
-            got = self.sched.admit([slot], can_alloc)
+            got = self.sched.admit([slot], self.state.can_admit)
             if not got:
                 break
-            for alloc in self.allocators.values():
-                alloc.alloc(got[0].slot)
+            self.state.admit(got[0].slot)
             admitted.append(got[0])
         if not admitted:
             return
         self._push_tables()
-        # freed-page hygiene before any new writes: one fixed-shape reset
-        # per admission wave (padded with drop sentinels, so the program
-        # never retraces whatever the wave size)
-        ids = []
-        for g in self._group_keys:
-            alloc = self.allocators[g]
-            flat = [p for req in admitted
-                    for p in alloc.table[req.slot].tolist()]
-            pad = self.slots * alloc.pages_per_slot - len(flat)
-            ids.append(jnp.asarray(flat + [alloc.n_pages] * pad, jnp.int32))
-        self.pools = self._reset(self.pools, *ids)
+        # freed-state hygiene before any new writes, one fixed-shape reset
+        # per admission wave (slot ids padded with -1 drop sentinels, so
+        # the program never retraces whatever the wave size): KV states
+        # invalidate the pages the slot now owns, recurrent states zero
+        # the slot's row — a refilled slot never sees its predecessor.
+        ids = np.full((self.slots,), -1, np.int32)
+        ids[:len(admitted)] = [r.slot for r in admitted]
+        self.pools = self._reset(self.pools, jnp.asarray(ids))
 
         by_bucket: dict[int, list[ServeRequest]] = {}
         for req in admitted:
@@ -325,17 +281,10 @@ class PagedEngine:
         req = self.active[slot]
         self.active[slot] = None
         self.sched.complete(req)
-        for alloc in self.allocators.values():
-            alloc.free(slot)
+        self.state.release(slot)
 
     def _push_tables(self) -> None:
-        # one table *copy* per layer leaf: the pools tree is donated into
-        # the jitted programs, and donation rejects aliased buffers
-        self.pools = jax.tree.map(
-            lambda pl: dataclasses.replace(
-                pl, page_table=jnp.array(
-                    self.allocators[pl.page_table.shape[1]].table)),
-            self.pools, is_leaf=_is_paged)
+        self.pools = self.state.push_tables(self.pools)
 
     def _sample(self, logits) -> np.ndarray:
         if self.temperature > 0:
@@ -345,6 +294,10 @@ class PagedEngine:
         return np.asarray(jnp.argmax(logits, axis=-1))
 
     # ------------------------------------------------------------ metrics
+    @property
+    def allocators(self):
+        return self.state.allocators
+
     def stats(self) -> dict:
         return {
             "prefill_calls": self._prefill.calls,
@@ -354,8 +307,7 @@ class PagedEngine:
             "decode_retraces": self._decode.retraces,
             "decode_kernel": self.decode_kernel,
             "buckets": list(self.buckets),
-            "free_pages": {g: a.free_pages
-                           for g, a in self.allocators.items()},
+            "free_pages": self.state.free_pages,
         }
 
     def report(self) -> str:

@@ -13,9 +13,6 @@ This module owns everything around it:
   pages so a refilled slot never sees its predecessor's tokens.
 * :func:`gather_pages` — per-slot contiguous view of the pool (tests/debug;
   the decode path gathers inside attention).
-* :func:`invalidate_beyond` — value-based position invalidation for *dense*
-  per-slot caches (the legacy continuous-batching path pads prompts to
-  buckets and must mask the pad rows out).
 
 Ring semantics: token position ``p`` of a slot lives at logical index
 ``p % logical_len`` where ``logical_len = max_pages * page_size``; a write
@@ -232,20 +229,3 @@ def gather_pages(pool: PagedKVCache) -> tuple[jax.Array, jax.Array, jax.Array]:
     pos = jnp.where(live[:, None], pos, POS_EMPTY)
     return (k.reshape(n_slots, kvh, mp * ps, hd),
             v.reshape(n_slots, kvh, mp * ps, hd), pos)
-
-
-def invalidate_beyond(cache_tree, length) -> object:
-    """Mask out positions ``>= length`` in every dense KVCache of a tree.
-
-    Value-based: position entries carry the absolute position, so bucket
-    padding (positions ``length .. bucket_len-1``) is erased without knowing
-    the layout.  Non-KVCache leaves (SSM states, cross-attn KV) pass
-    through untouched.
-    """
-    def fix(leaf):
-        if isinstance(leaf, KVCache):
-            return dataclasses.replace(
-                leaf, pos=jnp.where(leaf.pos >= length, POS_EMPTY, leaf.pos))
-        return leaf
-    return jax.tree.map(fix, cache_tree,
-                        is_leaf=lambda x: isinstance(x, KVCache))

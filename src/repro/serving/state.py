@@ -1,0 +1,344 @@
+"""The uniform per-layer decode-state protocol (DESIGN.md §10).
+
+Every kind of decode state a stack slot can carry — paged KV pools,
+sliding-window ring pools, RWKV wkv/shift states, Mamba SSM + conv-window
+states, frozen cross-attention KV — implements one surface, so the serving
+engine is written once against :class:`LayerState` and
+``PagedEngine.supports(model)`` reduces to "every stack slot exposes a
+LayerState".  This is the serving-side closure of the paper's uniform-
+dataflow claim: the engine's front door no longer special-cases layer
+kinds, exactly as Kraken's datapath does not.
+
+The split of responsibilities:
+
+* a **LayerState** is a *host-side handle* for one layer's state: static
+  geometry, allocator hooks, and the traced transforms over the layer's
+  device leaf (``prefill_scatter`` / ``reset`` run inside the engine's
+  jitted programs; ``init_device`` / ``push_table`` run on the host);
+* the **device leaf** is whatever the model's decode path consumes
+  natively (:class:`~repro.models.layers.PagedKVCache` for attention,
+  ``RwkvState`` / ``MambaState`` / the cross-KV dict for the rest) — the
+  protocol adds no wrapper around the hot path;
+* a **StateTree** zips a tree of LayerStates with the matching device
+  tree (the model's flat cache layout), and owns the cross-layer
+  concerns: admission control over the shared page allocators, table
+  pushes, and the geometry enumeration the autotuner warms from.
+
+Protocol surface (one method per engine touchpoint)::
+
+    alloc(slot) / free(slot) / can_alloc()    host admission bookkeeping
+    init_device()                             fresh device leaf
+    prefill_scatter(leaf, dense, slot_ids, lengths)   traced: bucket
+                                              prefill rows -> slot state
+    decode_view(leaf, pos)                    traced: what decode consumes
+    reset(leaf, slot_ids)                     traced: scrub freed slots
+    push_table(leaf)                          host: allocator table -> device
+    geometry()                                StateGeometry descriptor
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.layers import PagedKVCache
+from repro.serving.paged_kv import (PageAllocator, ceil_pages, make_pool,
+                                    reset_pages, scatter_prefill)
+
+import numpy as np
+
+#: Slot kinds with a LayerState implementation.  ``build_pattern`` can only
+#: emit these, so ``stack_is_stateable`` is True for the whole config
+#: registry — which is the point: the predicate documents the protocol's
+#: coverage, and fails loudly the day a new slot kind is added without one.
+KNOWN_KINDS = {"attn", "cross", "rwkv", "mamba"}
+
+
+class StateGeometry(NamedTuple):
+    """Hashable per-layer state descriptor — what admission control, the
+    autotune warmers, and the traffic models need to know without touching
+    device buffers."""
+    kind: str               # 'paged_kv' | 'slot_rows'
+    slots: int
+    ring_len: int = 0       # paged_kv: logical ring length (pages * size)
+    head_dim: int = 0       # paged_kv
+    window: int = 0         # paged_kv: masking protocol (0 = full)
+    pages_per_slot: int = 0
+
+
+def _drop_idx(slot_ids: jax.Array, n_slots: int) -> jax.Array:
+    """Map batch-padding rows (slot_id < 0) to an out-of-bounds index so
+    ``.at[...].set(mode="drop")`` discards them."""
+    slot_ids = slot_ids.astype(jnp.int32)
+    return jnp.where(slot_ids >= 0, slot_ids, n_slots)
+
+
+class PagedKVState:
+    """LayerState over a block/paged KV pool — the attention-family
+    implementation.  One instance per attention layer; layers with the same
+    ring length share a :class:`PageAllocator` (one admission budget per
+    pool geometry, as before the protocol)."""
+
+    kind = "paged_kv"
+
+    def __init__(self, cfg, allocator: PageAllocator, *, page_size: int,
+                 ring_len: int, window: int):
+        self.cfg = cfg
+        self.alloc_ = allocator
+        self.page_size = page_size
+        self.ring_len = ring_len
+        self.window = window
+
+    # ---- host admission ----------------------------------------------------
+    def can_alloc(self) -> bool:
+        return self.alloc_.can_alloc()
+
+    def alloc(self, slot: int) -> None:
+        if self.alloc_.table[slot][0] == self.alloc_.n_pages:
+            # shared allocator: the first layer of the ring group claims,
+            # the rest observe the claim through the shared table
+            self.alloc_.alloc(slot)
+
+    def free(self, slot: int) -> None:
+        self.alloc_.free(slot)
+
+    # ---- device ------------------------------------------------------------
+    def init_device(self) -> PagedKVCache:
+        return make_pool(self.cfg, n_pages=self.alloc_.n_pages,
+                         page_size=self.page_size,
+                         max_pages=self.alloc_.pages_per_slot,
+                         n_slots=self.alloc_.n_slots,
+                         dtype=jnp.dtype(self.cfg.dtype))
+
+    def prefill_scatter(self, leaf: PagedKVCache, dense, slot_ids,
+                        lengths) -> PagedKVCache:
+        return scatter_prefill(leaf, dense, slot_ids, lengths)
+
+    def decode_view(self, leaf: PagedKVCache, pos) -> PagedKVCache:
+        return leaf   # attention consumes the pool natively
+
+    def reset(self, leaf: PagedKVCache, slot_ids) -> PagedKVCache:
+        """Invalidate the pages the given slots own *now* (the caller pushes
+        tables before resetting, so this is exactly the freed-then-refilled
+        set) — a refilled slot never sees its predecessor's tokens."""
+        n_slots, _ = leaf.page_table.shape
+        rows = leaf.page_table[jnp.clip(slot_ids, 0, n_slots - 1)]
+        rows = jnp.where((slot_ids >= 0)[:, None], rows, leaf.n_pages)
+        return reset_pages(leaf, rows.reshape(-1))
+
+    def push_table(self, leaf: PagedKVCache) -> PagedKVCache:
+        # a fresh copy per push: the pools tree is donated into the jitted
+        # programs, and donation rejects aliased buffers
+        return dataclasses.replace(
+            leaf, page_table=jnp.array(self.alloc_.table))
+
+    def geometry(self) -> StateGeometry:
+        return StateGeometry(
+            kind=self.kind, slots=self.alloc_.n_slots,
+            ring_len=self.alloc_.pages_per_slot * self.page_size,
+            head_dim=self.cfg.head_dim, window=self.window,
+            pages_per_slot=self.alloc_.pages_per_slot)
+
+
+class SlotRowState:
+    """LayerState for O(1)-per-slot recurrent/frozen states: RWKV wkv +
+    token-shift, Mamba SSM + conv window, cross-attention KV.
+
+    These states are a fixed-size row per slot, so the dense
+    ``[n_slots, ...]`` buffer *is* the pool — no page indirection, no
+    allocator; admission is gated only by the KV pools (if any).
+    ``prefill_scatter`` copies bucket rows into slot rows wholesale (the
+    dense prefill already produced each row's exact state via the
+    length-masked recurrence), and ``reset`` zeroes rows — the
+    ``reset_pages`` hygiene invariant generalized beyond KV pools.
+    """
+
+    kind = "slot_rows"
+
+    def __init__(self, cfg, slot: T.Slot, *, n_slots: int):
+        self.cfg = cfg
+        self.slot = slot
+        self.n_slots = n_slots
+
+    # ---- host admission (no per-layer capacity to claim) --------------------
+    def can_alloc(self) -> bool:
+        return True
+
+    def alloc(self, slot: int) -> None:
+        pass
+
+    def free(self, slot: int) -> None:
+        pass
+
+    # ---- device ------------------------------------------------------------
+    def init_device(self):
+        return T.slot_cache(self.cfg, self.slot, self.n_slots, cache_len=1,
+                            dtype=jnp.dtype(self.cfg.dtype), abstract=False,
+                            n_frontend=self.cfg.num_frontend_tokens)
+
+    def prefill_scatter(self, leaf, dense, slot_ids, lengths):
+        idx = _drop_idx(slot_ids, self.n_slots)
+        return jax.tree.map(
+            lambda full, row: full.at[idx].set(row, mode="drop"),
+            leaf, dense)
+
+    def decode_view(self, leaf, pos):
+        return leaf
+
+    def reset(self, leaf, slot_ids):
+        idx = _drop_idx(slot_ids, self.n_slots)
+        return jax.tree.map(
+            lambda a: a.at[idx].set(jnp.zeros((), a.dtype), mode="drop"),
+            leaf)
+
+    def push_table(self, leaf):
+        return leaf
+
+    def geometry(self) -> StateGeometry:
+        return StateGeometry(kind=self.kind, slots=self.n_slots)
+
+
+# ---------------------------------------------------------------------------
+# The state tree: LayerStates zipped with the model's flat cache layout
+# ---------------------------------------------------------------------------
+
+def stack_is_stateable(model) -> bool:
+    """True when every stack slot's kind has a LayerState implementation —
+    the whole ``PagedEngine.supports`` predicate."""
+    return all(s.kind in KNOWN_KINDS for s in model.stack.pattern)
+
+
+@dataclasses.dataclass
+class StateTree:
+    """LayerState tree mirroring ``Model.init_caches(flat=True)`` exactly:
+    ``{"slots": [[state per period] per pattern slot], "tail": [...],
+    "shared": [...]}`` — so the device tree it produces/transforms is
+    byte-for-byte what ``Model.decode_step`` consumes."""
+
+    states: dict[str, Any]
+    allocators: dict[int, PageAllocator]
+
+    # ---- structural zip over (states, *device trees) ------------------------
+    def map_device(self, fn, *trees):
+        def at(t, key, *ix):
+            node = t[key]
+            for i in ix:
+                node = node[i]
+            return node
+
+        out = {
+            "slots": [
+                [fn(st, *(at(t, "slots", s, i) for t in trees))
+                 for i, st in enumerate(col)]
+                for s, col in enumerate(self.states["slots"])],
+            "tail": [fn(st, *(at(t, "tail", i) for t in trees))
+                     for i, st in enumerate(self.states["tail"])],
+        }
+        if "shared" in self.states:
+            out["shared"] = [fn(st, *(at(t, "shared", i) for t in trees))
+                             for i, st in enumerate(self.states["shared"])]
+        return out
+
+    def leaves(self):
+        for col in self.states["slots"]:
+            yield from col
+        yield from self.states["tail"]
+        yield from self.states.get("shared", [])
+
+    # ---- engine touchpoints --------------------------------------------------
+    def init_device(self):
+        return self.map_device(lambda st: st.init_device())
+
+    def scatter_prefill(self, pools, dense, slot_ids, lengths):
+        return self.map_device(
+            lambda st, pl, dn: st.prefill_scatter(pl, dn, slot_ids, lengths),
+            pools, dense)
+
+    def decode_view(self, pools, pos):
+        return self.map_device(lambda st, pl: st.decode_view(pl, pos), pools)
+
+    def reset(self, pools, slot_ids):
+        return self.map_device(lambda st, pl: st.reset(pl, slot_ids), pools)
+
+    def push_tables(self, pools):
+        return self.map_device(lambda st, pl: st.push_table(pl), pools)
+
+    # ---- admission: every layer's capacity vote, through the protocol -------
+    def can_admit(self) -> bool:
+        return all(st.can_alloc() for st in self.leaves())
+
+    def admit(self, slot: int) -> None:
+        for st in self.leaves():
+            st.alloc(slot)
+
+    def release(self, slot: int) -> None:
+        for st in self.leaves():
+            st.free(slot)
+
+    @property
+    def free_pages(self) -> dict[int, int]:
+        return {g: a.free_pages for g, a in self.allocators.items()}
+
+    # ---- geometry ------------------------------------------------------------
+    def paged_geoms(self) -> list[tuple[int, int, int, int]]:
+        """Distinct ``(slots, logical_len, head_dim, window)`` paged-decode
+        cell geometries — the identity the ``op_kind="paged_decode"``
+        autotune cache is keyed on.  Derived from the state tree itself
+        (includes zamba2's weight-shared attention pools), so ``serve
+        --autotune`` warmup can never drift from what decode looks up."""
+        geoms = {
+            (g.slots, g.ring_len, g.head_dim, g.window)
+            for st in self.leaves()
+            for g in [st.geometry()] if g.kind == "paged_kv"}
+        return sorted(geoms)
+
+
+def _ring_len(window: int, max_len: int) -> int:
+    """A layer's pool ring length: its sliding window, capped at (or
+    defaulting to) the engine's max context."""
+    return min(window, max_len) if window else max_len
+
+
+def build_state_tree(model, *, slots: int, page_size: int, max_len: int,
+                     overcommit: float = 1.0) -> StateTree:
+    """One LayerState per layer of the flat stack, sharing a
+    :class:`PageAllocator` per distinct pool ring length."""
+    cfg = model.cfg
+    stack = model.stack
+    if not stack_is_stateable(model):
+        unknown = {s.kind for s in stack.pattern} - KNOWN_KINDS
+        raise NotImplementedError(
+            f"no LayerState implementation for slot kind(s) {sorted(unknown)}")
+
+    attn_windows = [s.window for s in stack.pattern if s.kind == "attn"]
+    if stack.has_shared:
+        attn_windows.append(0)   # zamba2's shared block: full attention
+    group_pps = sorted({ceil_pages(_ring_len(w, max_len), page_size)
+                        for w in attn_windows})
+    allocators = {
+        pps: PageAllocator(
+            n_pages=max(pps, int(np.ceil(slots * pps * overcommit))),
+            pages_per_slot=pps, n_slots=slots)
+        for pps in group_pps}
+
+    def state_for(slot: T.Slot):
+        if slot.kind == "attn":
+            ring = _ring_len(slot.window, max_len)
+            return PagedKVState(cfg, allocators[ceil_pages(ring, page_size)],
+                                page_size=page_size, ring_len=ring,
+                                window=slot.window)
+        return SlotRowState(cfg, slot, n_slots=slots)
+
+    states: dict[str, Any] = {
+        "slots": [[state_for(s) for _ in range(stack.n_periods)]
+                  for s in stack.pattern],
+        "tail": [state_for(stack.pattern[i]) for i in range(stack.n_tail)],
+    }
+    if stack.has_shared:
+        sh = T.Slot("attn", "none")
+        states["shared"] = [state_for(sh) for _ in range(stack.n_periods)]
+    return StateTree(states=states, allocators=allocators)

@@ -145,8 +145,9 @@ def test_int8_kv_cache_end_to_end():
                         atol=1e-5)
 
     nxt = jnp.argmax(lg_fp[:, -1], axis=-1)[:, None].astype(jnp.int32)
-    lo_fp, _ = m_fp.decode_step(params, c_fp, nxt, jnp.int32(4))
-    lo_q, _ = m_q.decode_step(params, c_q, nxt, jnp.int32(4))
+    p4 = jnp.full((B,), 4, jnp.int32)
+    lo_fp, _ = m_fp.decode_step(params, c_fp, nxt, p4)
+    lo_q, _ = m_q.decode_step(params, c_q, nxt, p4)
     # int8 path close to fp path; same argmax on a smoke model
     diff = jnp.abs(lo_fp.astype(jnp.float32) - lo_q.astype(jnp.float32))
     denom = jnp.abs(lo_fp.astype(jnp.float32)).max()

@@ -51,7 +51,8 @@ def test_prefill_decode_matches_forward(arch):
     for t in range(S0, S):
         fe_t = fe[:, t:t + 1] if (fe is not None and cfg.frontend == "audio_frames") else fe
         logits, caches = model.decode_step(params, caches, toks[:, t:t + 1],
-                                           jnp.int32(t), frontend=fe_t)
+                                           jnp.full((B,), t, jnp.int32),
+                                           frontend=fe_t)
         np.testing.assert_allclose(np.asarray(logits), np.asarray(full[:, t]),
                                    rtol=2e-3, atol=2e-3)
 
@@ -68,26 +69,30 @@ def test_sliding_window_ring_cache_wraps():
                  "positions": jnp.arange(1, dtype=jnp.int32)}, caches)
     for t in range(1, S):   # decode well past one window length
         logits, caches = model.decode_step(params, caches, toks[:, t:t + 1],
-                                           jnp.int32(t))
+                                           jnp.full((B,), t, jnp.int32))
     np.testing.assert_allclose(np.asarray(logits), np.asarray(full[:, S - 1]),
                                rtol=2e-3, atol=2e-3)
 
 
 def test_continuous_batching_server():
-    from repro.launch.serve import Request, generate
+    """Engine continuous batching over more requests than slots; a
+    single-slot engine over the same prompt must agree request-for-request
+    (batching is invisible to any one request)."""
+    from repro.serving import PagedEngine
     cfg, model, params, toks, fe, B, S = setup("yi-6b")
     rng = np.random.default_rng(3)
-    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, (5,)).astype(np.int32),
-                    max_new=4) for i in range(5)]
-    done = generate(model, params, reqs, batch_slots=2, cache_len=16,
-                    log=lambda *a: None)
+    prompts = [rng.integers(0, cfg.vocab_size, (5,)).astype(np.int32)
+               for _ in range(5)]
+    eng = PagedEngine(model, params, slots=2, page_size=4, max_len=16)
+    for i, p in enumerate(prompts):
+        eng.submit(p, 4, rid=i)
+    done = eng.run_until_idle()
     assert sorted(done) == [0, 1, 2, 3, 4]
     assert all(len(v) >= 4 for v in done.values())
 
-    # continuous batching must agree with an unbatched run per request
-    done1 = generate(model, params,
-                     [Request(rid=0, prompt=reqs[0].prompt, max_new=4)],
-                     batch_slots=1, cache_len=16, log=lambda *a: None)
+    eng1 = PagedEngine(model, params, slots=1, page_size=4, max_len=16)
+    eng1.submit(prompts[0], 4, rid=0)
+    done1 = eng1.run_until_idle()
     assert done1[0] == done[0]
 
 def test_flat_and_stacked_decode_agree():
@@ -120,15 +125,16 @@ def test_flat_and_stacked_decode_agree():
         # one decode step each; logits must agree
         nxt = jnp.argmax(lg_s[:, -1], axis=-1)[:, None].astype(jnp.int32)
         # stacked decode goes through the same unrolled path (layout-aware)
-        lo_s, c_stacked = model.decode_step(params, c_stacked, nxt,
-                                            jnp.int32(4))
-        lo_f, c_flat = model.decode_step(params, c_flat, nxt, jnp.int32(4))
+        p4 = jnp.full((B,), 4, jnp.int32)
+        lo_s, c_stacked = model.decode_step(params, c_stacked, nxt, p4)
+        lo_f, c_flat = model.decode_step(params, c_flat, nxt, p4)
         assert jnp.allclose(lo_s.astype(jnp.float32),
                             lo_f.astype(jnp.float32), atol=1e-5), arch
 
         # a second step, to prove the updated caches are equivalent too
         n2 = jnp.argmax(lo_s, axis=-1)[:, None].astype(jnp.int32)
-        lo_s2, _ = model.decode_step(params, c_stacked, n2, jnp.int32(5))
-        lo_f2, _ = model.decode_step(params, c_flat, n2, jnp.int32(5))
+        p5 = jnp.full((B,), 5, jnp.int32)
+        lo_s2, _ = model.decode_step(params, c_stacked, n2, p5)
+        lo_f2, _ = model.decode_step(params, c_flat, n2, p5)
         assert jnp.allclose(lo_s2.astype(jnp.float32),
                             lo_f2.astype(jnp.float32), atol=1e-5), arch

@@ -1,12 +1,16 @@
-"""Serving-engine lockdown: paged continuous batching must be
-token-identical to sequential per-request prefill+decode, never retrace
-once warm, and enforce admission control.
+"""Serving-engine lockdown: continuous batching through the uniform
+LayerState tree must be token-identical to sequential per-request
+prefill+decode, never retrace once warm, and enforce admission control —
+for *every* architecture family.
 
-The sequential reference is the pre-engine calling convention — per-request
-``model.prefill`` + scalar-position ``decode_step`` over a dense cache —
-so these tests pin the engine's batched/bucketed/paged path to the simplest
-possible semantics, for a dense arch (yi-6b) and a sliding-window MoE arch
-(mixtral; its smoke window of 8 forces ring wrap across page boundaries).
+The sequential reference is per-request ``model.prefill`` + lockstep
+``decode_step`` over a dense flat cache — the simplest possible semantics
+the engine's batched/bucketed/paged path is pinned to.  The equivalence
+matrix spans the protocol's state kinds: paged KV (yi-6b), sliding-window
+ring wrap (mixtral, smoke window 8 forces wrap across page boundaries),
+RWKV wkv/shift rows (rwkv6-3b), Mamba SSM + conv rows behind a
+weight-shared attention block (zamba2-1.2b), and frozen cross-attn KV
+(llama-3.2-vision, text-only serving).
 """
 
 import dataclasses
@@ -17,26 +21,31 @@ import numpy as np
 import pytest
 
 from repro.configs import get_arch, smoke_config
+from repro.configs.registry import ARCHS as REGISTRY
 from repro.models.model import Model
 from repro.serving import PagedEngine
 
-ARCHS = ["yi-6b", "mixtral-8x22b"]
+ARCHS = ["yi-6b", "mixtral-8x22b", "rwkv6-3b", "zamba2-1.2b",
+         "llama-3.2-vision-11b"]
 _SETUP: dict = {}
 
 
-def setup_arch(arch):
-    if arch not in _SETUP:
+def setup_arch(arch, kv_dtype=""):
+    key = (arch, kv_dtype)
+    if key not in _SETUP:
         cfg = dataclasses.replace(smoke_config(get_arch(arch)),
                                   dtype="float32",
+                                  kv_cache_dtype=kv_dtype,
                                   capacity_factor=64.0)  # drop-free MoE
         model = Model(cfg)
         params = model.init(jax.random.key(0))
-        _SETUP[arch] = (cfg, model, params)
-    return _SETUP[arch]
+        _SETUP[key] = (cfg, model, params)
+    return _SETUP[key]
 
 
 def sequential_greedy(model, params, prompt, max_new, cache_len=32):
-    """Per-request reference: prefill + scalar-pos decode, greedy."""
+    """Per-request reference: prefill + lockstep per-slot decode, greedy —
+    the dense path's one surviving form (the oracle)."""
     caches = model.init_caches(1, cache_len, flat=True)
     logits, caches = model.prefill(
         params, {"tokens": jnp.asarray(prompt[None]),
@@ -44,9 +53,9 @@ def sequential_greedy(model, params, prompt, max_new, cache_len=32):
         caches)
     seq = [int(jnp.argmax(logits[0, -1]))]
     while len(seq) < max_new:
+        pos = jnp.full((1,), len(prompt) + len(seq) - 1, jnp.int32)
         logits, caches = model.decode_step(
-            params, caches, jnp.asarray([[seq[-1]]], jnp.int32),
-            jnp.int32(len(prompt) + len(seq) - 1))
+            params, caches, jnp.asarray([[seq[-1]]], jnp.int32), pos)
         seq.append(int(jnp.argmax(logits[0])))
     return seq
 
@@ -59,15 +68,17 @@ def mixed_prompts(cfg, lens, seed=7):
 
 @pytest.mark.parametrize("arch", ARCHS)
 def test_engine_matches_sequential(arch):
-    """Greedy paged continuous batching over mixed-length prompts ==
-    sequential per-request generation, token for token."""
+    """Greedy continuous batching over mixed-length prompts == sequential
+    per-request generation, token for token — for every state kind.  2
+    slots for 4 requests: slots are evicted and refilled mid-run, so this
+    also proves a freed slot's state (pages *and* recurrent rows) never
+    leaks into its successor."""
     cfg, model, params = setup_arch(arch)
     prompts = mixed_prompts(cfg, [3, 5, 9, 12])
     max_new = 5
     ref = {i: sequential_greedy(model, params, p, max_new)
            for i, p in enumerate(prompts)}
 
-    # 2 slots for 4 requests: slots are evicted and refilled mid-run
     eng = PagedEngine(model, params, slots=2, page_size=4, max_len=32)
     for i, p in enumerate(prompts):
         eng.submit(p, max_new, rid=i)
@@ -79,10 +90,22 @@ def test_engine_matches_sequential(arch):
         assert alloc.free_pages == alloc.n_pages
 
 
-def test_warm_engine_never_retraces():
+def test_engine_supports_every_registered_arch():
+    """The redesign's headline: ``supports()`` is True for the whole config
+    registry — no family falls back, because every stack slot kind has a
+    LayerState implementation."""
+    for name in REGISTRY:
+        model = Model(smoke_config(get_arch(name)))
+        assert PagedEngine.supports(model), name
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "rwkv6-3b"])
+def test_warm_engine_never_retraces(arch):
     """Warm serving with mixed prompt lengths compiles each bucket at most
-    once: a second workload over the same buckets adds zero programs."""
-    cfg, model, params = setup_arch("yi-6b")
+    once: a second workload over the same buckets adds zero programs —
+    including for the recurrent family (the length-masked batched prefill
+    makes SSM prefill bucket-paddable)."""
+    cfg, model, params = setup_arch(arch)
     eng = PagedEngine(model, params, slots=2, page_size=4, max_len=32)
     for p in mixed_prompts(cfg, [3, 5, 9, 12], seed=1):
         eng.submit(p, 4)
@@ -147,6 +170,93 @@ def test_engine_fused_kernel_matches_sequential():
         assert done[i] == ref[i], (i, done[i], ref[i])
 
 
+@pytest.mark.parametrize("kernel", ["reference", "interpret"])
+def test_engine_int8_pools_match_sequential(kernel):
+    """The quantized end-to-end equivalence bar DESIGN.md §9 gated int8
+    serving on: int8 page pools (values + per-(page, head, offset) scales),
+    served through both the dense-gather reference and the fused kernel
+    (interpret grid off-TPU), token-identical to the sequential int8 dense
+    oracle.  With this green, ``supports()`` admits int8 configs."""
+    cfg, model, params = setup_arch("yi-6b", kv_dtype="int8")
+    assert PagedEngine.supports(model)
+    prompts = mixed_prompts(cfg, [3, 5, 9, 12], seed=13)
+    max_new = 4
+    ref = {i: sequential_greedy(model, params, p, max_new)
+           for i, p in enumerate(prompts)}
+    eng = PagedEngine(model, params, slots=2, page_size=4, max_len=32,
+                      decode_kernel=kernel)
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new, rid=i)
+    done = eng.run_until_idle()
+    for i in ref:
+        assert done[i] == ref[i], (kernel, i, done[i], ref[i])
+    # the pools really are int8
+    from repro.models.layers import PagedKVCache
+    pool = next(l for l in jax.tree.leaves(
+        eng.pools, is_leaf=lambda x: isinstance(x, PagedKVCache))
+        if isinstance(l, PagedKVCache))
+    assert pool.k.dtype == jnp.int8 and pool.quantized
+
+
+@pytest.mark.parametrize("arch", ["rwkv6-3b", "zamba2-1.2b"])
+def test_recurrent_state_reset_on_slot_refill(arch):
+    """The ``reset_pages`` hygiene invariant generalized beyond KV pools:
+    a freed slot's RWKV/Mamba rows (and zamba2's shared-attn pages) must
+    be zeroed before reuse.  Exercised at the protocol level: scatter a
+    prefilled state into a slot, release it, reset through the LayerState
+    tree, and check every recurrent row is zero and every page position
+    is invalidated."""
+    from repro.models.layers import POS_EMPTY, PagedKVCache
+    from repro.serving import build_state_tree
+
+    cfg, model, params = setup_arch(arch)
+    slots = 2
+    tree = build_state_tree(model, slots=slots, page_size=4, max_len=16)
+    pools = tree.init_device()
+
+    # a real prefill produces a nonzero state for slot 0
+    s = 8
+    dense = model.init_caches(slots, s, flat=True, clamp_window=False)
+    batch = {"tokens": jnp.asarray(
+                 np.random.default_rng(0).integers(0, cfg.vocab_size,
+                                                   (slots, s)), jnp.int32),
+             "positions": jnp.arange(s, dtype=jnp.int32),
+             "lengths": jnp.asarray([s, s], jnp.int32)}
+    _, dense, _ = model.forward(params, batch, mode="prefill", caches=dense)
+    tree.admit(0)
+    pools = tree.push_tables(pools)
+    pools = tree.scatter_prefill(pools, dense,
+                                 jnp.asarray([0, -1], jnp.int32),
+                                 jnp.asarray([s, 0], jnp.int32))
+
+    def slot0_nonzero(tree_dev):
+        # recurrent/cross rows only: KV pools are slot-indexed through the
+        # page table, their hygiene is the pos-invalidation check below
+        tot = 0.0
+        for leaf in jax.tree.leaves(
+                tree_dev, is_leaf=lambda x: isinstance(x, PagedKVCache)):
+            if isinstance(leaf, PagedKVCache):
+                continue
+            if hasattr(leaf, "shape") and leaf.shape[:1] == (slots,):
+                tot += float(jnp.abs(leaf[0].astype(jnp.float32)).sum())
+        return tot
+
+    assert slot0_nonzero(pools) > 0     # the recurrent rows took state
+
+    # release + re-admit: the engine resets before any successor writes
+    tree.release(0)
+    tree.admit(0)
+    pools = tree.push_tables(pools)
+    pools = tree.reset(pools, jnp.asarray([0, -1], jnp.int32))
+
+    assert slot0_nonzero(pools) == 0.0, "freed recurrent rows must be zeroed"
+    for leaf in jax.tree.leaves(
+            pools, is_leaf=lambda x: isinstance(x, PagedKVCache)):
+        if isinstance(leaf, PagedKVCache):
+            posg = np.asarray(leaf.pos[np.asarray(leaf.page_table[0])])
+            assert (posg == POS_EMPTY).all(), "slot-0 pages must be reset"
+
+
 @pytest.mark.slow
 def test_engine_fused_kernel_window_wrap_matches_sequential():
     """Fused-kernel re-run on the sliding-window arch: decode past the
@@ -164,80 +274,6 @@ def test_engine_fused_kernel_window_wrap_matches_sequential():
     done = eng.run_until_idle()
     for i in ref:
         assert done[i] == ref[i], (i, done[i], ref[i])
-
-
-def test_engine_rejects_unsupported_families():
-    cfg, model, params = None, None, None
-    cfg = dataclasses.replace(smoke_config(get_arch("rwkv6-3b")),
-                              dtype="float32")
-    model = Model(cfg)
-    params = model.init(jax.random.key(0))
-    with pytest.raises(NotImplementedError):
-        PagedEngine(model, params, slots=2, page_size=4, max_len=16)
-
-
-@pytest.mark.parametrize("kv_dtype", ["", "int8"])
-def test_dense_generate_per_slot_positions(kv_dtype):
-    """The legacy dense loop (launch.serve.generate) with *mixed* prompt
-    lengths: each slot must decode at its own position.  The pre-fix code
-    passed pos.max() for every slot — shorter slots attended past their own
-    length and diverged from sequential generation.  The int8 variant
-    exercises the per-slot quantized scatter + batched-position kernel
-    path."""
-    from repro.launch.serve import Request, generate
-    cfg, model, params = setup_arch("yi-6b")
-    if kv_dtype:
-        cfg = dataclasses.replace(cfg, kv_cache_dtype=kv_dtype)
-        model = Model(cfg)   # params are KV-dtype independent
-    prompts = mixed_prompts(cfg, [3, 7, 12], seed=5)
-    max_new = 4
-    stats: dict = {}
-    reqs = [Request(rid=i, prompt=p, max_new=max_new)
-            for i, p in enumerate(prompts)]
-    # max_new=1 must finish at the prefill token (no stray decode step),
-    # exactly like the paged engine
-    reqs.append(Request(rid=99, prompt=prompts[0], max_new=1))
-    done = generate(model, params, reqs, batch_slots=3, cache_len=32,
-                    log=lambda *a: None, stats=stats)
-    for i, p in enumerate(prompts):
-        assert done[i] == sequential_greedy(model, params, p, max_new), i
-    assert done[99] == sequential_greedy(model, params, prompts[0], 1)
-    # bucketed prefill: three lengths, but at most one trace per bucket used
-    used = {min(b for b in stats["buckets"] if len(p) <= b) for p in prompts}
-    assert stats["prefill_retraces"] <= len(used)
-
-
-def test_dense_generate_off_boundary_cache_len():
-    """cache_len that is not a bucket boundary (12: buckets would be
-    [8, 16]) must not ring-evict real prompt tokens — buckets are capped at
-    cache_len, and prompts beyond it are rejected, not truncated."""
-    from repro.launch.serve import Request, generate
-    cfg, model, params = setup_arch("yi-6b")
-    prompts = mixed_prompts(cfg, [10, 5], seed=11)
-    stats: dict = {}
-    reqs = [Request(rid=i, prompt=p, max_new=2)
-            for i, p in enumerate(prompts)]
-    reqs.append(Request(rid=9, prompt=mixed_prompts(cfg, [13])[0], max_new=2))
-    done = generate(model, params, reqs, batch_slots=2, cache_len=12,
-                    log=lambda *a: None, stats=stats)
-    for i, p in enumerate(prompts):
-        assert done[i] == sequential_greedy(model, params, p, 2,
-                                            cache_len=12), i
-    assert 9 not in done and stats["rejected"] == [9]
-    assert max(stats["buckets"]) == 12
-
-    # a rejected head must not strand the queue behind it (1 slot: the
-    # reject happens with no slot active)
-    stats2: dict = {}
-    done2 = generate(model, params,
-                     [Request(rid=0, prompt=mixed_prompts(cfg, [20])[0],
-                              max_new=2),
-                      Request(rid=1, prompt=prompts[1], max_new=2)],
-                     batch_slots=1, cache_len=12, log=lambda *a: None,
-                     stats=stats2)
-    assert stats2["rejected"] == [0]
-    assert done2[1] == sequential_greedy(model, params, prompts[1], 2,
-                                         cache_len=12)
 
 
 @pytest.mark.slow
@@ -260,3 +296,25 @@ def test_engine_soak_window_wrap_and_page_pressure():
     m = eng.stats()
     assert m["prefill_retraces"] <= len(eng.buckets)
     assert m["decode_retraces"] == 1
+
+
+@pytest.mark.slow
+def test_engine_soak_recurrent_eviction_chain():
+    """Recurrent-family soak: more requests than slots on the hybrid arch,
+    so every slot is evicted and refilled repeatedly — each successor must
+    decode exactly as if it had the machine to itself (state hygiene
+    through the whole chain)."""
+    cfg, model, params = setup_arch("zamba2-1.2b")
+    prompts = mixed_prompts(cfg, [2, 7, 12, 3, 9, 5], seed=21)
+    max_new = 6
+    ref = {i: sequential_greedy(model, params, p, max_new)
+           for i, p in enumerate(prompts)}
+    eng = PagedEngine(model, params, slots=2, page_size=4, max_len=32)
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new, rid=i)
+    done = eng.run_until_idle()
+    for i in ref:
+        assert done[i] == ref[i], (i, done[i], ref[i])
+    s = eng.stats()
+    assert s["prefill_retraces"] <= len(eng.buckets)
+    assert s["decode_retraces"] == 1

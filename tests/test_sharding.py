@@ -156,7 +156,7 @@ def test_dryrun_cell_on_host_mesh():
             ps = S.sharded_param_specs(model, mesh, rules)
             cs = S.sharded_cache_specs(model, 8, 64, mesh, rules)
             tok = jax.ShapeDtypeStruct((8, 1), jnp.int32)
-            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            pos = jax.ShapeDtypeStruct((8,), jnp.int32)
             step = S.make_decode_step(model)
             compiled = jax.jit(step).lower(ps, cs, tok, pos).compile()
         mem = compiled.memory_analysis()
