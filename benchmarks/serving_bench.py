@@ -2,20 +2,45 @@
 
 One mixed-length workload served twice through the engine per architecture
 (first pass warms the compile caches; the second pass is timed), reporting
-decode throughput and the warm-pass compile deltas — the engine's bucketed
-prefill shows a constant program count for every family, which is the
+decode throughput and the warm-pass compile deltas — the engine's chunked
+mixed step shows a constant program count for every family, which is the
 uniformity claim priced: attention (yi-6b), RWKV (rwkv6-3b), and hybrid
 Mamba+shared-attention (zamba2-1.2b) all run the same three programs.
 A second table compares the two paged-decode attention paths
 (dense-gather reference vs fused Pallas kernel).
+
+``--smoke`` runs a CI-sized workload through the chunked engine and
+writes ``BENCH_serving.json`` (schema ``kraken-serving-bench/v1``: warm
+tok/s per family + warm-pass retrace counts + decode-stall/budget
+telemetry), validating the document before writing — the perf-trajectory
+artifact CI uploads from every main build.
 """
 
 from __future__ import annotations
 
+import argparse
 import dataclasses
+import json
+import sys
 import time
 
 ENGINE_ARCHS = ("yi-6b", "rwkv6-3b", "zamba2-1.2b")
+
+BENCH_SCHEMA = "kraken-serving-bench/v1"
+
+#: required per-row fields -> type predicate (the schema CI enforces)
+_ROW_FIELDS = {
+    "name": str,
+    "arch": str,
+    "family": str,
+    "warm_tok_s": (int, float),
+    "prefill_retraces": int,
+    "decode_retraces": int,
+    "max_decode_stall": int,
+    "budget_util": (int, float),
+    "chunk": int,
+    "step_budget": int,
+}
 
 
 def _workload(rng, vocab: int, requests: int, lens: list[int]):
@@ -35,12 +60,14 @@ def _run_pass(eng, rng, vocab, requests, lens, max_new):
     return (sum(len(r.out) for r in eng.sched.done) - before) / dt
 
 
-def engine_families(archs=ENGINE_ARCHS, *, requests: int = 6, slots: int = 2,
-                    max_new: int = 8, lens: tuple = (4, 7, 12),
-                    cache_len: int = 32) -> list[tuple]:
-    """Every architecture family through the one engine: tok/s on the warm
-    pass plus the warm-pass retrace deltas (must be 0+0 — the zero-retrace
-    guarantee now holds for the recurrent families too)."""
+def engine_family_records(archs=ENGINE_ARCHS, *, requests: int = 6,
+                          slots: int = 2, max_new: int = 8,
+                          lens: tuple = (4, 7, 12), cache_len: int = 32,
+                          chunk: int | None = None) -> list[dict]:
+    """Every architecture family through the one engine: warm-pass tok/s,
+    warm-pass retrace deltas (must be 0+0 — the zero-retrace guarantee
+    holds for the recurrent families too), and the chunked mixed step's
+    stall/budget telemetry, as schema rows."""
     import numpy as np
     import jax
 
@@ -56,16 +83,76 @@ def engine_families(archs=ENGINE_ARCHS, *, requests: int = 6, slots: int = 2,
         params = model.init(jax.random.key(0))
         rng = np.random.default_rng(0)
         eng = PagedEngine(model, params, slots=slots, page_size=8,
-                          max_len=cache_len)
+                          max_len=cache_len, chunk=chunk)
         _run_pass(eng, rng, cfg.vocab_size, requests, list(lens), max_new)
         before = (eng._prefill.retraces, eng._decode.retraces)
         tok_s = _run_pass(eng, rng, cfg.vocab_size, requests, list(lens),
                           max_new)
-        rows.append((f"serving_engine_{arch}", 1e6 / max(tok_s, 1e-9),
-                     f"family={cfg.family}|tok_s={tok_s:.1f}|"
-                     f"warm_retraces={eng._prefill.retraces - before[0]}"
-                     f"+{eng._decode.retraces - before[1]}"))
+        s = eng.stats()
+        rows.append({
+            "name": f"serving_engine_{arch}",
+            "arch": arch,
+            "family": cfg.family,
+            "warm_tok_s": round(tok_s, 2),
+            "prefill_retraces": eng._prefill.retraces - before[0],
+            "decode_retraces": eng._decode.retraces - before[1],
+            "max_decode_stall": int(s["max_decode_stall"]),
+            "budget_util": round(float(s["budget_util"]), 4),
+            "chunk": int(s["chunk"]),
+            "step_budget": int(s["step_budget"]),
+        })
     return rows
+
+
+def _family_rows(records: list[dict]) -> list[tuple]:
+    return [(r["name"], 1e6 / max(r["warm_tok_s"], 1e-9),
+             f"family={r['family']}|tok_s={r['warm_tok_s']:.1f}|"
+             f"warm_retraces={r['prefill_retraces']}+{r['decode_retraces']}")
+            for r in records]
+
+
+def engine_families(archs=ENGINE_ARCHS, **kw) -> list[tuple]:
+    """Tuple-row view of :func:`engine_family_records` for benchmarks/run.py."""
+    return _family_rows(engine_family_records(archs, **kw))
+
+
+def validate_bench(doc: dict) -> list[str]:
+    """Schema check for the BENCH_serving.json document; returns a list of
+    problems (empty == valid).  CI fails the bench-smoke job on any."""
+    problems = []
+    if doc.get("schema") != BENCH_SCHEMA:
+        problems.append(f"schema != {BENCH_SCHEMA!r}: {doc.get('schema')!r}")
+    rows = doc.get("rows")
+    if not isinstance(rows, list) or not rows:
+        return problems + ["rows: missing or empty"]
+    for i, row in enumerate(rows):
+        for field, typ in _ROW_FIELDS.items():
+            if field not in row:
+                problems.append(f"rows[{i}] ({row.get('name')}): "
+                                f"missing {field!r}")
+            elif not isinstance(row[field], typ) or isinstance(row[field], bool):
+                problems.append(f"rows[{i}].{field}: "
+                                f"{type(row[field]).__name__} is not {typ}")
+    return problems
+
+
+def write_bench_json(path: str, records: list[dict], *, smoke: bool) -> dict:
+    """Validate and write the serving perf-trajectory document."""
+    import jax
+    doc = {
+        "schema": BENCH_SCHEMA,
+        "smoke": smoke,
+        "backend": jax.default_backend(),
+        "rows": records,
+    }
+    problems = validate_bench(doc)
+    if problems:
+        raise SystemExit("BENCH_serving.json schema-invalid:\n  "
+                         + "\n  ".join(problems))
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return doc
 
 
 def _modeled_decode_bytes(eng) -> tuple[float, float]:
@@ -182,7 +269,38 @@ def serving_bench() -> list[tuple]:
     return engine_families() + paged_decode_paths()
 
 
-if __name__ == "__main__":
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="CI-sized chunked-engine workload; writes the "
+                        "perf-trajectory artifact (default BENCH_serving.json)")
+    p.add_argument("--json", default=None, metavar="PATH",
+                   help="where to write the schema-validated bench document")
+    args = p.parse_args(argv)
+    if args.smoke:
+        records = engine_family_records(requests=4, max_new=6,
+                                        lens=(5, 9, 26), chunk=8)
+        doc = write_bench_json(args.json or "BENCH_serving.json", records,
+                               smoke=True)
+        for r in doc["rows"]:
+            print(f"{r['name']}: {r['warm_tok_s']:.1f} tok/s warm, "
+                  f"retraces={r['prefill_retraces']}+{r['decode_retraces']}, "
+                  f"max decode stall={r['max_decode_stall']} "
+                  f"(chunk={r['chunk']})")
+        print(f"wrote {args.json or 'BENCH_serving.json'} "
+              f"({len(doc['rows'])} rows, schema {BENCH_SCHEMA})")
+        return 0
+    # one measurement feeds both outputs: the printed table and the JSON
+    # rows must describe the same run
+    records = engine_family_records()
+    rows = _family_rows(records) + paged_decode_paths()
     print("name,us_per_tok,derived")
-    for name, us, derived in serving_bench():
+    for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    if args.json:
+        write_bench_json(args.json, records, smoke=False)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,15 +1,19 @@
 """Serve a small model through the serving engine (uniform LayerState
-tree: paged KV pools + recurrent slot rows, length-bucketed batched
-prefill, FIFO admission, continuous decode).
+tree: paged KV pools + recurrent slot rows, chunked-prefill continuous
+batching, FIFO admission).
 
     PYTHONPATH=src python examples/serve_lm.py
     PYTHONPATH=src python examples/serve_lm.py --arch mixtral-8x22b  # MoE+SWA
     PYTHONPATH=src python examples/serve_lm.py --arch rwkv6-3b       # RWKV
     PYTHONPATH=src python examples/serve_lm.py --arch zamba2-1.2b    # hybrid
+    PYTHONPATH=src python examples/serve_lm.py --chunk 8             # stream
+                                               # prompts 8 tokens per step
 
-Every registry architecture serves through the same engine.  Mixed prompt
-lengths land in different buckets; ``--repeat 2`` proves the warm engine
-compiles nothing new on the second pass.
+Every registry architecture serves through the same engine.  Prompts
+stream in through fixed-size chunks fused with the batched decode step
+(`max decode stall=0`: no decode slot ever waits on a prompt);
+``--repeat 2`` proves the warm engine compiles nothing new on the second
+pass.
 """
 
 import sys

@@ -1,17 +1,19 @@
 """Serving launcher: a thin frontend over the serving engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
-        --requests 8 --max-new 16 --prompt-lens 5,9,12
+        --requests 8 --max-new 16 --prompt-lens 5,9,12 --chunk 8
 
 The one path is :class:`repro.serving.engine.PagedEngine` — the uniform
 LayerState tree (paged KV pools for attention layers, slot-row states for
-RWKV/Mamba/cross-attn), length-bucketed batched prefill (a warm engine
-never retraces), FIFO admission + per-request metrics.  Every architecture
-in the registry serves through it: ``--arch rwkv6-3b`` and
-``--arch zamba2-1.2b`` run the same programs as ``--arch yi-6b``.
+RWKV/Mamba/cross-attn), chunked-prefill continuous batching (prompts
+stream in ``--chunk`` tokens per mixed step, fused with every live decode
+slot under ``--step-budget`` — decode never stalls behind a long prompt,
+and a warm engine never retraces), FIFO admission + per-request metrics.
+Every architecture in the registry serves through it: ``--arch rwkv6-3b``
+and ``--arch zamba2-1.2b`` run the same programs as ``--arch yi-6b``.
 ``--repeat 2`` serves the workload twice through one engine and prints the
-second pass's compile deltas (the CI smoke asserts
-``prefill retraces=0 decode retraces=0``).
+second pass's compile deltas (the CI smokes assert
+``prefill retraces=0 decode retraces=0`` and ``max decode stall=0``).
 
 The legacy dense-cache continuous-batching loop (and its ``--dense``
 escape hatch) was deleted; its sequential per-request form survives only
@@ -110,6 +112,15 @@ def main(argv=None) -> int:
     p.add_argument("--max-new", type=int, default=16)
     p.add_argument("--cache-len", type=int, default=64)
     p.add_argument("--page-size", type=int, default=8)
+    p.add_argument("--chunk", type=int, default=None,
+                   help="prefill chunk width: prompts stream in CHUNK "
+                        "tokens per mixed step, fused with the batched "
+                        "decode step (default: cache-len — whole-prompt "
+                        "chunks)")
+    p.add_argument("--step-budget", type=int, default=None,
+                   help="per-step token budget; decode slots are accounted "
+                        "first, the prefill chunk only granted from the "
+                        "remainder (default: slots + chunk)")
     p.add_argument("--temperature", type=float, default=0.0)
     p.add_argument("--dense", action="store_true", help=argparse.SUPPRESS)
     p.add_argument("--paged-kernel", default=None,
@@ -143,17 +154,15 @@ def main(argv=None) -> int:
     from repro.serving import PagedEngine
 
     lens = _parse_lens(args.prompt_lens, args.prompt_len)
+    chunk = args.chunk or args.cache_len
     if args.tile_cache or args.autotune:
         from repro import tuning
-        from repro.serving import bucketing
         tuning.set_tile_cache(args.tile_cache)
-        buckets = bucketing.default_buckets(args.cache_len, args.page_size)
-        # Over-long prompts are rejected at admission, not prefilled —
-        # don't let them crash (or pollute) the warm-up.
-        keep = [l for l in lens if l <= buckets[-1]]
-        served_buckets = sorted({bucketing.bucket_for(l, buckets)
-                                 for l in keep}) or [buckets[0]]
-        warm_tile_cache(cfg, slots=args.slots, prompt_lens=served_buckets,
+        # The engine runs exactly two token-program widths: the mixed step
+        # at the chunk width and the pure decode step at width 1 — the
+        # chunk width *is* the prefill cell set, whatever prompt lengths
+        # arrive.
+        warm_tile_cache(cfg, slots=args.slots, prompt_lens=[chunk],
                         cache_len=args.cache_len, autotune=args.autotune,
                         prefill_batch=args.slots,
                         paged_geoms=PagedEngine.pool_geoms(
@@ -172,9 +181,11 @@ def main(argv=None) -> int:
 
     eng = PagedEngine(model, params, slots=args.slots,
                       page_size=args.page_size, max_len=args.cache_len,
+                      chunk=args.chunk, step_budget=args.step_budget,
                       temperature=args.temperature,
                       decode_kernel=args.paged_kernel)
-    print(f"# paged decode kernel: {eng.decode_kernel}")
+    print(f"# paged decode kernel: {eng.decode_kernel} "
+          f"chunk={eng.chunk} step budget={eng.step_budget}")
     done = {}
     for rep in range(max(1, args.repeat)):
         before = (eng._prefill.retraces, eng._decode.retraces)

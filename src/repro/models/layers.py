@@ -519,7 +519,81 @@ class AttnOutput:
     cache: KVCache | None = None
 
 
-def _paged_decode(cfg, cache: PagedKVCache, q, k, v, *, positions, window: int):
+def _gather_pool_view(cache: PagedKVCache, bsz: int, kvh: int, hd: int):
+    """Per-slot contiguous view of the pool: (k, v [B, KV, L, D] — f32
+    dequantized for int8 pools — and pos [B, L]).  Unallocated slots gather
+    clamped garbage under positions their mask never admits."""
+    logical = cache.logical_len
+    kg = cache.k[cache.page_table]                         # [B,MP,KV,ps,D]
+    vg = cache.v[cache.page_table]
+    kg = kg.transpose(0, 2, 1, 3, 4).reshape(bsz, kvh, logical, hd)
+    vg = vg.transpose(0, 2, 1, 3, 4).reshape(bsz, kvh, logical, hd)
+    posg = cache.pos[cache.page_table].reshape(bsz, logical)
+    if cache.quantized:
+        ksg = cache.k_scale[cache.page_table].transpose(0, 2, 1, 3)
+        vsg = cache.v_scale[cache.page_table].transpose(0, 2, 1, 3)
+        kg = kg.astype(jnp.float32) * ksg.reshape(bsz, kvh, logical)[..., None]
+        vg = vg.astype(jnp.float32) * vsg.reshape(bsz, kvh, logical)[..., None]
+    return kg, vg, posg
+
+
+def _paged_chunk(cfg, cache: PagedKVCache, q, k, v, *, positions, lengths,
+                 window: int):
+    """Prefill one chunk against a paged cache — the multi-token general
+    case of paged decode (decode is the 1-token chunk; the serving engine's
+    *mixed step* batches both phases through this one path).
+
+    ``positions`` [B, S] are global: row ``b`` holds
+    ``starts[b] + arange(S)`` and ``lengths[b]`` of the S tokens are real
+    (0 for slots idle this step — their state is untouched).  Each row
+    attends over its **already-written pages** plus the causal in-chunk
+    block, then its valid K/V are scattered into the pages.  Attend before
+    scatter: with ring wrap a chunk may evict positions that in-chunk
+    queries still need (window W, chunk > logical: token ``p`` overwrites
+    ``p - logical``, which earlier in-chunk queries are still inside W of),
+    so the pool must be read pre-scatter and the in-chunk keys taken raw.
+    Causality across the seam is positional: pool entries hold positions
+    ``< starts[b]``, in-chunk pads sit at positions beyond the row's last
+    real token, so ``kv_pos <= q_pos`` masks both exactly.
+    """
+    from repro.serving.paged_kv import scatter_prefill
+    b, kvh, s, hd = k.shape
+    if positions.ndim != 2:
+        raise ValueError("paged chunk prefill needs per-slot [B, S] "
+                         "positions (global: starts[b] + arange(S))")
+    starts = positions[:, 0].astype(jnp.int32)
+    if lengths is None:
+        lengths = jnp.full((b,), s, jnp.int32)
+    lengths = lengths.astype(jnp.int32)
+
+    kg, vg, posg = _gather_pool_view(cache, b, kvh, hd)
+    # in-chunk keys: pads (j >= length) masked by the pos sentinel — their
+    # positions are future anyway, but an idle row (length 0) has no valid
+    # query to hide behind
+    in_pos = jnp.where(jnp.arange(s, dtype=jnp.int32)[None, :] < lengths[:, None],
+                       positions.astype(jnp.int32), POS_EMPTY)
+    k_all = jnp.concatenate([kg, k.astype(kg.dtype)], axis=2)
+    v_all = jnp.concatenate([vg, v.astype(vg.dtype)], axis=2)
+    pos_all = jnp.concatenate([posg, in_pos], axis=1)
+    # direct attention: chunks are small by design (that is the point of
+    # chunking), and the flash dispatch assumes shared 1-D q_pos
+    out = _gqa_sdpa_direct(q, k_all, v_all, mask_mode="causal", window=window,
+                           q_pos=positions, kv_pos=pos_all).astype(q.dtype)
+
+    ks = vs = None
+    kq, vq = k, v
+    if cache.quantized:
+        from repro.kernels.decode_attention import quantize_kv
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+    dense = KVCache(k=kq, v=vq, pos=in_pos, k_scale=ks, v_scale=vs)
+    new_cache = scatter_prefill(cache, dense, jnp.arange(b, dtype=jnp.int32),
+                                lengths, starts=starts)
+    return out, new_cache
+
+
+def _paged_decode(cfg, cache: PagedKVCache, q, k, v, *, positions, window: int,
+                  lengths=None):
     """One-token decode against a paged cache: scatter the new K/V into each
     slot's page, then attend **straight off the page pools** with the fused
     flash-decode kernel (kernels/paged_attention.py) — the page-table walk
@@ -536,14 +610,17 @@ def _paged_decode(cfg, cache: PagedKVCache, q, k, v, *, positions, window: int):
     out-of-bounds page sentinel in their table row, so their scatters drop
     (``mode="drop"``) and their reads are skipped (fused) or clamped+masked
     (reference) — harmless, because the engine discards their logits and
-    their pos mask never admits future reads.
+    their pos mask never admits future reads.  ``lengths`` ([B], the mixed
+    engine's per-row live mask) additionally drops the writes of rows with
+    ``lengths == 0`` — a slot mid-*prefill* holds live table rows that a
+    decode step it does not participate in must not touch.
     """
     from repro.kernels import paged_attention as _pa
     if positions.ndim != 2:
         raise ValueError("paged decode needs per-slot [B, 1] positions")
     if k.shape[2] != 1:
-        raise ValueError("paged cache only serves one-token decode; prefill "
-                         "is bucketed+dense, then scattered into pages")
+        raise ValueError("paged cache decode is one token per slot; chunk "
+                         "prefill goes through _paged_chunk")
     bsz = q.shape[0]
     ps = cache.page_size
     logical = cache.logical_len
@@ -551,6 +628,8 @@ def _paged_decode(cfg, cache: PagedKVCache, q, k, v, *, positions, window: int):
     li = pvec % logical                                        # ring slot
     rows = jnp.arange(bsz)
     pp = cache.page_table[rows, li // ps]                      # [B] phys page
+    if lengths is not None:
+        pp = jnp.where(lengths.astype(jnp.int32) > 0, pp, cache.n_pages)
     off = li % ps
     ksc = vsc = None
     if cache.quantized:
@@ -568,17 +647,8 @@ def _paged_decode(cfg, cache: PagedKVCache, q, k, v, *, positions, window: int):
 
     mode = _pa.resolve_paged_decode_mode()
     if mode == "reference":
-        kvh, hd = cfg.num_kv_heads, cfg.head_dim
-        kg = ck[cache.page_table]                              # [B,MP,KV,ps,D]
-        vg = cv[cache.page_table]
-        kg = kg.transpose(0, 2, 1, 3, 4).reshape(bsz, kvh, logical, hd)
-        vg = vg.transpose(0, 2, 1, 3, 4).reshape(bsz, kvh, logical, hd)
-        posg = cpos[cache.page_table].reshape(bsz, logical)    # [B, L]
-        if cache.quantized:
-            ksg = ksc[cache.page_table].transpose(0, 2, 1, 3)
-            vsg = vsc[cache.page_table].transpose(0, 2, 1, 3)
-            kg = kg.astype(jnp.float32) * ksg.reshape(bsz, kvh, logical)[..., None]
-            vg = vg.astype(jnp.float32) * vsg.reshape(bsz, kvh, logical)[..., None]
+        kg, vg, posg = _gather_pool_view(new_cache, bsz, cfg.num_kv_heads,
+                                         cfg.head_dim)
         out = _gqa_sdpa(q, kg, vg, mask_mode="causal", window=window,
                         q_pos=positions, kv_pos=posg)
     else:
@@ -595,14 +665,19 @@ def attention(cfg, params: Params, prefix: str, x: jax.Array, *,
               window: int = 0,
               kv_x: jax.Array | None = None,        # cross-attn source
               cache: KVCache | None = None,
-              causal: bool = True) -> AttnOutput:
+              causal: bool = True,
+              lengths: jax.Array | None = None) -> AttnOutput:
     """One attention layer through the uniform-GEMM projections.
 
     Modes:
     * self-attention over x (train/prefill): kv_x and cache are None
     * cross-attention: kv_x given (no causal mask)
     * cached decode: cache given; x is the new token(s); positions [S_q]
-      holds their absolute positions.
+      holds their absolute positions
+    * chunk prefill: paged cache + S > 1 with per-slot [B, S] positions —
+      attend over the already-written pages plus the causal in-chunk block,
+      then append the chunk (``lengths`` [B] = real tokens per row; rows at
+      0 are idle this step and stay untouched).
     """
     h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     q = dense(x, params[f"{prefix}_wq"], bias=params.get(f"{prefix}_bq"))
@@ -619,8 +694,14 @@ def attention(cfg, params: Params, prefix: str, x: jax.Array, *,
 
     new_cache = None
     if isinstance(cache, PagedKVCache):
-        out, new_cache = _paged_decode(cfg, cache, q, k, v,
-                                       positions=positions, window=window)
+        if k.shape[2] == 1:
+            out, new_cache = _paged_decode(cfg, cache, q, k, v,
+                                           positions=positions, window=window,
+                                           lengths=lengths)
+        else:
+            out, new_cache = _paged_chunk(cfg, cache, q, k, v,
+                                          positions=positions, lengths=lengths,
+                                          window=window)
     elif cache is not None:
         s_cache = cache.k.shape[2]
         s_new = k.shape[2]

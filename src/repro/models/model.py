@@ -129,7 +129,7 @@ class Model:
         FSDP weight gather and the peak temp balloons ~9x (38.7 vs 4.2 GiB
         for mixtral decode), which no longer fits a 16 GB v5e.  Same
         threshold as the size-aware serving weight sharding rule."""
-        if mode != "decode":
+        if mode not in ("decode", "chunk"):
             return False
         if not hasattr(self, "_tp_shard_bytes"):
             self._tp_shard_bytes = self.cfg.param_count() * 2 / 16
@@ -195,7 +195,8 @@ class Model:
         return logits[:, -1:], caches
 
     def decode_step(self, params: Params, caches, tokens: jax.Array,
-                    pos: jax.Array, frontend: jax.Array | None = None):
+                    pos: jax.Array, frontend: jax.Array | None = None,
+                    lengths: jax.Array | None = None):
         """tokens [B, 1]; pos: [B] int32 per-slot absolute positions.
 
         Every slot masks and advances at its own absolute position —
@@ -203,6 +204,10 @@ class Model:
         ``pos`` agree (``jnp.full((B,), t)``).  The scalar lockstep shim
         was removed with the legacy dense serving loop: it let shorter
         slots attend past their own length the moment rows diverged.
+
+        ``lengths`` ([B] 0/1) is the continuous-batching live mask: rows at
+        0 (e.g. a slot mid-chunked-prefill riding a decode step) write
+        nothing and keep their state untouched.
         """
         pos = jnp.asarray(pos, jnp.int32)
         if pos.ndim != 1:
@@ -213,9 +218,37 @@ class Model:
         positions = pos.reshape(-1, 1)                  # [B, 1] per-slot
         batch = {"tokens": tokens, "positions": positions,
                  "frontend": frontend}
+        if lengths is not None:
+            batch["lengths"] = jnp.asarray(lengths, jnp.int32)
         logits, caches, _ = self.forward(params, batch, mode="decode",
                                          caches=caches)
         return logits[:, -1], caches
+
+    def chunk_step(self, params: Params, caches, tokens: jax.Array,
+                   positions: jax.Array, lengths: jax.Array,
+                   frontend: jax.Array | None = None):
+        """One *mixed* continuous-batching step: tokens [B, S], positions
+        [B, S] absolute per-slot (row ``b`` holds ``start_b + arange(S)``),
+        lengths [B] = real tokens per row this step.
+
+        Every row is a prefill chunk appended to its decode state — a
+        decoding slot is the ``lengths == 1`` case, an idle slot the
+        ``lengths == 0`` identity case — so one fixed-shape program serves
+        any mix of request phases: the scheduler-level restatement of the
+        paper's one-uniform-dataflow thesis (DESIGN.md §11).  Returns
+        (per-row logits at column ``lengths - 1`` [B, V], new caches).
+        """
+        positions = jnp.asarray(positions, jnp.int32)
+        if positions.ndim != 2:
+            raise ValueError("chunk_step needs per-slot [B, S] positions")
+        lengths = jnp.asarray(lengths, jnp.int32)
+        batch = {"tokens": tokens, "positions": positions,
+                 "frontend": frontend, "lengths": lengths}
+        logits, caches, _ = self.forward(params, batch, mode="chunk",
+                                         caches=caches)
+        idx = jnp.clip(lengths - 1, 0)[:, None, None]
+        last = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
+        return last, caches
 
 
 # ---------------------------------------------------------------------------

@@ -104,12 +104,21 @@ def _valid_mask(lengths: jax.Array | None, b: int, s: int):
         lengths.astype(jnp.int32)[:, None]
 
 
-def _last_valid(x: jax.Array, lengths: jax.Array | None) -> jax.Array:
-    """x[:, length-1, :] per row ([B, d]); x[:, -1, :] when unmasked."""
+def _last_valid(x: jax.Array, lengths: jax.Array | None,
+                prev: jax.Array | None = None) -> jax.Array:
+    """x[:, length-1, :] per row ([B, d]); x[:, -1, :] when unmasked.
+
+    ``prev`` is the carried value for rows with ``lengths == 0`` — a slot
+    that sits out a mixed chunk step contributes no tokens and must keep
+    its token-shift/conv carry untouched."""
     if lengths is None:
         return x[:, -1, :]
-    idx = jnp.clip(lengths.astype(jnp.int32) - 1, 0)[:, None, None]
-    return jnp.take_along_axis(x, idx, axis=1)[:, 0]
+    lengths = lengths.astype(jnp.int32)
+    idx = jnp.clip(lengths - 1, 0)[:, None, None]
+    last = jnp.take_along_axis(x, idx, axis=1)[:, 0]
+    if prev is None:
+        return last
+    return jnp.where((lengths > 0)[:, None], last, prev.astype(last.dtype))
 
 
 def rwkv_mix(cfg, params: Params, prefix: str, x: jax.Array,
@@ -197,13 +206,18 @@ def rwkv_mix(cfg, params: Params, prefix: str, x: jax.Array,
     yn = (yn - mu) * jax.lax.rsqrt(var + 64e-5)
     y = (yn.reshape(b, s, d) * params[f"{prefix}_ln_gamma"]).astype(x.dtype)
     out = dense(y * g, params[f"{prefix}_wo"])
-    new_state = RwkvState(s=s_final, x_prev=_last_valid(x, lengths))
+    new_state = RwkvState(s=s_final,
+                          x_prev=_last_valid(x, lengths, state.x_prev))
     return out, new_state
 
 
 def rwkv_step(cfg, params: Params, prefix: str, x: jax.Array,
-              state: RwkvState):
-    """Single-token decode: x [B, 1, d]."""
+              state: RwkvState, lengths: jax.Array | None = None):
+    """Single-token decode: x [B, 1, d].
+
+    ``lengths`` ([B] 0/1, the mixed engine's live mask): rows at 0 carry a
+    garbage token (a slot mid-prefill riding a decode step it does not
+    participate in) — their state must pass through untouched."""
     b, _, d = x.shape
     h = cfg.ssm_heads or (d // 64)
     dh = d // h
@@ -217,12 +231,17 @@ def rwkv_step(cfg, params: Params, prefix: str, x: jax.Array,
     kv = jnp.einsum("bhd,bhe->bhde", kh, vh)
     y = jnp.einsum("bhd,bhde->bhe", rh, state.s + uh[None, :, :, None] * kv)
     s_new = wh[..., None] * state.s + kv
+    x_last = x[:, -1, :]
+    if lengths is not None:
+        live = lengths.astype(jnp.int32) > 0
+        s_new = jnp.where(live[:, None, None, None], s_new, state.s)
+        x_last = jnp.where(live[:, None], x_last, state.x_prev)
     mu = y.mean(-1, keepdims=True)
     var = y.var(-1, keepdims=True)
     yn = (y - mu) * jax.lax.rsqrt(var + 64e-5)
     yflat = (yn.reshape(b, 1, d) * params[f"{prefix}_ln_gamma"]).astype(x.dtype)
     out = dense(yflat * g, params[f"{prefix}_wo"])
-    return out, RwkvState(s=s_new, x_prev=x[:, -1, :])
+    return out, RwkvState(s=s_new, x_prev=x_last)
 
 
 def rwkv_channel_specs(cfg, prefix: str = "cmix") -> dict[str, Spec]:
@@ -247,7 +266,7 @@ def rwkv_channel_mix(cfg, params: Params, prefix: str, x: jax.Array,
     k = dense(mk, params[f"{prefix}_wk"], activation="relu") ** 2
     k = sharding.shard(k, "batch", "seq", "mlp")
     r = jax.nn.sigmoid(dense(mr, params[f"{prefix}_wr"]))
-    return r * dense(k, params[f"{prefix}_wv"]), _last_valid(x, lengths)
+    return r * dense(k, params[f"{prefix}_wv"]), _last_valid(x, lengths, x_prev)
 
 
 # ===========================================================================
@@ -402,8 +421,11 @@ def mamba_mix(cfg, params: Params, prefix: str, x: jax.Array,
 
 
 def mamba_step(cfg, params: Params, prefix: str, x: jax.Array,
-               state: MambaState):
-    """Single-token decode; x [B, 1, d]."""
+               state: MambaState, lengths: jax.Array | None = None):
+    """Single-token decode; x [B, 1, d].
+
+    ``lengths`` ([B] 0/1 live mask): rows at 0 keep their SSM state and
+    conv window untouched (see :func:`rwkv_step`)."""
     b, _, d = x.shape
     z, xs, bmat, cmat, dt, new_conv, h, din, n = _mamba_project(
         cfg, params, prefix, x, state.conv)
@@ -414,6 +436,10 @@ def mamba_step(cfg, params: Params, prefix: str, x: jax.Array,
     decay = jnp.exp(dtf * a[None])                       # [B,H]
     kv = jnp.einsum("bhd,bn->bhdn", xh * dtf[..., None], bmat[:, 0].astype(jnp.float32))
     s_new = decay[..., None, None] * state.ssm + kv
+    if lengths is not None:
+        live = lengths.astype(jnp.int32) > 0
+        s_new = jnp.where(live[:, None, None, None], s_new, state.ssm)
+        new_conv = jnp.where(live[:, None, None], new_conv, state.conv)
     y = jnp.einsum("bn,bhdn->bhd", cmat[:, 0].astype(jnp.float32), s_new)
     y = y + xh * params[f"{prefix}_d_skip"].astype(jnp.float32)[None, :, None]
     y = y.reshape(b, 1, din).astype(x.dtype)

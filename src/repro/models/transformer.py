@@ -167,7 +167,8 @@ def apply_slot(cfg, slot: Slot, params: Params, x: jax.Array, cache,
     if slot.kind == "attn":
         h = _gather_seq(L.apply_norm(cfg, params, "attn_norm", x))
         out = L.attention(cfg, params, "attn", h, positions=pos,
-                          window=slot.window, cache=cache)
+                          window=slot.window, cache=cache,
+                          lengths=ctx.lengths)
         x = _residual(x, out.y)
         new_cache = out.cache
     elif slot.kind == "cross":
@@ -192,7 +193,8 @@ def apply_slot(cfg, slot: Slot, params: Params, x: jax.Array, cache,
         h = _gather_seq(L.apply_norm(cfg, params, "attn_norm", x))
         st = cache["rwkv"] if cache is not None else None
         if ctx.mode == "decode":
-            y, st_new = SSM.rwkv_step(cfg, params, "rwkv", h, st)
+            y, st_new = SSM.rwkv_step(cfg, params, "rwkv", h, st,
+                                      lengths=ctx.lengths)
         else:
             y, st_new = SSM.rwkv_mix(cfg, params, "rwkv", h, st,
                                      lengths=ctx.lengths)
@@ -201,7 +203,8 @@ def apply_slot(cfg, slot: Slot, params: Params, x: jax.Array, cache,
     elif slot.kind == "mamba":
         h = _gather_seq(L.apply_norm(cfg, params, "attn_norm", x))
         if ctx.mode == "decode":
-            y, st_new = SSM.mamba_step(cfg, params, "mamba", h, cache)
+            y, st_new = SSM.mamba_step(cfg, params, "mamba", h, cache,
+                                       lengths=ctx.lengths)
         else:
             y, st_new = SSM.mamba_mix(cfg, params, "mamba", h, cache,
                                       lengths=ctx.lengths)
@@ -253,7 +256,7 @@ def apply_shared_attn(cfg, params: Params, x: jax.Array, cache, ctx: Ctx):
     x = _sp(x)
     h = _gather_seq(L.apply_norm(cfg, params, "shared_attn_norm", x))
     out = L.attention(cfg, params, "shared_attn", h, positions=ctx.positions,
-                      cache=cache)
+                      cache=cache, lengths=ctx.lengths)
     x = _residual(x, out.y)
     h = _gather_seq(L.apply_norm(cfg, params, "shared_mlp_norm", x))
     x = _residual(x, L.mlp(cfg, params, "shared_mlp", h))

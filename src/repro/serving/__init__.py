@@ -1,33 +1,35 @@
 """Serving subsystem: the uniform LayerState tree, paged KV pools,
-bucketed prefill, FIFO scheduling.
+chunked-prefill continuous batching, FIFO scheduling.
 
 ``launch/serve.py`` and ``examples/serve_lm.py`` are thin frontends over
 :class:`~repro.serving.engine.PagedEngine`.  Every architecture family
 serves through the engine — the per-layer decode state (paged KV, RWKV,
 Mamba, cross-attn KV) sits behind the :mod:`repro.serving.state`
-protocol; the legacy dense continuous-batching loop was deleted (its
-sequential per-request form survives only as the tests' oracle).
+protocol, and prompts stream in through fixed-size chunks fused with the
+batched decode step (one mixed program per iteration — decode never
+stalls behind a long prompt; DESIGN.md §11).  The legacy dense
+continuous-batching loop was deleted (its sequential per-request form
+survives only as the tests' oracle).
 """
 
-from repro.serving.bucketing import bucket_for, default_buckets, pad_prompts
 from repro.serving.engine import JitCounter, PagedEngine
 from repro.serving.paged_kv import (PageAllocator, PoolLayout, ceil_pages,
                                     gather_pages, make_pool,
                                     modeled_decode_bytes, pool_layout,
                                     reset_pages, scatter_prefill)
-from repro.serving.scheduler import (DONE, QUEUED, REJECTED, RUNNING,
-                                     FIFOScheduler, ServeRequest, summarize)
+from repro.serving.scheduler import (DONE, PREFILLING, QUEUED, REJECTED,
+                                     RUNNING, FIFOScheduler, ServeRequest,
+                                     summarize)
 from repro.serving.state import (PagedKVState, SlotRowState, StateGeometry,
                                  StateTree, build_state_tree,
                                  stack_is_stateable)
 
 __all__ = [
     "PagedEngine", "JitCounter", "PageAllocator", "FIFOScheduler",
-    "ServeRequest", "summarize", "bucket_for", "default_buckets",
-    "pad_prompts", "ceil_pages", "make_pool", "scatter_prefill",
+    "ServeRequest", "summarize", "ceil_pages", "make_pool", "scatter_prefill",
     "reset_pages", "gather_pages", "PoolLayout",
     "pool_layout", "modeled_decode_bytes",
     "PagedKVState", "SlotRowState", "StateGeometry", "StateTree",
     "build_state_tree", "stack_is_stateable",
-    "QUEUED", "RUNNING", "DONE", "REJECTED",
+    "QUEUED", "PREFILLING", "RUNNING", "DONE", "REJECTED",
 ]

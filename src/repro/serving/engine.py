@@ -1,4 +1,4 @@
-"""Serving engine: bucketed batched prefill + continuous decode over the
+"""Serving engine: continuous batching with chunked prefill over the
 uniform :class:`~repro.serving.state.LayerState` tree.
 
 One engine instance owns
@@ -10,18 +10,23 @@ One engine instance owns
   architecture in the config registry serves through this tree; there is
   no family special-casing and no legacy dense loop;
 * a **FIFO scheduler** with admission control and per-request metrics
-  (:mod:`repro.serving.scheduler`);
-* exactly **len(buckets) + 2 compiled programs** at steady state: one
-  batched prefill per prompt-length bucket, one decode step, one slot
-  reset — a warm engine never retraces, whatever mix of request lengths
-  arrives.  :class:`JitCounter` is the compilation-count hook that the
-  tests (and the serve CLI's ``--repeat``) assert this with.
+  (:mod:`repro.serving.scheduler`): ``QUEUED -> PREFILLING(k/K chunks)
+  -> RUNNING -> DONE``, pages claimed at the first chunk;
+* exactly **three compiled programs** at steady state: one *mixed step*
+  (``[slots, chunk]`` — at most one prefill chunk fused with every live
+  decode slot), one pure decode step (``[slots, 1]``, the fused
+  paged-attention kernel path), one slot reset — a warm engine never
+  retraces, whatever mix of request lengths and phases arrives.
+  :class:`JitCounter` is the compilation-count hook that the tests (and
+  the serve CLI's ``--repeat``) assert this with.
 
-The decode program runs every slot each step with **per-slot positions**
-(`Model.decode_step` vector form): each slot masks at its own length, so
-mixed-progress slots coexist in one program — the serving-side restatement
-of Kraken's one-uniform-dataflow thesis, now closed over every layer kind
-(DESIGN.md §10).
+The mixed step is the scheduler-level restatement of Kraken's one-
+uniform-dataflow thesis: a decoding slot is a length-1 prefill chunk, an
+idle slot a length-0 identity row, so one fixed-shape program serves any
+phase mix — and because the budget accounts decode slots before granting
+the chunk, **decode never stalls behind a long prompt**: every live slot
+emits a token every step, while the prompt streams in ``chunk`` tokens at
+a time (DESIGN.md §11).
 """
 
 from __future__ import annotations
@@ -31,8 +36,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
-from repro.serving import bucketing
-from repro.serving.scheduler import (FIFOScheduler, ServeRequest, summarize)
+from repro.serving.scheduler import (PREFILLING, RUNNING, FIFOScheduler,
+                                     ServeRequest, summarize)
 from repro.serving.state import build_state_tree, stack_is_stateable
 
 
@@ -69,13 +74,23 @@ class JitCounter:
 
 
 class PagedEngine:
-    """Continuous-batching server over the uniform LayerState tree.
+    """Chunked-prefill continuous-batching server over the uniform
+    LayerState tree.
 
     Serves every architecture whose stack slots expose a
     :class:`~repro.serving.state.LayerState` — which, by construction of
     the slot vocabulary, is every config in the registry: dense,
     sliding-window, local/global, MoE-FFN, RWKV, Mamba/hybrid, cross-attn
     VLM, and int8-KV variants alike.
+
+    ``chunk`` is the prefill chunk width (default: ``max_len`` — every
+    admissible prompt in one chunk); ``step_budget`` the per-step token
+    budget (default ``slots + chunk``): the scheduler accounts one token
+    per live decode slot first and grants the chunk (charged its real
+    token count) only from the remainder, so decode is never displaced.
+    The budget is a true ceiling on tokens issued per step — the
+    constructor requires it to cover ``max(chunk, slots)``, since decode
+    is committed work the scheduler never throttles.
     """
 
     @staticmethod
@@ -101,8 +116,8 @@ class PagedEngine:
 
     def __init__(self, model: Model, params, *, slots: int = 4,
                  page_size: int = 8, max_len: int = 64,
-                 buckets: list[int] | None = None, max_queue: int = 64,
-                 temperature: float = 0.0, seed: int = 0,
+                 chunk: int | None = None, step_budget: int | None = None,
+                 max_queue: int = 64, temperature: float = 0.0, seed: int = 0,
                  overcommit: float = 1.0, decode_kernel: str | None = None):
         from repro.kernels import paged_attention as _pa
         cfg = model.cfg
@@ -113,8 +128,24 @@ class PagedEngine:
                 "engine has no fallback path")
         self.model, self.params, self.cfg = model, params, cfg
         self.slots, self.page_size, self.max_len = slots, page_size, max_len
-        self.buckets = sorted(buckets) if buckets else \
-            bucketing.default_buckets(max_len, page_size)
+        self.chunk = int(chunk) if chunk is not None else max_len
+        if self.chunk <= 0:
+            raise ValueError("chunk must be positive")
+        # admission caps prompts at max_len, so no chunk can ever carry
+        # more real tokens — a wider program would be pure padding compute
+        self.chunk = min(self.chunk, max_len)
+        self.step_budget = int(step_budget) if step_budget is not None else \
+            slots + self.chunk
+        if self.step_budget < max(self.chunk, slots):
+            # below `chunk` a chunk could never issue, even on an otherwise
+            # idle engine (prefill deadlock); below `slots` a full decode
+            # step would overrun the budget — decode is committed work the
+            # scheduler never throttles, so the budget must cover it for
+            # "tokens per step" to be a true ceiling
+            raise ValueError(
+                f"step_budget {self.step_budget} < max(chunk={self.chunk}, "
+                f"slots={slots}): the budget must fit one bare chunk and "
+                "the full decode load")
         self.temperature = temperature
         self._key = jax.random.key(seed)
         self.sched = FIFOScheduler(max_queue=max_queue,
@@ -126,21 +157,6 @@ class PagedEngine:
                                       overcommit=overcommit)
         self.pools = self.state.init_device()
 
-        # --- the engine's three compiled programs --------------------------
-        def prefill_fn(params, pools, tokens, lengths, slot_ids):
-            bp, s = tokens.shape
-            dense = model.init_caches(bp, s, flat=True, clamp_window=False)
-            batch = {"tokens": tokens,
-                     "positions": jnp.arange(s, dtype=jnp.int32),
-                     "lengths": lengths}
-            logits, dense, _ = model.forward(params, batch, mode="prefill",
-                                             caches=dense)
-            idx = jnp.clip(lengths - 1, 0)[:, None, None]
-            last = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
-            pools = self.state.scatter_prefill(pools, dense, slot_ids,
-                                               lengths)
-            return last, pools
-
         # Resolve the decode attention implementation once (``decode_kernel``
         # argument > $KRAKEN_PAGED_DECODE > auto: fused on TPU, dense-gather
         # reference elsewhere) and pin it into this engine's trace — two
@@ -148,19 +164,29 @@ class PagedEngine:
         with _pa.use_paged_decode_mode(decode_kernel):
             self.decode_kernel = _pa.resolve_paged_decode_mode()
 
-        def decode_fn(params, pools, tokens, pos):
+        # --- the engine's three compiled programs --------------------------
+        def mixed_fn(params, pools, tokens, positions, lengths):
+            view = self.state.decode_view(pools, positions[:, 0])
+            with _pa.use_paged_decode_mode(self.decode_kernel):
+                return model.chunk_step(params, view, tokens, positions,
+                                        lengths)
+
+        def decode_fn(params, pools, tokens, pos, live):
             # decode_view is the protocol's per-layer hook for producing
             # what decode consumes (identity for every state kind today —
             # the model reads pools and slot rows natively; a future
             # speculative-decode or prefix-cache view hangs here)
             view = self.state.decode_view(pools, pos)
             with _pa.use_paged_decode_mode(self.decode_kernel):
-                return model.decode_step(params, view, tokens, pos)
+                return model.decode_step(params, view, tokens, pos,
+                                         lengths=live)
 
         def reset_fn(pools, slot_ids):
             return self.state.reset(pools, slot_ids)
 
-        self._prefill = JitCounter(prefill_fn, donate_argnums=(1,))
+        # ``_prefill`` is the mixed-step program (the only one that ever
+        # prefills); the names keep the stats/CLI surface stable
+        self._prefill = JitCounter(mixed_fn, donate_argnums=(1,))
         self._decode = JitCounter(decode_fn, donate_argnums=(1,))
         self._reset = JitCounter(reset_fn, donate_argnums=(0,))
 
@@ -168,8 +194,12 @@ class PagedEngine:
         self.active: list[ServeRequest | None] = [None] * slots
         self._cur = np.zeros((slots, 1), np.int32)
         self._pos = np.zeros((slots,), np.int32)
+        self._emit_step = np.zeros((slots,), np.int64)
         self._rid = 0
-        self.decode_steps = 0
+        self.steps = 0              # programs run (mixed + pure decode)
+        self.decode_steps = 0       # steps that advanced >= 1 decode slot
+        self._issued = 0            # real tokens issued across all steps
+        self._max_stall = 0         # worst decode gap observed, in steps
 
     # ---------------------------------------------------------------- API
     def submit(self, prompt, max_new: int, rid: int | None = None) -> ServeRequest:
@@ -177,13 +207,9 @@ class PagedEngine:
         if rid is None:
             rid, self._rid = self._rid, self._rid + 1
         req = ServeRequest(rid=rid, prompt=prompt, max_new=max_new)
-        if len(prompt) > self.buckets[-1]:
-            # too long for every prefill bucket: hard reject (stamped, so
-            # rejected-request metrics stay meaningful)
-            req.t_submit = self.sched.clock()
-            req.state = "rejected"
-            self.sched.rejected.append(req)
-            return req
+        # all rejection classes (over-long prompt, prompt + max_new beyond
+        # the KV budget, queue full) go through the scheduler's one reject
+        # path — stamped with REJECTED so the metrics stay meaningful
         self.sched.submit(req)
         return req
 
@@ -196,84 +222,135 @@ class PagedEngine:
 
     # ------------------------------------------------------------- engine
     def step(self) -> None:
-        """One scheduler iteration: admit+prefill free slots, then one
-        batched decode step over every live slot."""
-        self._admit_and_prefill()
-        if not any(a is not None for a in self.active):
+        """One scheduler iteration: admit the queue head into a free slot
+        (page claim at first chunk), then issue one fixed-shape program —
+        the mixed step (every live decode slot + at most one prefill
+        chunk, decode accounted against the budget first) when a chunk
+        fits, the pure fused-kernel decode step otherwise."""
+        self._admit()
+        dec = [i for i, r in enumerate(self.active)
+               if r is not None and r.state == RUNNING]
+        pf = next((i for i, r in enumerate(self.active)
+                   if r is not None and r.state == PREFILLING), None)
+        if pf is not None:
+            # budget: decode slots are accounted first, and the chunk is
+            # charged its *real* token count — a final partial chunk only
+            # costs what remains of the prompt, not the padded width
+            r = self.active[pf]
+            remaining = min(self.chunk, r.prompt_len - r.prefill_pos)
+            if len(dec) + remaining > self.step_budget:
+                pf = None
+        if not dec and pf is None:
             return
-        logits, self.pools = self._decode(
-            self.params, self.pools, jnp.asarray(self._cur),
-            jnp.asarray(self._pos))
-        self.decode_steps += 1
-        nxt = self._sample(logits)
-        finished = 0
-        for i, req in enumerate(self.active):
-            if req is None:
-                continue
-            req.out.append(int(nxt[i]))
-            self._cur[i, 0] = int(nxt[i])
-            self._pos[i] += 1
-            if len(req.out) >= req.max_new:
-                self._finish(i)
+        self.steps += 1
+        if pf is not None:
+            self._mixed_step(dec, pf)
+        else:
+            self._decode_step(dec)
+
+    def _admit(self) -> None:
+        # Chunks issue one per step, so at most one request prefills at a
+        # time — claiming pages for a second would only pressure the pool
+        # (and park a live-table slot in pure-decode steps).  Admission ==
+        # page claim at first chunk.
+        if any(r is not None and r.state == PREFILLING for r in self.active):
+            return
+        free = [i for i, a in enumerate(self.active) if a is None]
+        if not free:
+            return
+        got = self.sched.admit(free[:1], self.state.can_admit)
+        if not got:
+            return
+        req = got[0]
+        req.prefill_pos = 0
+        req.chunks_done = 0
+        req.n_chunks = -(-req.prompt_len // self.chunk)
+        self.active[req.slot] = req
+        self.state.admit(req.slot)
+        self._push_tables()
+        # freed-state hygiene before any new writes, one fixed-shape reset
+        # (slot ids padded with -1 drop sentinels, so the program never
+        # retraces): KV states invalidate the pages the slot now owns,
+        # recurrent states zero the slot's row — a refilled slot never
+        # sees its predecessor.
+        ids = np.full((self.slots,), -1, np.int32)
+        ids[0] = req.slot
+        self.pools = self._reset(self.pools, jnp.asarray(ids))
+
+    def _mixed_step(self, dec: list[int], pf: int) -> None:
+        w = self.chunk
+        req = self.active[pf]
+        n = min(w, req.prompt_len - req.prefill_pos)
+        tokens = np.zeros((self.slots, w), np.int32)
+        positions = np.zeros((self.slots, w), np.int32)
+        lengths = np.zeros((self.slots,), np.int32)
+        ar = np.arange(w, dtype=np.int32)
+        for i in dec:
+            tokens[i, 0] = self._cur[i, 0]
+            positions[i] = self._pos[i] + ar
+            lengths[i] = 1
+        start = req.prefill_pos
+        tokens[pf, :n] = req.prompt[start:start + n]
+        positions[pf] = start + ar
+        lengths[pf] = n
+        last, self.pools = self._prefill(
+            self.params, self.pools, jnp.asarray(tokens),
+            jnp.asarray(positions), jnp.asarray(lengths))
+        self._issued += len(dec) + n
+        nxt = self._sample(last)
+        req.prefill_pos += n
+        req.chunks_done += 1
+        finished = self._advance_decode(dec, nxt)
+        if req.prefill_pos >= req.prompt_len:
+            # last chunk: its top-row logits are the first token
+            req.state = RUNNING
+            req.out.append(int(nxt[pf]))
+            req.t_first = self.sched.clock()
+            self._cur[pf, 0] = int(nxt[pf])
+            self._pos[pf] = req.prompt_len
+            self._emit_step[pf] = self.steps
+            if len(req.out) >= req.max_new:   # max_new=1: done at prefill
+                self._finish(pf)
                 finished += 1
         if finished:
+            self._push_tables()
+
+    def _decode_step(self, dec: list[int]) -> None:
+        live = np.zeros((self.slots,), np.int32)
+        live[dec] = 1
+        logits, self.pools = self._decode(
+            self.params, self.pools, jnp.asarray(self._cur),
+            jnp.asarray(self._pos), jnp.asarray(live))
+        self._issued += len(dec)
+        nxt = self._sample(logits)
+        if self._advance_decode(dec, nxt):
             # sentinel the freed page-table rows on device before the next
-            # decode: an idle slot's KV writes must drop, not land in pages
+            # step: an idle slot's KV writes must drop, not land in pages
             # a later request may own.  (Recurrent slot-row states need no
             # sentinel — an idle slot only ever writes its own row, which
             # the next admission resets and overwrites.)  One push per
             # step, however many finished.
             self._push_tables()
 
-    def _admit_and_prefill(self) -> None:
-        # admit one slot at a time so the page claim lands before the next
-        # can_admit check — a batch admit would overshoot a tight pool
-        admitted = []
-        for slot in [i for i, a in enumerate(self.active) if a is None]:
-            got = self.sched.admit([slot], self.state.can_admit)
-            if not got:
-                break
-            self.state.admit(got[0].slot)
-            admitted.append(got[0])
-        if not admitted:
-            return
-        self._push_tables()
-        # freed-state hygiene before any new writes, one fixed-shape reset
-        # per admission wave (slot ids padded with -1 drop sentinels, so
-        # the program never retraces whatever the wave size): KV states
-        # invalidate the pages the slot now owns, recurrent states zero
-        # the slot's row — a refilled slot never sees its predecessor.
-        ids = np.full((self.slots,), -1, np.int32)
-        ids[:len(admitted)] = [r.slot for r in admitted]
-        self.pools = self._reset(self.pools, jnp.asarray(ids))
-
-        by_bucket: dict[int, list[ServeRequest]] = {}
-        for req in admitted:
-            b = bucketing.bucket_for(req.prompt_len, self.buckets)
-            by_bucket.setdefault(b, []).append(req)
-        for blen in sorted(by_bucket):
-            reqs = by_bucket[blen]
-            tokens, lengths = bucketing.pad_prompts(
-                [r.prompt for r in reqs], blen, self.slots)
-            slot_ids = np.full((self.slots,), -1, np.int32)
-            for row, r in enumerate(reqs):
-                slot_ids[row] = r.slot
-            last, self.pools = self._prefill(
-                self.params, self.pools, jnp.asarray(tokens),
-                jnp.asarray(lengths), jnp.asarray(slot_ids))
-            first = self._sample(last)
-            finished = 0
-            for row, req in enumerate(reqs):
-                req.out.append(int(first[row]))
-                req.t_first = self.sched.clock()
-                self.active[req.slot] = req
-                self._cur[req.slot, 0] = int(first[row])
-                self._pos[req.slot] = req.prompt_len
-                if len(req.out) >= req.max_new:   # max_new=1: done at prefill
-                    self._finish(req.slot)
-                    finished += 1
-            if finished:
-                self._push_tables()   # before the next bucket/decode runs
+    def _advance_decode(self, dec: list[int], nxt: np.ndarray) -> int:
+        """Emit one token for every live decode slot; returns #finished."""
+        if dec:
+            self.decode_steps += 1
+        finished = 0
+        for i in dec:
+            req = self.active[i]
+            req.out.append(int(nxt[i]))
+            self._cur[i, 0] = int(nxt[i])
+            self._pos[i] += 1
+            # a live slot that emits every step has gap 0; anything larger
+            # is a real decode stall (the property the budget must prevent)
+            self._max_stall = max(self._max_stall,
+                                  int(self.steps - self._emit_step[i] - 1))
+            self._emit_step[i] = self.steps
+            if len(req.out) >= req.max_new:
+                self._finish(i)
+                finished += 1
+        return finished
 
     def _finish(self, slot: int) -> None:
         """Retire a slot (host bookkeeping only — the caller pushes the
@@ -303,10 +380,14 @@ class PagedEngine:
             "prefill_calls": self._prefill.calls,
             "prefill_retraces": self._prefill.retraces,
             "prefill_cache_size": self._prefill.cache_size,
+            "steps": self.steps,
             "decode_steps": self.decode_steps,
             "decode_retraces": self._decode.retraces,
             "decode_kernel": self.decode_kernel,
-            "buckets": list(self.buckets),
+            "chunk": self.chunk,
+            "step_budget": self.step_budget,
+            "budget_util": self._issued / max(1, self.steps * self.step_budget),
+            "max_decode_stall": self._max_stall,
             "free_pages": self.state.free_pages,
         }
 
@@ -318,4 +399,7 @@ class PagedEngine:
                 f"{m.get('tokens', 0)} tok @ {m.get('tok_s', 0.0):.1f} tok/s "
                 f"| ttft mean {m.get('ttft_mean_s', 0.0) * 1e3:.0f} ms "
                 f"| prefill retraces={s['prefill_retraces']} "
-                f"decode retraces={s['decode_retraces']}")
+                f"decode retraces={s['decode_retraces']} "
+                f"| max decode stall={s['max_decode_stall']} steps "
+                f"| budget util={s['budget_util'] * 100:.1f}% "
+                f"(chunk={s['chunk']}, budget={s['step_budget']})")

@@ -158,28 +158,39 @@ class PageAllocator:
 # ---------------------------------------------------------------------------
 
 def scatter_prefill(pool: PagedKVCache, dense: KVCache,
-                    slot_ids: jax.Array, lengths: jax.Array) -> PagedKVCache:
-    """Write a bucket's dense prefill cache into the slot pages.
+                    slot_ids: jax.Array, lengths: jax.Array,
+                    starts: jax.Array | None = None) -> PagedKVCache:
+    """Write a (chunk of a) dense prefill cache into the slot pages.
 
     ``dense`` must be in *position-identity* layout: row ``j`` holds token
-    position ``j`` (what ``init_caches(..., clamp_window=False)`` + a
-    0-based prefill produces).  For each bucket row ``b`` only positions
-    ``max(0, lengths[b] - logical_len) <= j < lengths[b]`` are written —
-    rows past the true length (bucket padding) and positions a ring of
-    ``logical_len`` would already have evicted are dropped.  Rows with
-    ``slot_ids[b] < 0`` (bucket batch padding) write nothing.
+    position ``starts[b] + j`` (what ``init_caches(..., clamp_window=False)``
+    + a prefill over ``positions = starts[b] + arange(S)`` produces; with
+    ``starts=None`` — the whole-prompt case — row ``j`` is position ``j``).
+    For each row ``b`` only in-chunk offsets ``j < lengths[b]`` whose global
+    position a ring of ``logical_len`` would still retain after the chunk
+    (``starts[b] + j >= starts[b] + lengths[b] - logical_len``) are written
+    — rows past the true length (bucket padding) and already-evicted
+    positions are dropped.  Chunk ``n`` of a prompt appends after chunk
+    ``n - 1`` by passing ``starts``: the write lands at logical index
+    ``(starts[b] + j) % logical_len`` with the *global* position recorded,
+    wrapping the ring across page boundaries exactly like decode's
+    one-token writes.  Rows with ``slot_ids[b] < 0`` (batch padding) write
+    nothing.
     """
     n_pages, kvh, ps, hd = pool.k.shape
     n_slots, mp = pool.page_table.shape
     logical = mp * ps
     bp, _, s, _ = dense.k.shape
 
-    j = jnp.arange(s, dtype=jnp.int32)                       # positions
+    j = jnp.arange(s, dtype=jnp.int32)                       # chunk offsets
     lengths = lengths.astype(jnp.int32)[:, None]             # [Bp, 1]
+    if starts is None:
+        starts = jnp.zeros((bp,), jnp.int32)
+    gpos = starts.astype(jnp.int32)[:, None] + j[None, :]    # [Bp, S] global
     valid = (j[None, :] < lengths) & (j[None, :] >= lengths - logical)
     valid = valid & (slot_ids[:, None] >= 0)
 
-    li = jnp.broadcast_to(j % logical, (bp, s))
+    li = gpos % logical
     rows = pool.page_table[jnp.clip(slot_ids, 0, n_slots - 1)]   # [Bp, MP]
     pp = jnp.take_along_axis(rows, li // ps, axis=1)             # [Bp, S]
     pp = jnp.where(valid, pp, n_pages)                           # drop sentinel
@@ -199,8 +210,7 @@ def scatter_prefill(pool: PagedKVCache, dense: KVCache,
     return PagedKVCache(
         k=pool.k.at[ppf, :, offf].set(k_src, mode="drop"),
         v=pool.v.at[ppf, :, offf].set(v_src, mode="drop"),
-        pos=pool.pos.at[ppf, offf].set(
-            jnp.broadcast_to(j, (bp, s)).reshape(-1), mode="drop"),
+        pos=pool.pos.at[ppf, offf].set(gpos.reshape(-1), mode="drop"),
         page_table=pool.page_table,
         k_scale=ksc, v_scale=vsc,
     )

@@ -2,13 +2,17 @@
 
 Request lifecycle::
 
-    submit() -> QUEUED -> (admit) RUNNING -> DONE
+    submit() -> QUEUED -> (admit: page claim at first chunk)
+                PREFILLING(k/K chunks) -> RUNNING -> DONE
              -> REJECTED            (queue full / prompt exceeds capacity)
 
 Admission is strictly FIFO: a request is admitted when a decode slot is
-free AND its page allocation fits (the engine checks both).  Metrics are
-wall-clock host timestamps: queue wait, TTFT (submit -> first token), and
-decode throughput, aggregated by :func:`summarize`.
+free AND its page allocation fits (the engine checks both); it then holds
+the slot through ``PREFILLING`` — the engine feeds its prompt one chunk
+per mixed step — and graduates to ``RUNNING`` when the last chunk's
+logits produce its first token.  Metrics are wall-clock host timestamps:
+queue wait, TTFT (submit -> first token), and decode throughput,
+aggregated by :func:`summarize`.
 """
 
 from __future__ import annotations
@@ -19,6 +23,7 @@ from collections import deque
 from typing import Iterable
 
 QUEUED = "queued"
+PREFILLING = "prefilling"
 RUNNING = "running"
 DONE = "done"
 REJECTED = "rejected"
@@ -32,6 +37,10 @@ class ServeRequest:
     state: str = QUEUED
     slot: int = -1
     out: list = dataclasses.field(default_factory=list)
+    # chunked-prefill progress (engine-maintained while PREFILLING)
+    prefill_pos: int = 0              # prompt tokens already chunked in
+    chunks_done: int = 0
+    n_chunks: int = 0                 # total planned (the K of "k/K")
     # metrics (host wall-clock seconds)
     t_submit: float = 0.0
     t_admit: float = 0.0
@@ -84,16 +93,20 @@ class FIFOScheduler:
         self.queue.append(req)
         return True
 
-    def admit(self, free_slots: Iterable[int], can_alloc) -> list[ServeRequest]:
+    def admit(self, free_slots: Iterable[int], can_alloc,
+              state: str = PREFILLING) -> list[ServeRequest]:
         """FIFO-admit queued requests into ``free_slots`` while
         ``can_alloc()`` grants pages.  Strict FIFO: the head blocking on
-        pages blocks everything behind it (no head-of-line bypass)."""
+        pages blocks everything behind it (no head-of-line bypass).
+        Admitted requests enter ``state`` (PREFILLING under the chunked
+        engine — pages are claimed at the first chunk; RUNNING only once
+        the last chunk yields the first token)."""
         admitted = []
         for slot in free_slots:
             if not self.queue or not can_alloc():
                 break
             req = self.queue.popleft()
-            req.state = RUNNING
+            req.state = state
             req.slot = slot
             req.t_admit = self.clock()
             self.running[slot] = req

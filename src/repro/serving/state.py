@@ -28,12 +28,20 @@ Protocol surface (one method per engine touchpoint)::
 
     alloc(slot) / free(slot) / can_alloc()    host admission bookkeeping
     init_device()                             fresh device leaf
-    prefill_scatter(leaf, dense, slot_ids, lengths)   traced: bucket
-                                              prefill rows -> slot state
+    prefill_scatter(leaf, dense, slot_ids, lengths, starts=None)
+                                              traced: prefill rows -> slot
+                                              state; ``starts`` [Bp] offsets
+                                              chunk n after chunk n-1
     decode_view(leaf, pos)                    traced: what decode consumes
     reset(leaf, slot_ids)                     traced: scrub freed slots
     push_table(leaf)                          host: allocator table -> device
     geometry()                                StateGeometry descriptor
+
+The chunked mixed step (DESIGN.md §11) updates states *in place* through
+``Model.chunk_step`` — paged layers append each chunk inside attention,
+recurrent rows advance through the length-masked recurrence — so
+``prefill_scatter`` is the whole-prompt/offline entry point (and the
+oracle the chunk property tests pin the in-layer writes to).
 """
 
 from __future__ import annotations
@@ -115,8 +123,8 @@ class PagedKVState:
                          dtype=jnp.dtype(self.cfg.dtype))
 
     def prefill_scatter(self, leaf: PagedKVCache, dense, slot_ids,
-                        lengths) -> PagedKVCache:
-        return scatter_prefill(leaf, dense, slot_ids, lengths)
+                        lengths, starts=None) -> PagedKVCache:
+        return scatter_prefill(leaf, dense, slot_ids, lengths, starts=starts)
 
     def decode_view(self, leaf: PagedKVCache, pos) -> PagedKVCache:
         return leaf   # attention consumes the pool natively
@@ -180,7 +188,11 @@ class SlotRowState:
                             dtype=jnp.dtype(self.cfg.dtype), abstract=False,
                             n_frontend=self.cfg.num_frontend_tokens)
 
-    def prefill_scatter(self, leaf, dense, slot_ids, lengths):
+    def prefill_scatter(self, leaf, dense, slot_ids, lengths, starts=None):
+        # O(1) rows hold the state *after* the row's tokens, so a scatter is
+        # whole-state by construction — ``starts`` does not change what is
+        # written (chunked prefill advances these rows in place through the
+        # length-masked recurrence instead of scattering)
         idx = _drop_idx(slot_ids, self.n_slots)
         return jax.tree.map(
             lambda full, row: full.at[idx].set(row, mode="drop"),
@@ -253,9 +265,10 @@ class StateTree:
     def init_device(self):
         return self.map_device(lambda st: st.init_device())
 
-    def scatter_prefill(self, pools, dense, slot_ids, lengths):
+    def scatter_prefill(self, pools, dense, slot_ids, lengths, starts=None):
         return self.map_device(
-            lambda st, pl, dn: st.prefill_scatter(pl, dn, slot_ids, lengths),
+            lambda st, pl, dn: st.prefill_scatter(pl, dn, slot_ids, lengths,
+                                                  starts=starts),
             pools, dense)
 
     def decode_view(self, pools, pos):

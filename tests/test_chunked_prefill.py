@@ -1,0 +1,249 @@
+"""Chunked-prefill lockdown (DESIGN.md §11).
+
+Three properties pin the mixed-step engine:
+
+* **Token identity** — serving with any chunk width (including widths that
+  are ragged against the page size, so chunks cross page boundaries
+  mid-write) produces exactly the tokens of whole-prompt prefill, for a
+  paged-KV architecture and a recurrent one.  Property-swept with
+  hypothesis (the conftest stub keeps it running on a bare interpreter).
+* **No decode stall** — a long prompt (>= 8 chunks) submitted while other
+  slots decode never delays a decode slot by even one step: every live
+  slot emits a token on every engine step while the prompt streams in.
+* **Lifecycle** — requests traverse QUEUED -> PREFILLING(k/K) -> RUNNING
+  -> DONE with pages claimed at the first chunk, and the scatter-offset
+  plumbing (``scatter_prefill(starts=)``) agrees with decode's ring
+  writes.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_arch, smoke_config
+from repro.models.model import Model
+from repro.serving import PREFILLING, RUNNING, PagedEngine
+
+_SETUP: dict = {}
+_ORACLE: dict = {}
+
+#: prompt lengths are ragged against page_size=4 (3, 6, 9, 13 straddle
+#: page boundaries) and long enough that small chunks split every prompt
+PROMPT_LENS = [3, 6, 9, 13]
+
+
+def setup_arch(arch):
+    if arch not in _SETUP:
+        cfg = dataclasses.replace(smoke_config(get_arch(arch)),
+                                  dtype="float32", capacity_factor=64.0)
+        model = Model(cfg)
+        params = model.init(jax.random.key(0))
+        _SETUP[arch] = (cfg, model, params)
+    return _SETUP[arch]
+
+
+def prompts_for(cfg, seed=11):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, (l,)).astype(np.int32)
+            for l in PROMPT_LENS]
+
+
+def serve(model, params, prompts, max_new, **engine_kw):
+    eng = PagedEngine(model, params, page_size=4, max_len=32, **engine_kw)
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new, rid=i)
+    return eng.run_until_idle(), eng
+
+
+def whole_prefill_reference(arch, max_new=5):
+    """The whole-prompt engine: chunk defaults to max_len, so every
+    admissible prompt prefills in a single chunk (this configuration is
+    itself pinned token-identical to the sequential per-request oracle by
+    tests/test_serving_engine.py)."""
+    key = (arch, max_new)
+    if key not in _ORACLE:
+        cfg, model, params = setup_arch(arch)
+        done, _ = serve(model, params, prompts_for(cfg), max_new, slots=2)
+        _ORACLE[key] = done
+    return _ORACLE[key]
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "rwkv6-3b"])
+@settings(max_examples=6, deadline=None, derandomize=True)
+@given(chunk=st.integers(min_value=1, max_value=13),
+       slots=st.integers(min_value=2, max_value=3),
+       budget_slack=st.integers(min_value=0, max_value=8))
+def test_chunked_equals_whole_prefill(arch, chunk, slots, budget_slack):
+    """Property: any (chunk, slots, budget) schedule is token-identical to
+    whole-prompt prefill — for the paged-KV family and the recurrent one.
+    Chunk widths 1..13 cover the degenerate one-token chunk, widths ragged
+    against the page size, widths crossing page boundaries mid-prompt, and
+    widths larger than every prompt."""
+    cfg, model, params = setup_arch(arch)
+    max_new = 5
+    ref = whole_prefill_reference(arch, max_new)
+    done, eng = serve(model, params, prompts_for(cfg), max_new,
+                      slots=slots, chunk=chunk,
+                      step_budget=slots + chunk + budget_slack)
+    for i in ref:
+        assert done[i] == ref[i], (arch, chunk, slots, i, done[i], ref[i])
+    s = eng.stats()
+    assert s["prefill_retraces"] <= 1   # <= : chunk >= 13 never splits
+    assert s["decode_retraces"] <= 1
+    assert s["max_decode_stall"] == 0
+    for alloc in eng.allocators.values():
+        assert alloc.free_pages == alloc.n_pages
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "zamba2-1.2b"])
+def test_long_prompt_never_stalls_decode(arch):
+    """A long prompt (>= 8 chunks) submitted while 2 slots decode: every
+    decode slot emits a token on *every* engine step while the prompt
+    streams in — the head-of-line blocking the whole-prefill engine had is
+    structurally gone — and all outputs stay token-identical to the
+    whole-prompt engine."""
+    cfg, model, params = setup_arch(arch)
+    chunk = 2
+    long_len = 17                       # ceil(17 / 2) = 9 chunks
+    rng = np.random.default_rng(3)
+    short = [rng.integers(0, cfg.vocab_size, (l,)).astype(np.int32)
+             for l in (3, 5)]
+    long = rng.integers(0, cfg.vocab_size, (long_len,)).astype(np.int32)
+    max_new = 12                        # shorts decode throughout the prefill
+
+    ref, _ = serve(model, params, short + [long], max_new, slots=3)
+    done, eng = serve(model, params, short + [long], max_new, slots=3,
+                      chunk=chunk)
+    for i in ref:
+        assert done[i] == ref[i], (arch, i, done[i], ref[i])
+
+    req = next(r for r in eng.sched.done if r.rid == 2)
+    assert req.n_chunks == 9 and req.chunks_done == 9
+    s = eng.stats()
+    # the acceptance bar: no decode slot observed a gap of even one step
+    # (a fortiori none longer than one chunk), with both phases live
+    assert s["max_decode_stall"] == 0, s
+    assert s["prefill_retraces"] == 1 and s["decode_retraces"] == 1
+    assert 0.0 < s["budget_util"] <= 1.0
+
+
+def test_engine_knob_validation():
+    """chunk/step_budget misconfigurations fail loudly at construction:
+    chunk=0 is an error (not silently coerced to the whole-prompt
+    default), and the budget must cover ``max(chunk, slots)`` — below
+    ``chunk`` prefill deadlocks, below ``slots`` a full decode step would
+    overrun it (decode is never throttled, so the budget would be a lie)."""
+    cfg, model, params = setup_arch("yi-6b")
+    with pytest.raises(ValueError, match="chunk must be positive"):
+        PagedEngine(model, params, slots=2, page_size=4, max_len=32, chunk=0)
+    with pytest.raises(ValueError, match="bare chunk"):
+        PagedEngine(model, params, slots=2, page_size=4, max_len=32,
+                    chunk=8, step_budget=7)
+    with pytest.raises(ValueError, match="decode load"):
+        PagedEngine(model, params, slots=4, page_size=4, max_len=32,
+                    chunk=2, step_budget=2)
+    # a tight-but-legal budget defers the chunk behind live decodes but
+    # charges a final partial chunk only its real token count
+    eng = PagedEngine(model, params, slots=2, page_size=4, max_len=32,
+                      chunk=8, step_budget=8)
+    assert (eng.chunk, eng.step_budget) == (8, 8)
+    # a chunk wider than the context is clamped: admission caps prompts at
+    # max_len, so the extra width could only ever be padding compute
+    wide = PagedEngine(model, params, slots=2, page_size=4, max_len=32,
+                       chunk=64)
+    assert wide.chunk == 32
+
+
+def test_lifecycle_prefilling_state_and_page_claim():
+    """QUEUED -> PREFILLING(k/K) -> RUNNING -> DONE, pages claimed at the
+    first chunk: while a request is PREFILLING its pages are held, other
+    queued requests keep their QUEUED state, and single-stepping exposes
+    the k/K chunk progress."""
+    from repro.serving import DONE, QUEUED
+    cfg, model, params = setup_arch("yi-6b")
+    eng = PagedEngine(model, params, slots=2, page_size=4, max_len=32,
+                      chunk=4)
+    long = np.arange(14, dtype=np.int32) % cfg.vocab_size
+    a = eng.submit(long, max_new=2, rid=0)
+    b = eng.submit(np.zeros(3, np.int32), max_new=2, rid=1)
+    assert a.state == QUEUED and a.slot == -1
+    free0 = {g: al.free_pages for g, al in eng.allocators.items()}
+
+    eng.step()   # admit a (page claim at first chunk) + chunk 1/4
+    assert a.state == PREFILLING
+    assert a.slot >= 0 and a.prefill_pos == 4
+    assert (a.chunks_done, a.n_chunks) == (1, 4)
+    assert a.out == []                        # no token until the last chunk
+    for g, al in eng.allocators.items():      # the claim really happened
+        assert al.free_pages < free0[g]
+
+    eng.step()   # admit b into the second slot? no — one PREFILLING at a
+    assert b.state in (QUEUED, PREFILLING)    # time; b waits for a's chunks
+    while a.state == PREFILLING:
+        eng.step()
+    assert a.state == RUNNING and len(a.out) == 1 and a.t_first > 0
+    assert a.prefill_pos == 14
+    eng.run_until_idle()
+    assert a.state == DONE and b.state == DONE
+    for alloc in eng.allocators.values():
+        assert alloc.free_pages == alloc.n_pages
+
+
+def test_scatter_prefill_start_offsets_match_decode_ring():
+    """`scatter_prefill(starts=)` is decode's ring write, vectorized: a
+    prompt scattered as two chunks (the second with a start offset,
+    crossing page boundaries and wrapping the ring) leaves exactly the
+    pool a whole-prompt scatter leaves."""
+    from repro.models.layers import KVCache
+    from repro.serving import PageAllocator, make_pool, scatter_prefill
+
+    class Cfg:
+        num_kv_heads, head_dim = 2, 4
+        dtype = "float32"
+
+    rng = np.random.default_rng(5)
+    ps, mp, n_slots = 4, 3, 2
+    logical = ps * mp                     # ring of 12
+    total = 17                            # wraps: 17 > logical
+
+    def dense_chunk(start, width):
+        """Position-identity chunk: local row j = global position start+j."""
+        k = rng.standard_normal((1, 2, width, 4)).astype(np.float32)
+        return KVCache(k=jnp.asarray(k), v=jnp.asarray(k * 2.0),
+                       pos=jnp.zeros((1, width), jnp.int32))
+
+    def fresh_pool():
+        alloc = PageAllocator(n_pages=mp * n_slots, pages_per_slot=mp,
+                              n_slots=n_slots)
+        alloc.alloc(0)
+        pool = make_pool(Cfg, n_pages=mp * n_slots, page_size=ps,
+                         max_pages=mp, n_slots=n_slots, dtype=jnp.float32)
+        return dataclasses.replace(pool, page_table=jnp.asarray(alloc.table))
+
+    rng = np.random.default_rng(5)
+    whole = dense_chunk(0, total)
+    p_whole = scatter_prefill(fresh_pool(), whole,
+                              jnp.asarray([0]), jnp.asarray([total]))
+
+    split = 7                             # ragged against the page size
+    rng = np.random.default_rng(5)        # same values, re-drawn per chunk
+    whole2 = dense_chunk(0, total)
+    first = jax.tree.map(lambda a: a[:, :, :split] if a.ndim == 4
+                         else a[:, :split], whole2)
+    second = jax.tree.map(lambda a: a[:, :, split:] if a.ndim == 4
+                          else a[:, split:], whole2)
+    p_chunked = scatter_prefill(fresh_pool(), first,
+                                jnp.asarray([0]), jnp.asarray([split]))
+    p_chunked = scatter_prefill(p_chunked, second, jnp.asarray([0]),
+                                jnp.asarray([total - split]),
+                                starts=jnp.asarray([split]))
+
+    for name in ("k", "v", "pos"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(p_whole, name)),
+            np.asarray(getattr(p_chunked, name)), err_msg=name)

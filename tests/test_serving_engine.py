@@ -5,7 +5,7 @@ for *every* architecture family.
 
 The sequential reference is per-request ``model.prefill`` + lockstep
 ``decode_step`` over a dense flat cache — the simplest possible semantics
-the engine's batched/bucketed/paged path is pinned to.  The equivalence
+the engine's chunked/batched/paged path is pinned to.  The equivalence
 matrix spans the protocol's state kinds: paged KV (yi-6b), sliding-window
 ring wrap (mixtral, smoke window 8 forces wrap across page boundaries),
 RWKV wkv/shift rows (rwkv6-3b), Mamba SSM + conv rows behind a
@@ -100,22 +100,25 @@ def test_engine_supports_every_registered_arch():
 
 
 @pytest.mark.parametrize("arch", ["yi-6b", "rwkv6-3b"])
-def test_warm_engine_never_retraces(arch):
-    """Warm serving with mixed prompt lengths compiles each bucket at most
-    once: a second workload over the same buckets adds zero programs —
-    including for the recurrent family (the length-masked batched prefill
-    makes SSM prefill bucket-paddable)."""
+@pytest.mark.parametrize("chunk", [None, 4])
+def test_warm_engine_never_retraces(arch, chunk):
+    """Warm serving with mixed prompt lengths compiles exactly two token
+    programs — the mixed step at the fixed chunk width and the pure decode
+    step — and a second workload over different lengths/content/arrival
+    order adds zero programs, including for the recurrent family (the
+    length-masked recurrence makes SSM prefill chunk-paddable)."""
     cfg, model, params = setup_arch(arch)
-    eng = PagedEngine(model, params, slots=2, page_size=4, max_len=32)
+    eng = PagedEngine(model, params, slots=2, page_size=4, max_len=32,
+                      chunk=chunk)
     for p in mixed_prompts(cfg, [3, 5, 9, 12], seed=1):
         eng.submit(p, 4)
     eng.run_until_idle()
     s1 = eng.stats()
-    assert s1["prefill_retraces"] <= len(eng.buckets)
+    assert s1["prefill_retraces"] == 1      # one mixed-step width: the chunk
     assert s1["decode_retraces"] == 1
     assert s1["prefill_cache_size"] == s1["prefill_retraces"]
 
-    # same buckets, different lengths/content/arrival order
+    # different lengths/content/arrival order: same two programs
     for p in mixed_prompts(cfg, [12, 2, 4, 6, 10], seed=2):
         eng.submit(p, 4)
     eng.run_until_idle()
@@ -127,20 +130,22 @@ def test_warm_engine_never_retraces(arch):
 
 
 def test_admission_control_and_metrics():
+    from repro.serving import DONE, QUEUED, REJECTED
     cfg, model, params = setup_arch("yi-6b")
     eng = PagedEngine(model, params, slots=2, page_size=4, max_len=16,
                       max_queue=2)
     # prompt + max_new beyond the KV budget: rejected up front
     r = eng.submit(np.zeros(12, np.int32), max_new=8)
-    assert r.state == "rejected"
+    assert r.state == REJECTED
     # queue capacity: third queued request bounces
     a = eng.submit(np.zeros(4, np.int32), 2)
     b = eng.submit(np.zeros(4, np.int32), 2)
     c = eng.submit(np.zeros(4, np.int32), 2)
-    assert [a.state, b.state, c.state] == ["queued", "queued", "rejected"]
+    assert [a.state, b.state, c.state] == [QUEUED, QUEUED, REJECTED]
     done = eng.run_until_idle()
     assert sorted(done) == [a.rid, b.rid]
     for req in eng.sched.done:
+        assert req.state == DONE
         assert req.t_first >= req.t_admit >= req.t_submit
         assert req.t_done >= req.t_first
         assert len(req.out) == 2
@@ -148,6 +153,39 @@ def test_admission_control_and_metrics():
     m = summarize(eng.sched.done + eng.sched.rejected)
     assert m["done"] == 2 and m["rejected"] == 2
     assert m["tokens"] == 4 and m["tok_s"] > 0
+
+
+def test_rejected_request_metrics():
+    """The hard-reject path stamps requests with the scheduler's REJECTED
+    constant (not an ad-hoc string) and ``summarize`` counts every
+    rejection class — over-long prompts (engine hard reject: no chunk
+    schedule fits), capacity rejects, and queue-full rejects — whether or
+    not anything completed."""
+    from repro.serving import REJECTED, summarize
+    cfg, model, params = setup_arch("yi-6b")
+    eng = PagedEngine(model, params, slots=2, page_size=4, max_len=16,
+                      max_queue=1)
+    # prompt longer than the engine context: engine-level hard reject
+    hard = eng.submit(np.zeros(20, np.int32), max_new=1)
+    assert hard.state == REJECTED and hard.t_submit > 0
+    # prompt fits but prompt + max_new exceeds the KV budget
+    cap = eng.submit(np.zeros(10, np.int32), max_new=10)
+    assert cap.state == REJECTED
+    # queue-full reject behind one queued request
+    ok = eng.submit(np.zeros(4, np.int32), 2)
+    full = eng.submit(np.zeros(4, np.int32), 2)
+    assert full.state == REJECTED
+    # nothing ran yet: summarize must still report the rejects
+    m0 = summarize(eng.sched.done + eng.sched.rejected)
+    assert m0 == {"done": 0, "rejected": 3}
+    eng.run_until_idle()
+    m = summarize(eng.sched.done + eng.sched.rejected)
+    assert m["done"] == 1 and m["rejected"] == 3
+    assert m["tokens"] == len(ok.out) == 2
+    # rejected requests never entered a slot and hold no pages
+    assert all(r.slot == -1 for r in eng.sched.rejected)
+    for alloc in eng.allocators.values():
+        assert alloc.free_pages == alloc.n_pages
 
 
 def test_engine_fused_kernel_matches_sequential():
@@ -294,7 +332,7 @@ def test_engine_soak_window_wrap_and_page_pressure():
     for i in ref:
         assert done[i] == ref[i], (i, done[i], ref[i])
     m = eng.stats()
-    assert m["prefill_retraces"] <= len(eng.buckets)
+    assert m["prefill_retraces"] == 1
     assert m["decode_retraces"] == 1
 
 
@@ -316,5 +354,5 @@ def test_engine_soak_recurrent_eviction_chain():
     for i in ref:
         assert done[i] == ref[i], (i, done[i], ref[i])
     s = eng.stats()
-    assert s["prefill_retraces"] <= len(eng.buckets)
+    assert s["prefill_retraces"] == 1
     assert s["decode_retraces"] == 1
