@@ -104,6 +104,121 @@ def engine_family_records(archs=ENGINE_ARCHS, *, requests: int = 6,
     return rows
 
 
+def prefix_cache_records(arch: str = "yi-6b", *, requests: int = 6,
+                         slots: int = 2, max_new: int = 8,
+                         prefix_len: int = 16, suffix_lens: tuple = (8, 9, 12),
+                         cache_len: int = 64, chunk: int = 8,
+                         page_size: int = 8) -> list[dict]:
+    """The synthetic shared-prefix trace (DESIGN.md §12): every request
+    carries one fixed ``prefix_len``-token prefix (a system prompt) plus a
+    random suffix; the workload is served twice through a cache-on engine
+    and twice through a cache-off engine with identical prompts, and the
+    second (warm) pass of each is measured.  The acceptance metrics ride
+    as row extras: with the cache on, warm prefill tokens/request must
+    collapse (the prefix — and on exact re-sends the whole prompt — is
+    never recomputed) and warm TTFT improve, at zero warm retraces either
+    way.  One suffix length keeps the total page-aligned, so the warm
+    pass takes genuine full hits + CoW forks, not just boundary resumes.
+    ``overcommit`` provisions pool slack beyond the concurrent slot
+    claims — without slack the refcount-aware LRU (correctly) evicts the
+    cache to admit, and there is nothing to measure."""
+    import numpy as np
+    import jax
+
+    from repro.configs import get_arch, smoke_config
+    from repro.models.model import Model
+    from repro.serving import PagedEngine, summarize
+
+    cfg = dataclasses.replace(smoke_config(get_arch(arch)), dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(1)
+    shared = rng.integers(0, cfg.vocab_size, size=(prefix_len,)).astype(
+        "int32")
+    prompts = [np.concatenate([shared, rng.integers(
+        0, cfg.vocab_size,
+        size=(suffix_lens[i % len(suffix_lens)],)).astype("int32")])
+        for i in range(requests)]
+
+    sides = {}
+    for on in (False, True):
+        eng = PagedEngine(model, params, slots=slots, page_size=page_size,
+                          max_len=cache_len, chunk=chunk, overcommit=2.0,
+                          prefix_cache=on)
+        for p in prompts:                   # pass 1: warm compiles + cache
+            eng.submit(p, max_new)
+        eng.run_until_idle()
+        pre_tok = eng.stats()["prefill_tokens"]
+        before = (eng._prefill.retraces, eng._decode.retraces)
+        t0 = time.perf_counter()
+        for p in prompts:                   # pass 2: the measured re-send
+            eng.submit(p, max_new)
+        eng.run_until_idle()
+        dt = time.perf_counter() - t0
+        s = eng.stats()
+        warm = summarize(eng.sched.done[-requests:])
+        sides[on] = {
+            "tok_s": requests * max_new / dt,
+            "prefill_tok_per_req": (s["prefill_tokens"] - pre_tok) / requests,
+            "ttft_mean_s": warm["ttft_mean_s"],
+            "retraces": (eng._prefill.retraces - before[0],
+                         eng._decode.retraces - before[1]),
+            "stats": s,
+        }
+    on, off = sides[True], sides[False]
+    s = on["stats"]
+    return [{
+        "name": f"serving_prefix_cache_{arch}",
+        "arch": arch,
+        "family": cfg.family,
+        "warm_tok_s": round(on["tok_s"], 2),
+        "prefill_retraces": on["retraces"][0],
+        "decode_retraces": on["retraces"][1],
+        "max_decode_stall": int(s["max_decode_stall"]),
+        "budget_util": round(float(s["budget_util"]), 4),
+        "chunk": int(s["chunk"]),
+        "step_budget": int(s["step_budget"]),
+        # the prefix-cache acceptance extras (schema allows extra fields)
+        "prefix_hit_rate": float(s["prefix_hit_rate"]),
+        "cow_forks": int(s["cow_forks"]),
+        "cache_pages": int(s["cache_pages"]),
+        "prefill_tok_per_req_on": round(on["prefill_tok_per_req"], 2),
+        "prefill_tok_per_req_off": round(off["prefill_tok_per_req"], 2),
+        "prefill_tok_reduction": round(
+            off["prefill_tok_per_req"] / max(on["prefill_tok_per_req"], 1e-9),
+            2),
+        "ttft_warm_s_on": round(on["ttft_mean_s"], 6),
+        "ttft_warm_s_off": round(off["ttft_mean_s"], 6),
+    }]
+
+
+def append_history(path: str, doc: dict) -> None:
+    """Append one run's bench document to the committed perf trajectory
+    (``BENCH_history.jsonl``: one JSON document per line, append-only —
+    the in-repo record CI extends on every main build)."""
+    entry = dict(doc, ts=round(time.time(), 3))
+    with open(path, "a") as f:
+        f.write(json.dumps(entry, sort_keys=True) + "\n")
+
+
+def validate_history(path: str) -> list[str]:
+    """Every line of the history must itself be a schema-valid document."""
+    problems = []
+    with open(path) as f:
+        for n, line in enumerate(f, 1):
+            if not line.strip():
+                continue
+            try:
+                entry = json.loads(line)
+            except ValueError as e:
+                problems.append(f"line {n}: not JSON ({e})")
+                continue
+            problems += [f"line {n}: {p}" for p in validate_bench(entry)]
+            if "ts" not in entry:
+                problems.append(f"line {n}: missing ts")
+    return problems
+
+
 def _family_rows(records: list[dict]) -> list[tuple]:
     return [(r["name"], 1e6 / max(r["warm_tok_s"], 1e-9),
              f"family={r['family']}|tok_s={r['warm_tok_s']:.1f}|"
@@ -276,29 +391,61 @@ def main(argv=None) -> int:
                         "perf-trajectory artifact (default BENCH_serving.json)")
     p.add_argument("--json", default=None, metavar="PATH",
                    help="where to write the schema-validated bench document")
+    p.add_argument("--prefix-cache", action="store_true",
+                   help="add the shared-prefix trace row: cache-on vs "
+                        "cache-off warm passes over one re-sent workload "
+                        "(hit rate, prefill tokens/request, TTFT)")
+    p.add_argument("--history", default=None, metavar="PATH",
+                   help="append this run's document to the perf-trajectory "
+                        "JSONL (one schema-valid document per line)")
+    p.add_argument("--validate-history", default=None, metavar="PATH",
+                   help="validate an existing history file and exit")
     args = p.parse_args(argv)
+    if args.validate_history:
+        problems = validate_history(args.validate_history)
+        if problems:
+            print("\n".join(problems), file=sys.stderr)
+            return 1
+        print(f"{args.validate_history}: valid")
+        return 0
     if args.smoke:
         records = engine_family_records(requests=4, max_new=6,
                                         lens=(5, 9, 26), chunk=8)
+        if args.prefix_cache:
+            records += prefix_cache_records(requests=4, max_new=6)
         doc = write_bench_json(args.json or "BENCH_serving.json", records,
                                smoke=True)
         for r in doc["rows"]:
+            extra = ""
+            if "prefix_hit_rate" in r:
+                extra = (f", prefix hit rate={r['prefix_hit_rate'] * 100:.1f}%"
+                         f", prefill tok/req {r['prefill_tok_per_req_off']}"
+                         f" -> {r['prefill_tok_per_req_on']} "
+                         f"({r['prefill_tok_reduction']}x), "
+                         f"cow forks={r['cow_forks']}")
             print(f"{r['name']}: {r['warm_tok_s']:.1f} tok/s warm, "
                   f"retraces={r['prefill_retraces']}+{r['decode_retraces']}, "
                   f"max decode stall={r['max_decode_stall']} "
-                  f"(chunk={r['chunk']})")
+                  f"(chunk={r['chunk']}){extra}")
         print(f"wrote {args.json or 'BENCH_serving.json'} "
               f"({len(doc['rows'])} rows, schema {BENCH_SCHEMA})")
+        if args.history:
+            append_history(args.history, doc)
+            print(f"appended to {args.history}")
         return 0
     # one measurement feeds both outputs: the printed table and the JSON
     # rows must describe the same run
     records = engine_family_records()
+    if args.prefix_cache:
+        records += prefix_cache_records()
     rows = _family_rows(records) + paged_decode_paths()
     print("name,us_per_tok,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
     if args.json:
         write_bench_json(args.json, records, smoke=False)
+        if args.history:
+            append_history(args.history, json.load(open(args.json)))
     return 0
 
 

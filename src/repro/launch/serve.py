@@ -133,6 +133,15 @@ def main(argv=None) -> int:
     p.add_argument("--repeat", type=int, default=1,
                    help="serve the workload N times through one engine; a "
                         "warm pass must print zero retraces")
+    p.add_argument("--prefix-cache", action="store_true",
+                   help="share KV pages of cached prompt prefixes across "
+                        "requests (copy-on-write; DESIGN.md §12).  Only "
+                        "full-attention paged architectures can cache — "
+                        "recurrent/windowed archs report hit rate 0")
+    p.add_argument("--shared-prefix", type=int, default=0, metavar="N",
+                   help="prepend one fixed N-token prefix to every prompt "
+                        "(the shared-prefix trace the prefix-cache smoke "
+                        "greps a nonzero hit rate from)")
     p.add_argument("--autotune", action="store_true",
                    help="benchmark tile candidates for this arch's GEMM "
                         "cells and persist the winners before serving")
@@ -174,18 +183,26 @@ def main(argv=None) -> int:
     params = model.init(jax.random.key(0))
     rng = np.random.default_rng(0)
 
+    shared = rng.integers(0, cfg.vocab_size,
+                          size=(args.shared_prefix,)).astype(np.int32)
+
     def make_prompts():
-        return [rng.integers(0, cfg.vocab_size,
-                             size=(lens[i % len(lens)],)).astype(np.int32)
+        return [np.concatenate([
+            shared,
+            rng.integers(0, cfg.vocab_size,
+                         size=(lens[i % len(lens)],)).astype(np.int32)])
                 for i in range(args.requests)]
 
     eng = PagedEngine(model, params, slots=args.slots,
                       page_size=args.page_size, max_len=args.cache_len,
                       chunk=args.chunk, step_budget=args.step_budget,
                       temperature=args.temperature,
-                      decode_kernel=args.paged_kernel)
+                      decode_kernel=args.paged_kernel,
+                      prefix_cache=args.prefix_cache)
     print(f"# paged decode kernel: {eng.decode_kernel} "
-          f"chunk={eng.chunk} step budget={eng.step_budget}")
+          f"chunk={eng.chunk} step budget={eng.step_budget}"
+          + (f" prefix cache={'on' if eng.prefix_cache is not None else 'off'}"
+             if args.prefix_cache else ""))
     done = {}
     for rep in range(max(1, args.repeat)):
         before = (eng._prefill.retraces, eng._decode.retraces)

@@ -13,10 +13,11 @@ survives only as the tests' oracle).
 """
 
 from repro.serving.engine import JitCounter, PagedEngine
-from repro.serving.paged_kv import (PageAllocator, PoolLayout, ceil_pages,
-                                    gather_pages, make_pool,
-                                    modeled_decode_bytes, pool_layout,
-                                    reset_pages, scatter_prefill)
+from repro.serving.paged_kv import (COPY_NONE, PageAllocator, PoolLayout,
+                                    ceil_pages, copy_page, gather_pages,
+                                    make_pool, modeled_decode_bytes,
+                                    pool_layout, reset_pages, scatter_prefill)
+from repro.serving.prefix_cache import PrefixCache, PrefixHit
 from repro.serving.scheduler import (DONE, PREFILLING, QUEUED, REJECTED,
                                      RUNNING, FIFOScheduler, ServeRequest,
                                      summarize)
@@ -27,8 +28,8 @@ from repro.serving.state import (PagedKVState, SlotRowState, StateGeometry,
 __all__ = [
     "PagedEngine", "JitCounter", "PageAllocator", "FIFOScheduler",
     "ServeRequest", "summarize", "ceil_pages", "make_pool", "scatter_prefill",
-    "reset_pages", "gather_pages", "PoolLayout",
-    "pool_layout", "modeled_decode_bytes",
+    "reset_pages", "gather_pages", "copy_page", "COPY_NONE", "PoolLayout",
+    "pool_layout", "modeled_decode_bytes", "PrefixCache", "PrefixHit",
     "PagedKVState", "SlotRowState", "StateGeometry", "StateTree",
     "build_state_tree", "stack_is_stateable",
     "QUEUED", "PREFILLING", "RUNNING", "DONE", "REJECTED",

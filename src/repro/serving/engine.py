@@ -36,6 +36,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
+from repro.serving.paged_kv import COPY_NONE
+from repro.serving.prefix_cache import PrefixCache, PrefixHit
 from repro.serving.scheduler import (PREFILLING, RUNNING, FIFOScheduler,
                                      ServeRequest, summarize)
 from repro.serving.state import build_state_tree, stack_is_stateable
@@ -118,7 +120,8 @@ class PagedEngine:
                  page_size: int = 8, max_len: int = 64,
                  chunk: int | None = None, step_budget: int | None = None,
                  max_queue: int = 64, temperature: float = 0.0, seed: int = 0,
-                 overcommit: float = 1.0, decode_kernel: str | None = None):
+                 overcommit: float = 1.0, decode_kernel: str | None = None,
+                 prefix_cache: bool = False):
         from repro.kernels import paged_attention as _pa
         cfg = model.cfg
         if not self.supports(model):   # the one eligibility predicate
@@ -157,6 +160,22 @@ class PagedEngine:
                                       overcommit=overcommit)
         self.pools = self.state.init_device()
 
+        # --- prefix cache (DESIGN.md §12) ---------------------------------
+        # Enabled only when every layer state is cacheable (full-attention
+        # paged pools — one shared allocator group); recurrent/windowed
+        # architectures report non-cacheability through the state tree, so
+        # rwkv6/zamba2/vlm serve with a structural hit rate of 0 even when
+        # the flag is on.
+        self.prefix_cache_requested = bool(prefix_cache)
+        self.prefix_cache: PrefixCache | None = None
+        self._cache_alloc = None
+        if prefix_cache:
+            grp = self.state.cacheable_group()
+            if grp is not None:
+                self._cache_alloc = self.state.allocators[grp]
+                self.prefix_cache = PrefixCache(self._cache_alloc,
+                                                page_size=page_size)
+
         # Resolve the decode attention implementation once (``decode_kernel``
         # argument > $KRAKEN_PAGED_DECODE > auto: fused on TPU, dense-gather
         # reference elsewhere) and pin it into this engine's trace — two
@@ -174,15 +193,27 @@ class PagedEngine:
         def decode_fn(params, pools, tokens, pos, live):
             # decode_view is the protocol's per-layer hook for producing
             # what decode consumes (identity for every state kind today —
-            # the model reads pools and slot rows natively; a future
-            # speculative-decode or prefix-cache view hangs here)
+            # the model reads pools and slot rows natively; the prefix
+            # cache deliberately does NOT hang here: a cache hit is pure
+            # page-table mapping, so decode consumes shared pages through
+            # the same pools with no view transform — the seam stays free
+            # for speculative decode)
             view = self.state.decode_view(pools, pos)
             with _pa.use_paged_decode_mode(self.decode_kernel):
                 return model.decode_step(params, view, tokens, pos,
                                          lengths=live)
 
-        def reset_fn(pools, slot_ids):
-            return self.state.reset(pools, slot_ids)
+        def reset_fn(pools, slot_ids, src, dst, resume):
+            # freed-slot hygiene + the CoW content copy, one fixed-shape
+            # program: the reset runs against the *staged* table (the
+            # admitted slot's shared prefix entries sentineled, so cached
+            # pages survive), then a full-hit fork duplicates its last
+            # shared page with positions >= resume masked.  Sentinel
+            # (COPY_NONE) ids make the copy drop — cache-off admissions
+            # run the very same program, so a cache hit never adds a
+            # fourth compiled program shape.
+            pools = self.state.reset(pools, slot_ids)
+            return self.state.copy_pages(pools, src, dst, resume)
 
         # ``_prefill`` is the mixed-step program (the only one that ever
         # prefills); the names keep the stats/CLI surface stable
@@ -200,6 +231,9 @@ class PagedEngine:
         self.decode_steps = 0       # steps that advanced >= 1 decode slot
         self._issued = 0            # real tokens issued across all steps
         self._max_stall = 0         # worst decode gap observed, in steps
+        self._prefill_tok = 0       # prompt tokens actually prefilled
+        self._cached_tok = 0        # prompt tokens skipped via cache hits
+        self._cow_forks = 0         # copy-on-write page forks performed
 
     # ---------------------------------------------------------------- API
     def submit(self, prompt, max_new: int, rid: int | None = None) -> ServeRequest:
@@ -256,26 +290,74 @@ class PagedEngine:
         if any(r is not None and r.state == PREFILLING for r in self.active):
             return
         free = [i for i, a in enumerate(self.active) if a is None]
-        if not free:
+        if not free or not self.sched.queue:
             return
-        got = self.sched.admit(free[:1], self.state.can_admit)
+        # one cache lookup per admission attempt, on the queue head only —
+        # match takes no references, so a rejected admission drops it cold
+        hit: PrefixHit | None = None
+        if self.prefix_cache is not None:
+            h = self.prefix_cache.match(self.sched.queue[0].prompt)
+            hit = h if h.is_hit else None
+        got = self.sched.admit(free[:1], lambda: self._can_admit_head(hit))
         if not got:
             return
         req = got[0]
-        req.prefill_pos = 0
-        req.chunks_done = 0
+        # a cache hit admits straight to PREFILLING(k/K): the shared pages
+        # map into the slot's leading logical rows and prefill resumes at
+        # the page boundary (full hits recompute only the last token for
+        # its logits — inside a CoW-forked copy of the last shared page)
+        if self.prefix_cache is not None:
+            self.prefix_cache.record(req.prompt_len, hit)
+        req.cached_tokens = hit.resume if hit else 0
+        req.prefill_pos = req.cached_tokens
         req.n_chunks = -(-req.prompt_len // self.chunk)
+        remaining = -(-(req.prompt_len - req.prefill_pos) // self.chunk)
+        req.chunks_done = req.n_chunks - remaining
         self.active[req.slot] = req
-        self.state.admit(req.slot)
-        self._push_tables()
+        self.state.admit(req.slot, shared=hit.pages if hit else ())
+        src = dst = int(COPY_NONE)
+        resume = 0
+        if hit is not None and hit.fork_logical is not None:
+            src, dst = self._cache_alloc.cow_fork(req.slot, hit.fork_logical)
+            resume = hit.resume
+            self._cow_forks += 1
+        self._cached_tok += req.cached_tokens
         # freed-state hygiene before any new writes, one fixed-shape reset
         # (slot ids padded with -1 drop sentinels, so the program never
         # retraces): KV states invalidate the pages the slot now owns,
         # recurrent states zero the slot's row — a refilled slot never
-        # sees its predecessor.
+        # sees its predecessor.  The table pushed *for the reset* masks
+        # this slot's cache-shared entries to a sentinel so their positions
+        # survive; the CoW copy (fused into the same program, sentinel ids
+        # when no fork) then lands in the forked page's fresh slot.  The
+        # full table follows once the pools are clean.
+        self.pools = self.state.push_tables(self.pools,
+                                            private_only_slot=req.slot)
         ids = np.full((self.slots,), -1, np.int32)
         ids[0] = req.slot
-        self.pools = self._reset(self.pools, jnp.asarray(ids))
+        self.pools = self._reset(self.pools, jnp.asarray(ids),
+                                 jnp.asarray([src], jnp.int32),
+                                 jnp.asarray([dst], jnp.int32),
+                                 jnp.asarray([resume], jnp.int32))
+        self._push_tables()
+
+    def _can_admit_head(self, hit: PrefixHit | None) -> bool:
+        """Admission predicate for the queue head: physical-page accounting.
+        ``kept`` shared pages are already resident (the cache holds them),
+        so the head only needs ``pages_per_slot - kept`` fresh physical
+        pages — a logical-page count would over-reject shared-prefix
+        requests.  Eviction (refcount-aware LRU) runs first if the free
+        list is short, pinning the pages this very hit is about to map."""
+        kept = 0
+        if hit is not None:
+            kept = len(hit.pages) - (1 if hit.fork_logical is not None else 0)
+        if self.prefix_cache is not None:
+            a = self._cache_alloc
+            need = a.pages_per_slot - kept
+            if a.free_pages < need:
+                self.prefix_cache.evict(
+                    need, protect=frozenset(hit.pages if hit else ()))
+        return self.state.can_admit(shared=kept)
 
     def _mixed_step(self, dec: list[int], pf: int) -> None:
         w = self.chunk
@@ -297,11 +379,18 @@ class PagedEngine:
             self.params, self.pools, jnp.asarray(tokens),
             jnp.asarray(positions), jnp.asarray(lengths))
         self._issued += len(dec) + n
+        self._prefill_tok += n
         nxt = self._sample(last)
         req.prefill_pos += n
         req.chunks_done += 1
         finished = self._advance_decode(dec, nxt)
         if req.prefill_pos >= req.prompt_len:
+            # prefill complete: register the prompt's full page chunks
+            # under the cache chain (already-cached chunks just touch LRU,
+            # so a CoW fork's private copy never displaces the original)
+            if self.prefix_cache is not None:
+                self.prefix_cache.insert(
+                    req.prompt, self._cache_alloc.slot_pages(req.slot))
             # last chunk: its top-row logits are the first token
             req.state = RUNNING
             req.out.append(int(nxt[pf]))
@@ -376,6 +465,7 @@ class PagedEngine:
         return self.state.allocators
 
     def stats(self) -> dict:
+        cache = self.prefix_cache
         return {
             "prefill_calls": self._prefill.calls,
             "prefill_retraces": self._prefill.retraces,
@@ -389,11 +479,25 @@ class PagedEngine:
             "budget_util": self._issued / max(1, self.steps * self.step_budget),
             "max_decode_stall": self._max_stall,
             "free_pages": self.state.free_pages,
+            "prefix_cache": cache is not None,
+            "prefix_lookups": cache.lookups if cache else 0,
+            "prefix_hits": cache.hits if cache else 0,
+            "prefix_hit_rate": round(cache.hit_rate, 4) if cache else 0.0,
+            "prefill_tokens": self._prefill_tok,
+            "cached_prefill_tokens": self._cached_tok,
+            "cow_forks": self._cow_forks,
+            "cache_pages": cache.cached_pages if cache else 0,
+            "cache_evictions": cache.evictions if cache else 0,
         }
 
     def report(self) -> str:
         s = self.stats()
         m = summarize(self.sched.done + self.sched.rejected)
+        cache = ""
+        if s["prefix_cache"]:
+            cache = (f"| prefix hit rate={s['prefix_hit_rate'] * 100:.1f}% "
+                     f"({s['cached_prefill_tokens']} tok cached, "
+                     f"{s['cow_forks']} cow forks) ")
         return (f"served {m.get('done', 0)} req "
                 f"({m.get('rejected', 0)} rejected), "
                 f"{m.get('tokens', 0)} tok @ {m.get('tok_s', 0.0):.1f} tok/s "
@@ -401,5 +505,6 @@ class PagedEngine:
                 f"| prefill retraces={s['prefill_retraces']} "
                 f"decode retraces={s['decode_retraces']} "
                 f"| max decode stall={s['max_decode_stall']} steps "
+                f"{cache}"
                 f"| budget util={s['budget_util'] * 100:.1f}% "
                 f"(chunk={s['chunk']}, budget={s['step_budget']})")

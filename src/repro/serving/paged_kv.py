@@ -110,6 +110,20 @@ class PageAllocator:
     the FIFO engine trades fragmentation-free simplicity for vLLM's
     grow-on-demand).  Unallocated table rows hold the out-of-bounds sentinel
     ``n_pages`` so device scatters drop and gathers clamp.
+
+    Pages are **refcounted** so the prefix cache can share physical pages
+    across requests (DESIGN.md §12): a slot admitted against a cached
+    prefix passes ``shared=`` — those pages fill the leading logical
+    indices of its table row and take an extra reference instead of a
+    fresh claim, so admission only needs ``pages_per_slot - len(shared)``
+    free pages (physical accounting: shared pages are never double-
+    charged).  :meth:`incref`/:meth:`decref` are the cache's own holds —
+    a page returns to the free list exactly when its refcount reaches 0,
+    so a shared page is never reclaimed while anything (slot row or cache
+    entry) still maps it.  :meth:`cow_fork` is the copy-on-write seam: it
+    swaps one shared table entry for a fresh private page (moving exactly
+    one reference off the shared page); the device-side content copy is
+    :func:`copy_page`.
     """
 
     def __init__(self, *, n_pages: int, pages_per_slot: int, n_slots: int):
@@ -120,37 +134,137 @@ class PageAllocator:
         self.n_slots = n_slots
         self._free: list[int] = list(range(n_pages))
         self._owned: dict[int, list[int]] = {}
+        self._shared: dict[int, set[int]] = {}   # slot -> shared page ids
+        self.refcount = np.zeros((n_pages,), np.int32)
         self.table = np.full((n_slots, pages_per_slot), n_pages, np.int32)
 
     @property
     def free_pages(self) -> int:
         return len(self._free)
 
-    def can_alloc(self) -> bool:
-        return len(self._free) >= self.pages_per_slot
+    @property
+    def referenced_pages(self) -> int:
+        return int((self.refcount > 0).sum())
 
-    def alloc(self, slot: int) -> list[int]:
+    def can_alloc(self, *, shared: int = 0) -> bool:
+        """Whether a slot claim fits, given ``shared`` of its pages come
+        from the prefix cache (free of charge)."""
+        return len(self._free) >= max(0, self.pages_per_slot - shared)
+
+    def alloc(self, slot: int, shared=()) -> list[int]:
         """Claim pages for ``slot``; raises if the slot is live or the pool
-        is exhausted (callers gate on :meth:`can_alloc` for admission)."""
+        is exhausted (callers gate on :meth:`can_alloc` for admission).
+        ``shared`` pages (a cached prefix, in logical order) occupy the
+        leading table-row indices and are increffed rather than claimed."""
+        shared = list(shared)
         if slot in self._owned:
             raise ValueError(f"slot {slot} already holds pages")
-        if not self.can_alloc():
+        if not self.can_alloc(shared=len(shared)):
             raise RuntimeError("page pool exhausted")
-        pages = [self._free.pop() for _ in range(self.pages_per_slot)]
+        for p in shared:
+            if self.refcount[p] <= 0:
+                raise ValueError(f"shared page {p} is not live")
+            self.refcount[p] += 1
+        fresh = [self._free.pop()
+                 for _ in range(self.pages_per_slot - len(shared))]
+        for p in fresh:
+            self.refcount[p] = 1
+        pages = shared + fresh
         self._owned[slot] = pages
+        self._shared[slot] = set(shared)
         self.table[slot] = pages
         return pages
 
     def free(self, slot: int) -> list[int]:
-        """Release ``slot``'s pages back to the free list (no-op for a slot
-        that holds none); returns the freed page ids."""
+        """Drop ``slot``'s references (no-op for a slot that holds none);
+        returns the pages that actually went back to the free list —
+        shared pages still referenced (by the prefix cache or another
+        slot) stay out."""
         pages = self._owned.pop(slot, [])
-        self._free.extend(pages)
+        self._shared.pop(slot, None)
+        freed = [p for p in pages if self.decref(p) == 0]
         self.table[slot] = self.n_pages
-        return pages
+        return freed
+
+    def incref(self, page: int) -> int:
+        if page < 0 or page >= self.n_pages:
+            raise ValueError(f"page {page} out of range")
+        self.refcount[page] += 1
+        return int(self.refcount[page])
+
+    def decref(self, page: int) -> int:
+        """Drop one reference; a page reaching refcount 0 returns to the
+        free list.  Never drives a count negative."""
+        if self.refcount[page] <= 0:
+            raise ValueError(f"decref of free page {page}")
+        self.refcount[page] -= 1
+        rc = int(self.refcount[page])
+        if rc == 0:
+            self._free.append(page)
+        return rc
+
+    def cow_fork(self, slot: int, logical_idx: int) -> tuple[int, int]:
+        """Copy-on-write fork: replace the shared page at ``logical_idx``
+        of ``slot``'s row with a fresh private page, moving exactly one
+        reference off the shared original.  Returns ``(src, dst)`` for the
+        device-side content copy (:func:`copy_page`).  The caller must
+        have reserved the fresh page at admission (``can_alloc``)."""
+        row = self._owned[slot]
+        src = row[logical_idx]
+        if src not in self._shared.get(slot, ()):
+            raise ValueError(f"page {src} at logical {logical_idx} of slot "
+                             f"{slot} is not shared — nothing to fork")
+        if not self._free:
+            raise RuntimeError("page pool exhausted at CoW fork")
+        dst = self._free.pop()
+        self.refcount[dst] = 1
+        self.decref(src)        # the slot's share moves to the fork
+        row[logical_idx] = dst
+        self._shared[slot].discard(src)
+        self.table[slot, logical_idx] = dst
+        return src, dst
+
+    def slot_pages(self, slot: int) -> list[int]:
+        """The slot's current table row (logical order), [] when not live."""
+        return list(self._owned.get(slot, ()))
+
+    def shared_pages(self, slot: int) -> set[int]:
+        return set(self._shared.get(slot, ()))
+
+    def device_table(self, private_only_slot: int | None = None) -> np.ndarray:
+        """The table to push to device.  With ``private_only_slot`` set,
+        that slot's *shared* entries are masked to the sentinel — the
+        staged view the admission reset program runs against, so freed-
+        slot hygiene never invalidates pages the prefix cache (or another
+        request) still maps."""
+        if private_only_slot is None:
+            return self.table
+        t = self.table.copy()
+        shared = self._shared.get(private_only_slot, ())
+        if shared:
+            row = t[private_only_slot]
+            t[private_only_slot] = np.where(
+                np.isin(row, list(shared)), self.n_pages, row)
+        return t
 
     def table_array(self) -> jnp.ndarray:
         return jnp.asarray(self.table)
+
+    def check(self) -> None:
+        """Assert the allocator's accounting invariants (the property
+        suite's oracle): refcounts never negative, the free list holds
+        exactly the unreferenced pages, and free == pool size − live
+        logical mappings + shared savings (i.e. − distinct referenced)."""
+        assert (self.refcount >= 0).all(), "negative refcount"
+        free = set(self._free)
+        assert len(free) == len(self._free), "free-list duplicate"
+        ref = {p for p in range(self.n_pages) if self.refcount[p] > 0}
+        assert free.isdisjoint(ref), "referenced page on the free list"
+        assert len(free) + len(ref) == self.n_pages, "page leak"
+        for slot, pages in self._owned.items():
+            assert len(pages) == self.pages_per_slot
+            assert all(self.refcount[p] > 0 for p in pages)
+            assert (self.table[slot] == pages).all()
 
 
 # ---------------------------------------------------------------------------
@@ -223,6 +337,44 @@ def reset_pages(pool: PagedKVCache, page_ids: jax.Array) -> PagedKVCache:
     return dataclasses.replace(
         pool, pos=pool.pos.at[page_ids.astype(jnp.int32)].set(
             POS_EMPTY, mode="drop"))
+
+
+#: out-of-range page id for :func:`copy_page` — larger than any pool, so a
+#: sentinel (src, dst) pair is a no-op in *every* pool group's program
+COPY_NONE = np.int32(2 ** 30)
+
+
+def copy_page(pool: PagedKVCache, src: jax.Array, dst: jax.Array,
+              resume: jax.Array) -> PagedKVCache:
+    """Copy-on-write content copy: duplicate physical page ``src`` into
+    ``dst`` (k/v/scales and positions), masking positions ``>= resume`` to
+    empty — the divergence point.  The forked page then serves the shared
+    prefix tokens it retains while the forking request's in-chunk append
+    (``scatter_prefill(starts=)``) rewrites the divergent tail into its
+    private copy, so divergent suffixes never read each other's pages.
+
+    ``src``/``dst``/``resume`` are shape-[1] int32 (jit-stable: the
+    admission reset program always takes them); ``COPY_NONE`` ids make the
+    whole copy drop, so cache-off admissions run the very same program.
+    """
+    n_pages = pool.k.shape[0]
+    src = src.astype(jnp.int32)
+    dst = dst.astype(jnp.int32)
+    s = jnp.clip(src, 0, n_pages - 1)       # clamp for the gather; the
+    d = jnp.where(src < n_pages, dst, COPY_NONE)  # set drops on sentinel
+    prow = pool.pos[s]                                      # [1, ps]
+    prow = jnp.where(prow < resume[:, None], prow, POS_EMPTY)
+    ksc, vsc = pool.k_scale, pool.v_scale
+    if pool.quantized:
+        ksc = pool.k_scale.at[d].set(pool.k_scale[s], mode="drop")
+        vsc = pool.v_scale.at[d].set(pool.v_scale[s], mode="drop")
+    return PagedKVCache(
+        k=pool.k.at[d].set(pool.k[s], mode="drop"),
+        v=pool.v.at[d].set(pool.v[s], mode="drop"),
+        pos=pool.pos.at[d].set(prow, mode="drop"),
+        page_table=pool.page_table,
+        k_scale=ksc, v_scale=vsc,
+    )
 
 
 def gather_pages(pool: PagedKVCache) -> tuple[jax.Array, jax.Array, jax.Array]:

@@ -41,6 +41,9 @@ class ServeRequest:
     prefill_pos: int = 0              # prompt tokens already chunked in
     chunks_done: int = 0
     n_chunks: int = 0                 # total planned (the K of "k/K")
+    cached_tokens: int = 0            # prompt tokens served by the prefix
+    #                                   cache (admitted at k > 0: prefill
+    #                                   resumes past the cached prefix)
     # metrics (host wall-clock seconds)
     t_submit: float = 0.0
     t_admit: float = 0.0
@@ -97,10 +100,16 @@ class FIFOScheduler:
               state: str = PREFILLING) -> list[ServeRequest]:
         """FIFO-admit queued requests into ``free_slots`` while
         ``can_alloc()`` grants pages.  Strict FIFO: the head blocking on
-        pages blocks everything behind it (no head-of-line bypass).
-        Admitted requests enter ``state`` (PREFILLING under the chunked
-        engine — pages are claimed at the first chunk; RUNNING only once
-        the last chunk yields the first token)."""
+        pages blocks everything behind it (no head-of-line bypass) — which
+        also guarantees a prefix-cache hit matched against the queue head
+        applies to exactly the request admitted.  ``can_alloc`` must count
+        *physical* pages: with prefix caching, a shared-prefix request
+        needs only its non-cached remainder, so logical-page accounting
+        would over-reject (``StateTree.can_admit(shared=...)`` is that
+        predicate).  Admitted requests enter ``state`` (PREFILLING under
+        the chunked engine — pages are claimed at the first chunk, cached
+        prefixes admit at chunk k > 0; RUNNING only once the last chunk
+        yields the first token)."""
         admitted = []
         for slot in free_slots:
             if not self.queue or not can_alloc():

@@ -54,8 +54,8 @@ import jax.numpy as jnp
 
 from repro.models import transformer as T
 from repro.models.layers import PagedKVCache
-from repro.serving.paged_kv import (PageAllocator, ceil_pages, make_pool,
-                                    reset_pages, scatter_prefill)
+from repro.serving.paged_kv import (PageAllocator, ceil_pages, copy_page,
+                                    make_pool, reset_pages, scatter_prefill)
 
 import numpy as np
 
@@ -101,15 +101,22 @@ class PagedKVState:
         self.ring_len = ring_len
         self.window = window
 
-    # ---- host admission ----------------------------------------------------
-    def can_alloc(self) -> bool:
-        return self.alloc_.can_alloc()
+    @property
+    def cacheable(self) -> bool:
+        """Whether this layer's pages may enter the prefix cache: full
+        attention only — a windowed pool's ring wraps inside a long
+        prompt, so a shared page could be overwritten by its reader."""
+        return self.window == 0
 
-    def alloc(self, slot: int) -> None:
+    # ---- host admission ----------------------------------------------------
+    def can_alloc(self, *, shared: int = 0) -> bool:
+        return self.alloc_.can_alloc(shared=shared)
+
+    def alloc(self, slot: int, shared=()) -> None:
         if self.alloc_.table[slot][0] == self.alloc_.n_pages:
             # shared allocator: the first layer of the ring group claims,
             # the rest observe the claim through the shared table
-            self.alloc_.alloc(slot)
+            self.alloc_.alloc(slot, shared=shared)
 
     def free(self, slot: int) -> None:
         self.alloc_.free(slot)
@@ -138,11 +145,19 @@ class PagedKVState:
         rows = jnp.where((slot_ids >= 0)[:, None], rows, leaf.n_pages)
         return reset_pages(leaf, rows.reshape(-1))
 
-    def push_table(self, leaf: PagedKVCache) -> PagedKVCache:
+    def copy_page(self, leaf: PagedKVCache, src, dst, resume) -> PagedKVCache:
+        return copy_page(leaf, src, dst, resume)
+
+    def push_table(self, leaf: PagedKVCache,
+                   private_only_slot: int | None = None) -> PagedKVCache:
         # a fresh copy per push: the pools tree is donated into the jitted
-        # programs, and donation rejects aliased buffers
+        # programs, and donation rejects aliased buffers.
+        # ``private_only_slot`` stages that slot's row with its shared
+        # (prefix-cache) entries sentineled, so the admission reset never
+        # invalidates pages other requests or the cache still map.
         return dataclasses.replace(
-            leaf, page_table=jnp.array(self.alloc_.table))
+            leaf, page_table=jnp.array(
+                self.alloc_.device_table(private_only_slot)))
 
     def geometry(self) -> StateGeometry:
         return StateGeometry(
@@ -167,16 +182,21 @@ class SlotRowState:
 
     kind = "slot_rows"
 
+    #: recurrent/frozen rows are whole-state per slot — there is no
+    #: per-chunk page identity to share, so they are never prefix-cacheable
+    #: (rwkv6/zamba2/vlm structurally report hit rate 0)
+    cacheable = False
+
     def __init__(self, cfg, slot: T.Slot, *, n_slots: int):
         self.cfg = cfg
         self.slot = slot
         self.n_slots = n_slots
 
     # ---- host admission (no per-layer capacity to claim) --------------------
-    def can_alloc(self) -> bool:
+    def can_alloc(self, *, shared: int = 0) -> bool:
         return True
 
-    def alloc(self, slot: int) -> None:
+    def alloc(self, slot: int, shared=()) -> None:
         pass
 
     def free(self, slot: int) -> None:
@@ -207,7 +227,10 @@ class SlotRowState:
             lambda a: a.at[idx].set(jnp.zeros((), a.dtype), mode="drop"),
             leaf)
 
-    def push_table(self, leaf):
+    def copy_page(self, leaf, src, dst, resume):
+        return leaf   # no page identity: CoW is a paged-pool concern
+
+    def push_table(self, leaf, private_only_slot: int | None = None):
         return leaf
 
     def geometry(self) -> StateGeometry:
@@ -277,16 +300,31 @@ class StateTree:
     def reset(self, pools, slot_ids):
         return self.map_device(lambda st, pl: st.reset(pl, slot_ids), pools)
 
-    def push_tables(self, pools):
-        return self.map_device(lambda st, pl: st.push_table(pl), pools)
+    def copy_pages(self, pools, src, dst, resume):
+        """CoW content copy across every paged leaf (identity for slot
+        rows).  Real (src, dst) ids only ever arrive for cacheable models,
+        whose paged leaves all share one pool geometry — sentinel ids
+        (``COPY_NONE``) drop in every pool, so the cache-off admission
+        runs the same program."""
+        return self.map_device(
+            lambda st, pl: st.copy_page(pl, src, dst, resume), pools)
+
+    def push_tables(self, pools, private_only_slot: int | None = None):
+        return self.map_device(
+            lambda st, pl: st.push_table(
+                pl, private_only_slot=private_only_slot), pools)
 
     # ---- admission: every layer's capacity vote, through the protocol -------
-    def can_admit(self) -> bool:
-        return all(st.can_alloc() for st in self.leaves())
+    def can_admit(self, *, shared: int = 0) -> bool:
+        """Physical-page accounting: ``shared`` pages of the (cacheable)
+        pool group arrive from the prefix cache free of charge, so a
+        request with a cached prefix only needs the remainder — a shared
+        page is never double-charged against admission."""
+        return all(st.can_alloc(shared=shared) for st in self.leaves())
 
-    def admit(self, slot: int) -> None:
+    def admit(self, slot: int, shared=()) -> None:
         for st in self.leaves():
-            st.alloc(slot)
+            st.alloc(slot, shared=shared)
 
     def release(self, slot: int) -> None:
         for st in self.leaves():
@@ -295,6 +333,21 @@ class StateTree:
     @property
     def free_pages(self) -> dict[int, int]:
         return {g: a.free_pages for g, a in self.allocators.items()}
+
+    # ---- prefix-cache eligibility -------------------------------------------
+    def cacheable_group(self) -> int | None:
+        """The pool-group key (pages_per_slot) the prefix cache may serve,
+        or None when this model cannot cache prefixes: every layer state
+        must be a full-attention paged pool (recurrent ``SlotRowState``
+        rows and windowed rings correctly report non-cacheability), which
+        also collapses the groups to exactly one — so one cache over one
+        allocator covers every layer."""
+        groups = set()
+        for st in self.leaves():
+            if not getattr(st, "cacheable", False):
+                return None
+            groups.add(st.alloc_.pages_per_slot)
+        return groups.pop() if len(groups) == 1 else None
 
     # ---- geometry ------------------------------------------------------------
     def paged_geoms(self) -> list[tuple[int, int, int, int]]:

@@ -132,6 +132,52 @@ def test_long_prompt_never_stalls_decode(arch):
     assert 0.0 < s["budget_util"] <= 1.0
 
 
+@settings(max_examples=4, deadline=None, derandomize=True)
+@given(chunk=st.integers(min_value=1, max_value=13))
+def test_chunked_equals_whole_prefill_with_prefix_cache(chunk):
+    """PR 5 guard rails survive caching: any chunk width with
+    --prefix-cache on stays token-identical to whole-prompt prefill (cold
+    *and* warm — a second identical workload hits the cache, resumes
+    prefill mid-prompt, and must emit the same tokens), and a cache hit
+    adds no fourth compiled program: the same one mixed-step shape, one
+    decode shape, and one reset(+CoW) shape serve both passes with zero
+    warm retraces."""
+    cfg, model, params = setup_arch("yi-6b")
+    max_new = 5
+    ref = whole_prefill_reference("yi-6b", max_new)
+    prompts = prompts_for(cfg)
+    # overcommit > 1 provisions pool slack beyond the concurrent slot
+    # claims — without it the refcount-aware LRU (correctly) evicts every
+    # cached page to admit the next request, and nothing survives to hit
+    eng = PagedEngine(model, params, page_size=4, max_len=32, slots=2,
+                      chunk=chunk, prefix_cache=True, overcommit=1.5)
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new, rid=i)
+    done = eng.run_until_idle()
+    for i in ref:
+        assert done[i] == ref[i], ("cold", chunk, i, done[i], ref[i])
+
+    before = (eng._prefill.retraces, eng._decode.retraces,
+              eng._reset.retraces)
+    for i, p in enumerate(prompts):        # warm: cache hits, k>0 admission
+        eng.submit(p, max_new, rid=10 + i)
+    done = eng.run_until_idle()
+    for i in ref:
+        assert done[10 + i] == ref[i], ("warm", chunk, i, done[10 + i],
+                                        ref[i])
+    s = eng.stats()
+    assert (eng._prefill.retraces, eng._decode.retraces,
+            eng._reset.retraces) == before          # zero warm retraces
+    assert eng._reset.retraces == 1                 # no fourth program
+    assert s["prefill_retraces"] <= 1 and s["decode_retraces"] <= 1
+    assert s["max_decode_stall"] == 0
+    assert s["prefix_hit_rate"] > 0, s              # the warm pass did hit
+    assert s["cached_prefill_tokens"] > 0
+    # drained: every page is free or held by the cache, nothing leaked
+    alloc = eng._cache_alloc
+    assert alloc.free_pages == alloc.n_pages - eng.prefix_cache.cached_pages
+
+
 def test_engine_knob_validation():
     """chunk/step_budget misconfigurations fail loudly at construction:
     chunk=0 is an error (not silently coerced to the whole-prompt

@@ -1,0 +1,364 @@
+"""Prefix-cache lockdown (DESIGN.md §12).
+
+Four property families pin the copy-on-write page-sharing design:
+
+* **Refcount/CoW properties** — random submit/fork/finish/evict sequences
+  against the allocator + cache oracles (``PageAllocator.check`` /
+  ``PrefixCache.check``): refcounts never go negative, a shared page is
+  never reclaimed while anything references it, every CoW fork moves
+  exactly one share, and the free list always equals pool size − distinct
+  referenced pages (physical accounting — shared savings included).
+  Property-swept with hypothesis (conftest stub on a bare interpreter).
+* **Fork isolation** — at the device level, a forked page diverges from
+  its source at the resume position and the source page's bytes and
+  positions are bit-identical before/after the fork *and* after the
+  forking request's in-chunk append lands (divergent suffixes never read
+  each other's pages).
+* **Serving equivalence** — a shared-prefix batch served with the cache
+  on (cold pass, then a warm pass over the same prompts: partial + full
+  hits, CoW forks) is token-identical to cache-off serving for yi-6b
+  under both decode attention implementations; recurrent/windowed
+  architectures structurally report hit rate 0 (``cacheable_group`` is
+  None — RWKV/Mamba rows have no per-chunk page identity, ring wrap would
+  overwrite a shared page).
+* **Physical-page admission** — a request whose prefix is cached admits
+  when only its non-cached remainder fits the free list (logical-page
+  accounting would over-reject), with no eviction needed.
+"""
+
+import dataclasses
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_arch, smoke_config
+from repro.models.layers import POS_EMPTY, KVCache
+from repro.models.model import Model
+from repro.serving import (PageAllocator, PagedEngine, PrefixCache,
+                           build_state_tree, copy_page, make_pool,
+                           scatter_prefill)
+
+_SETUP: dict = {}
+
+
+def setup_arch(arch):
+    if arch not in _SETUP:
+        cfg = dataclasses.replace(smoke_config(get_arch(arch)),
+                                  dtype="float32", capacity_factor=64.0)
+        model = Model(cfg)
+        params = model.init(jax.random.key(0))
+        _SETUP[arch] = (cfg, model, params)
+    return _SETUP[arch]
+
+
+# ---------------------------------------------------------------------------
+# Refcount/CoW property sweep (host-side, no device work)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 999), pps=st.integers(2, 4),
+       page_size=st.integers(2, 4), spare=st.integers(0, 5))
+def test_refcount_cow_invariants_under_random_workload(seed, pps, page_size,
+                                                       spare):
+    """Random submit(match + alloc + maybe fork)/finish(insert + free)/
+    evict sequences, checked against both structural oracles after every
+    operation.  Prompts share prefixes by construction (one base prompt,
+    randomly truncated/diverged), so real hits, partial hits, full hits
+    (CoW forks), and evictions all occur across the sweep."""
+    rng = np.random.default_rng(seed)
+    n_slots = 3
+    # sometimes strictly fewer pages than slots * pps: admission pressure
+    alloc = PageAllocator(n_pages=(n_slots - 1) * pps + 1 + spare,
+                          pages_per_slot=pps, n_slots=n_slots)
+    cache = PrefixCache(alloc, page_size=page_size)
+    base = rng.integers(0, 4, size=(pps * page_size,)).astype(np.int32)
+    live: dict[int, np.ndarray] = {}
+
+    for _ in range(60):
+        op = rng.choice(["submit", "submit", "finish", "evict"])
+        if op == "submit":
+            free_slots = [s for s in range(n_slots) if s not in live]
+            if not free_slots:
+                continue
+            slot = free_slots[0]
+            plen = int(rng.integers(1, pps * page_size + 1))
+            prompt = base[:plen].copy()
+            if rng.random() < 0.5:          # divergent suffix
+                cut = int(rng.integers(0, plen))
+                prompt[cut:] = rng.integers(4, 8, size=plen - cut)
+            hit = cache.match(prompt)
+            kept = len(hit.pages) - (1 if hit.fork_logical is not None else 0)
+            if alloc.free_pages < pps - kept:
+                cache.evict(pps - kept, protect=frozenset(hit.pages))
+            if not alloc.can_alloc(shared=kept):
+                continue                    # admission defers, hit dropped
+            alloc.alloc(slot, shared=hit.pages)
+            if hit.fork_logical is not None:
+                rc = alloc.refcount.copy()
+                src, dst = alloc.cow_fork(slot, hit.fork_logical)
+                # the fork moves exactly one share: src loses the slot's
+                # reference (back to its pre-alloc count), dst is private
+                assert alloc.refcount[src] == rc[src] - 1
+                assert alloc.refcount[dst] == 1
+                assert alloc.refcount[src] >= 1     # the cache still holds it
+            cache.record(plen, hit)
+            live[slot] = prompt
+        elif op == "finish" and live:
+            slot = int(rng.choice(list(live)))
+            cache.insert(live.pop(slot), alloc.slot_pages(slot))
+            alloc.free(slot)
+        elif op == "evict":
+            cache.evict(alloc.free_pages + int(rng.integers(1, 4)))
+        alloc.check()
+        cache.check()
+        # physical accounting: free == pool − distinct referenced pages
+        # (a page shared by k slots + the cache counts once — the savings)
+        assert alloc.free_pages == alloc.n_pages - alloc.referenced_pages
+
+    # drain: finish everything, evict the whole cache -> every page home
+    for slot in list(live):
+        cache.insert(live.pop(slot), alloc.slot_pages(slot))
+        alloc.free(slot)
+    cache.evict(alloc.n_pages)
+    assert cache.cached_pages == 0
+    assert alloc.free_pages == alloc.n_pages
+    assert 0.0 <= cache.hit_rate <= 1.0
+
+
+def test_shared_page_never_reclaimed_and_decref_guards():
+    """Directed refcount edges: freeing a slot whose pages the cache holds
+    returns nothing to the free list; decref below zero raises; eviction
+    skips pages a live slot still maps."""
+    alloc = PageAllocator(n_pages=4, pages_per_slot=2, n_slots=2)
+    cache = PrefixCache(alloc, page_size=2)
+    prompt = np.asarray([1, 2, 3, 4], np.int32)
+    pages = alloc.alloc(0)
+    cache.insert(prompt, pages)
+    assert alloc.free(0) == []              # cache still references them
+    assert alloc.free_pages == 2
+    with pytest.raises(ValueError):
+        alloc.decref(alloc._free[0])        # decref of a free page
+    # a second slot maps the cached pages: eviction must skip them
+    hit = cache.match(prompt)
+    assert hit.fork_logical == 1            # full aligned hit
+    alloc.alloc(1, shared=hit.pages)
+    evicted = cache.evict(alloc.n_pages)    # demand more than possible
+    assert evicted == 0                     # refcount > 1 everywhere
+    alloc.free(1)
+    assert cache.evict(alloc.n_pages) == 2  # leaf first, then its parent
+    assert alloc.free_pages == alloc.n_pages
+
+
+# ---------------------------------------------------------------------------
+# CoW fork isolation at the device level
+# ---------------------------------------------------------------------------
+
+def test_cow_fork_isolates_divergent_suffixes():
+    """Fork a shared page and land the forking request's in-chunk append:
+    the source page's k/v bytes and positions are untouched throughout,
+    the fork carries the shared positions below the resume point, masks
+    the rest, and takes the divergent write privately."""
+    cfg = SimpleNamespace(num_kv_heads=2, head_dim=4)
+    ps, pps, n_slots = 4, 2, 2
+    alloc = PageAllocator(n_pages=5, pages_per_slot=pps, n_slots=n_slots)
+    rng = np.random.default_rng(7)
+
+    pages_a = alloc.alloc(0)
+    pool = make_pool(cfg, n_pages=alloc.n_pages, page_size=ps, max_pages=pps,
+                     n_slots=n_slots, dtype=jnp.float32)
+    pool = dataclasses.replace(pool, page_table=jnp.asarray(alloc.table))
+    dense = KVCache(
+        k=jnp.asarray(rng.normal(size=(1, 2, 8, 4)), jnp.float32),
+        v=jnp.asarray(rng.normal(size=(1, 2, 8, 4)), jnp.float32),
+        pos=jnp.arange(8, dtype=jnp.int32))
+    pool = scatter_prefill(pool, dense, jnp.asarray([0]), jnp.asarray([8]))
+
+    # the cache takes its holds; the writer leaves; a full hit forks
+    for p in pages_a:
+        alloc.incref(p)
+    alloc.free(0)
+    alloc.alloc(1, shared=pages_a)
+    src, dst = alloc.cow_fork(1, 1)         # last shared page, resume at 7
+    pool = dataclasses.replace(pool, page_table=jnp.asarray(alloc.table))
+    before_k = np.asarray(pool.k[src]).copy()
+    before_pos = np.asarray(pool.pos[src]).copy()
+
+    pool = copy_page(pool, jnp.asarray([src], jnp.int32),
+                     jnp.asarray([dst], jnp.int32),
+                     jnp.asarray([7], jnp.int32))
+    # fork content: shared positions 4..6 copied, position 7 masked
+    np.testing.assert_array_equal(np.asarray(pool.pos[dst]),
+                                  [4, 5, 6, POS_EMPTY])
+    np.testing.assert_array_equal(np.asarray(pool.k[dst, :, :3]),
+                                  before_k[:, :3])
+
+    # the divergent append (position 7, new content) lands in the fork
+    div = KVCache(
+        k=jnp.asarray(rng.normal(size=(1, 2, 1, 4)), jnp.float32),
+        v=jnp.asarray(rng.normal(size=(1, 2, 1, 4)), jnp.float32),
+        pos=jnp.zeros((1, 1), jnp.int32))
+    pool = scatter_prefill(pool, div, jnp.asarray([1]), jnp.asarray([1]),
+                           starts=jnp.asarray([7]))
+    np.testing.assert_array_equal(np.asarray(pool.k[src]), before_k)
+    np.testing.assert_array_equal(np.asarray(pool.pos[src]), before_pos)
+    assert int(pool.pos[dst, 3]) == 7
+    np.testing.assert_array_equal(np.asarray(pool.k[dst, :, 3]),
+                                  np.asarray(div.k[0, :, 0]))
+    alloc.check()
+
+
+def test_copy_page_sentinel_is_noop():
+    """COPY_NONE ids make the fused reset+copy program a pure reset — the
+    cache-off admission path must leave every byte alone."""
+    from repro.serving import COPY_NONE
+    cfg = SimpleNamespace(num_kv_heads=2, head_dim=4)
+    pool = make_pool(cfg, n_pages=4, page_size=2, max_pages=2, n_slots=2,
+                     dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+    pool = dataclasses.replace(
+        pool, k=jnp.asarray(rng.normal(size=pool.k.shape), jnp.float32))
+    out = copy_page(pool, jnp.asarray([COPY_NONE]), jnp.asarray([COPY_NONE]),
+                    jnp.asarray([0], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(out.k), np.asarray(pool.k))
+    np.testing.assert_array_equal(np.asarray(out.pos), np.asarray(pool.pos))
+
+
+# ---------------------------------------------------------------------------
+# Cacheability is structural
+# ---------------------------------------------------------------------------
+
+def test_cacheable_group_structure():
+    """Full-attention paged stacks cache; recurrent rows (RWKV/Mamba),
+    frozen cross-KV, and windowed rings opt out through the state tree."""
+    expect = {"yi-6b": True, "mixtral-8x22b": False, "rwkv6-3b": False,
+              "zamba2-1.2b": False, "llama-3.2-vision-11b": False}
+    for arch, cacheable in expect.items():
+        model = Model(smoke_config(get_arch(arch)))
+        tree = build_state_tree(model, slots=2, page_size=4, max_len=32)
+        grp = tree.cacheable_group()
+        assert (grp is not None) == cacheable, (arch, grp)
+
+
+@pytest.mark.parametrize("arch", ["rwkv6-3b", "zamba2-1.2b"])
+def test_recurrent_archs_hit_rate_zero(arch):
+    """--prefix-cache on a recurrent architecture builds no cache (the
+    state tree reports non-cacheability) and serves identical repeated
+    prompts with a structural hit rate of 0 — never a false hit."""
+    cfg, model, params = setup_arch(arch)
+    eng = PagedEngine(model, params, slots=2, page_size=4, max_len=32,
+                      prefix_cache=True)
+    assert eng.prefix_cache_requested and eng.prefix_cache is None
+    rng = np.random.default_rng(2)
+    p = rng.integers(0, cfg.vocab_size, (8,)).astype(np.int32)
+    for rid in range(3):                    # identical prompts: bait
+        eng.submit(p, 3, rid=rid)
+    done = eng.run_until_idle()
+    s = eng.stats()
+    assert s["prefix_hit_rate"] == 0.0 and s["prefix_lookups"] == 0
+    assert s["cached_prefill_tokens"] == 0 and s["cow_forks"] == 0
+    assert done[0] == done[1] == done[2]    # same prompt, greedy
+
+
+# ---------------------------------------------------------------------------
+# Serving equivalence: cache-on == cache-off, token for token
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kernel", ["reference", "interpret"])
+def test_cached_serving_token_identical(kernel):
+    """A shared-prefix batch (one 8-token prefix, divergent suffixes —
+    one suffix making the total page-aligned, so the warm pass takes a
+    genuine full hit + CoW fork) served twice through a cache-on engine is
+    token-identical to cache-off serving, under both the dense-gather
+    reference and the fused (interpret) decode kernel.  Concurrent
+    divergent suffixes share prefix pages while decoding — identity proves
+    they never read each other's forked pages."""
+    cfg, model, params = setup_arch("yi-6b")
+    rng = np.random.default_rng(17)
+    shared = rng.integers(0, cfg.vocab_size, (8,)).astype(np.int32)
+    prompts = [np.concatenate([shared, rng.integers(
+        0, cfg.vocab_size, (l,)).astype(np.int32)]) for l in (3, 5, 4, 6)]
+    max_new = 4
+
+    def serve(prefix_cache):
+        eng = PagedEngine(model, params, slots=2, page_size=4, max_len=32,
+                          decode_kernel=kernel, prefix_cache=prefix_cache)
+        out = {}
+        for rep in range(2):                # pass 2 hits pass 1's chains
+            for i, p in enumerate(prompts):
+                eng.submit(p, max_new, rid=rep * 10 + i)
+            out.update(eng.run_until_idle())
+        return out, eng
+
+    ref, _ = serve(False)
+    got, eng = serve(True)
+    for rid in ref:
+        assert got[rid] == ref[rid], (kernel, rid, got[rid], ref[rid])
+    s = eng.stats()
+    assert s["prefix_hit_rate"] > 0, s
+    assert s["cached_prefill_tokens"] > 0
+    assert s["cow_forks"] >= 1, s           # the len-12 prompt full-hits
+    assert s["max_decode_stall"] == 0
+    # warm identical serving re-prefilled strictly less than cold
+    assert s["prefill_tokens"] < sum(len(p) for p in prompts) * 2
+    # drained engine: only the cache's own holds remain
+    alloc = eng._cache_alloc
+    assert alloc.free_pages == alloc.n_pages - eng.prefix_cache.cached_pages
+    alloc.check()
+    eng.prefix_cache.check()
+
+
+# ---------------------------------------------------------------------------
+# Admission accounts physical pages
+# ---------------------------------------------------------------------------
+
+def test_can_alloc_counts_physical_pages():
+    alloc = PageAllocator(n_pages=3, pages_per_slot=3, n_slots=2)
+    pages = alloc.alloc(0)
+    for p in pages[:2]:
+        alloc.incref(p)                     # cache holds two of them
+    alloc.free(0)
+    assert alloc.free_pages == 1
+    assert not alloc.can_alloc()            # logical accounting: rejected
+    assert alloc.can_alloc(shared=2)        # physical: 1 fresh page needed
+    alloc.alloc(1, shared=pages[:2])
+    assert alloc.free_pages == 0
+    alloc.check()
+
+
+def test_shared_prefix_request_admits_under_page_pressure():
+    """Engine-level admission fix: pool of 5 pages, rows of 4.  After the
+    first request's pages enter the cache (free = 3), a repeat of the same
+    prompt needs 4 logical pages but only 3 fresh physical ones (1 kept
+    shared, 1 CoW fork, 2 private) — physical accounting admits it with
+    zero evictions, and the served tokens match the cold run exactly."""
+    cfg, model, params = setup_arch("yi-6b")
+
+    def engine():
+        return PagedEngine(model, params, slots=2, page_size=4, max_len=16,
+                           overcommit=0.625, prefix_cache=True)
+
+    eng = engine()
+    assert eng._cache_alloc.n_pages == 5    # the pressure geometry
+    rng = np.random.default_rng(23)
+    p = rng.integers(0, cfg.vocab_size, (8,)).astype(np.int32)
+    a = eng.submit(p, 2, rid=0)
+    done_a = eng.run_until_idle()
+    assert eng.prefix_cache.cached_pages == 2
+    assert eng._cache_alloc.free_pages == 3
+
+    b = eng.submit(p, 2, rid=1)             # full hit under pressure
+    done_b = eng.run_until_idle()
+    assert b.cached_tokens == 7             # resumed at the last token
+    assert b.chunks_done == b.n_chunks == 1
+    s = eng.stats()
+    assert s["cow_forks"] == 1
+    assert s["cache_evictions"] == 0        # kept pages made it fit as-is
+    assert done_b[1] == done_a[0]           # same prompt, same tokens
+    assert a.cached_tokens == 0
+    eng._cache_alloc.check()
+    eng.prefix_cache.check()
