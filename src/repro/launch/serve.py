@@ -8,7 +8,14 @@ LayerState tree (paged KV pools for attention layers, slot-row states for
 RWKV/Mamba/cross-attn), chunked-prefill continuous batching (prompts
 stream in ``--chunk`` tokens per mixed step, fused with every live decode
 slot under ``--step-budget`` — decode never stalls behind a long prompt,
-and a warm engine never retraces), FIFO admission + per-request metrics.
+and a warm engine never retraces), priority admission with aging +
+per-request metrics.  ``--priority 0,1`` cycles priority classes over
+requests, ``--preempt`` lets an urgent arrival swap a lower-class victim
+out to host (and back, token-identically — ``--verify-preempt`` replays
+the workload through a preempt-off engine and asserts identity),
+``--stagger N`` runs N engine steps between submissions so later arrivals
+meet a busy engine, and ``--slo-ttft-ms``/``--slo-e2e-ms`` set the
+per-class SLO targets the report's attainment lines are scored against.
 Every architecture in the registry serves through it: ``--arch rwkv6-3b``
 and ``--arch zamba2-1.2b`` run the same programs as ``--arch yi-6b``.
 ``--repeat 2`` serves the workload twice through one engine and prints the
@@ -142,6 +149,25 @@ def main(argv=None) -> int:
                    help="prepend one fixed N-token prefix to every prompt "
                         "(the shared-prefix trace the prefix-cache smoke "
                         "greps a nonzero hit rate from)")
+    p.add_argument("--priority", default=None, metavar="P1,P2,...",
+                   help="priority classes (0 = most urgent), cycled over "
+                        "requests (default: all class 0 == FIFO)")
+    p.add_argument("--preempt", action="store_true",
+                   help="allow an urgent arrival to swap a lower-class "
+                        "victim slot out to host and resume it later "
+                        "token-identically (DESIGN.md §13)")
+    p.add_argument("--stagger", type=int, default=0, metavar="N",
+                   help="run N engine steps between submissions (bursty "
+                        "arrivals: later requests meet a busy engine)")
+    p.add_argument("--slo-ttft-ms", type=float, default=None,
+                   help="TTFT SLO target in ms (per-class attainment "
+                        "reported per pass)")
+    p.add_argument("--slo-e2e-ms", type=float, default=None,
+                   help="end-to-end latency SLO target in ms")
+    p.add_argument("--verify-preempt", action="store_true",
+                   help="replay every submission through a fresh "
+                        "preempt-off engine and assert token identity "
+                        "(greedy only)")
     p.add_argument("--autotune", action="store_true",
                    help="benchmark tile candidates for this arch's GEMM "
                         "cells and persist the winners before serving")
@@ -193,21 +219,32 @@ def main(argv=None) -> int:
                          size=(lens[i % len(lens)],)).astype(np.int32)])
                 for i in range(args.requests)]
 
+    prios = _parse_lens(args.priority, 0)
+    slo_kw = dict(
+        slo_ttft_s=args.slo_ttft_ms / 1e3 if args.slo_ttft_ms else None,
+        slo_e2e_s=args.slo_e2e_ms / 1e3 if args.slo_e2e_ms else None)
     eng = PagedEngine(model, params, slots=args.slots,
                       page_size=args.page_size, max_len=args.cache_len,
                       chunk=args.chunk, step_budget=args.step_budget,
                       temperature=args.temperature,
                       decode_kernel=args.paged_kernel,
-                      prefix_cache=args.prefix_cache)
+                      prefix_cache=args.prefix_cache,
+                      preempt=args.preempt, **slo_kw)
     print(f"# paged decode kernel: {eng.decode_kernel} "
           f"chunk={eng.chunk} step budget={eng.step_budget}"
           + (f" prefix cache={'on' if eng.prefix_cache is not None else 'off'}"
-             if args.prefix_cache else ""))
+             if args.prefix_cache else "")
+          + (" preempt=on" if args.preempt else ""))
     done = {}
+    subs = []   # every submission, for the --verify-preempt replay
     for rep in range(max(1, args.repeat)):
         before = (eng._prefill.retraces, eng._decode.retraces)
-        for req in make_prompts():
-            eng.submit(req, args.max_new)
+        for i, prompt in enumerate(make_prompts()):
+            prio = prios[i % len(prios)]
+            r = eng.submit(prompt, args.max_new, priority=prio)
+            subs.append((r.rid, prompt, args.max_new, prio))
+            for _ in range(args.stagger):
+                eng.step()
         done = eng.run_until_idle()
         dp = eng._prefill.retraces - before[0]
         dd = eng._decode.retraces - before[1]
@@ -218,6 +255,24 @@ def main(argv=None) -> int:
         print(f"req {rid}: {done[rid][:8]}...")
     expected = args.requests * max(1, args.repeat)
     print(f"served {len(done)}/{expected} requests")
+    if args.verify_preempt:
+        # replay the exact submissions through a fresh engine with
+        # preemption off: a preempted request's output must be
+        # token-identical to an uninterrupted run (greedy)
+        ref_eng = PagedEngine(model, params, slots=args.slots,
+                              page_size=args.page_size,
+                              max_len=args.cache_len, chunk=args.chunk,
+                              step_budget=args.step_budget,
+                              decode_kernel=args.paged_kernel,
+                              prefix_cache=args.prefix_cache)
+        for rid, prompt, max_new, prio in subs:
+            ref_eng.submit(prompt, max_new, rid=rid, priority=prio)
+        ref = ref_eng.run_until_idle()
+        bad = [rid for rid, *_ in subs if done.get(rid) != ref.get(rid)]
+        if bad:
+            print(f"preempt token-identity: FAIL (requests {bad})")
+            return 1
+        print(f"preempt token-identity: ok ({len(subs)} requests)")
     return 0
 
 

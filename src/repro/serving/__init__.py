@@ -1,5 +1,6 @@
 """Serving subsystem: the uniform LayerState tree, paged KV pools,
-chunked-prefill continuous batching, FIFO scheduling.
+chunked-prefill continuous batching, priority scheduling with
+preempt-to-host.
 
 ``launch/serve.py`` and ``examples/serve_lm.py`` are thin frontends over
 :class:`~repro.serving.engine.PagedEngine`.  Every architecture family
@@ -16,21 +17,25 @@ from repro.serving.engine import JitCounter, PagedEngine
 from repro.serving.paged_kv import (COPY_NONE, PageAllocator, PoolLayout,
                                     ceil_pages, copy_page, gather_pages,
                                     make_pool, modeled_decode_bytes,
-                                    pool_layout, reset_pages, scatter_prefill)
+                                    pool_layout, reset_pages, scatter_prefill,
+                                    swap_in_pages, swap_out_pages)
 from repro.serving.prefix_cache import PrefixCache, PrefixHit
-from repro.serving.scheduler import (DONE, PREFILLING, QUEUED, REJECTED,
-                                     RUNNING, FIFOScheduler, ServeRequest,
-                                     summarize)
+from repro.serving.scheduler import (DONE, PREEMPTED, PREFILLING, QUEUED,
+                                     REJECTED, RUNNING, FIFOScheduler,
+                                     PriorityScheduler, ServeRequest,
+                                     slo_summary, summarize)
 from repro.serving.state import (PagedKVState, SlotRowState, StateGeometry,
                                  StateTree, build_state_tree,
                                  stack_is_stateable)
 
 __all__ = [
     "PagedEngine", "JitCounter", "PageAllocator", "FIFOScheduler",
-    "ServeRequest", "summarize", "ceil_pages", "make_pool", "scatter_prefill",
+    "PriorityScheduler", "ServeRequest", "summarize", "slo_summary",
+    "ceil_pages", "make_pool", "scatter_prefill",
     "reset_pages", "gather_pages", "copy_page", "COPY_NONE", "PoolLayout",
-    "pool_layout", "modeled_decode_bytes", "PrefixCache", "PrefixHit",
+    "pool_layout", "modeled_decode_bytes", "swap_out_pages", "swap_in_pages",
+    "PrefixCache", "PrefixHit",
     "PagedKVState", "SlotRowState", "StateGeometry", "StateTree",
     "build_state_tree", "stack_is_stateable",
-    "QUEUED", "PREFILLING", "RUNNING", "DONE", "REJECTED",
+    "QUEUED", "PREFILLING", "RUNNING", "PREEMPTED", "DONE", "REJECTED",
 ]

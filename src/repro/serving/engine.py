@@ -9,9 +9,14 @@ One engine instance owns
   RWKV/Mamba recurrences and frozen cross-attention KV.  *Every*
   architecture in the config registry serves through this tree; there is
   no family special-casing and no legacy dense loop;
-* a **FIFO scheduler** with admission control and per-request metrics
-  (:mod:`repro.serving.scheduler`): ``QUEUED -> PREFILLING(k/K chunks)
-  -> RUNNING -> DONE``, pages claimed at the first chunk;
+* a **priority scheduler** with admission control, aging, and
+  per-request metrics (:mod:`repro.serving.scheduler`): ``QUEUED ->
+  PREFILLING(k/K chunks) -> RUNNING -> DONE``, pages claimed at the
+  first chunk; with ``preempt=True`` a more urgent arrival may swap a
+  lower-class victim out to host (``RUNNING/PREFILLING -> PREEMPTED``,
+  page contents + positions + recurrent rows snapshotted through
+  ``StateTree.swap_out``) and the victim later resumes token-identically
+  through the same admission gate (DESIGN.md §13);
 * exactly **three compiled programs** at steady state: one *mixed step*
   (``[slots, chunk]`` — at most one prefill chunk fused with every live
   decode slot), one pure decode step (``[slots, 1]``, the fused
@@ -39,7 +44,7 @@ from repro.models.model import Model
 from repro.serving.paged_kv import COPY_NONE
 from repro.serving.prefix_cache import PrefixCache, PrefixHit
 from repro.serving.scheduler import (PREFILLING, RUNNING, FIFOScheduler,
-                                     ServeRequest, summarize)
+                                     ServeRequest, slo_summary, summarize)
 from repro.serving.state import build_state_tree, stack_is_stateable
 
 
@@ -121,7 +126,8 @@ class PagedEngine:
                  chunk: int | None = None, step_budget: int | None = None,
                  max_queue: int = 64, temperature: float = 0.0, seed: int = 0,
                  overcommit: float = 1.0, decode_kernel: str | None = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False, preempt: bool = False,
+                 aging_s: float = 30.0, slo_ttft_s=None, slo_e2e_s=None):
         from repro.kernels import paged_attention as _pa
         cfg = model.cfg
         if not self.supports(model):   # the one eligibility predicate
@@ -151,8 +157,14 @@ class PagedEngine:
                 "the full decode load")
         self.temperature = temperature
         self._key = jax.random.key(seed)
+        # priority scheduling + preempt-to-host (DESIGN.md §13): the
+        # scheduler owns the policy (aged priority order, victim choice),
+        # the engine owns the mechanism (swap-out/swap-in through the
+        # LayerState tree); SLO targets are seconds, scalar or per-class
+        self.preempt_enabled = bool(preempt)
+        self.slo_ttft_s, self.slo_e2e_s = slo_ttft_s, slo_e2e_s
         self.sched = FIFOScheduler(max_queue=max_queue,
-                                   max_total_len=max_len)
+                                   max_total_len=max_len, aging_s=aging_s)
 
         # --- the uniform state tree ---------------------------------------
         self.state = build_state_tree(model, slots=slots,
@@ -234,16 +246,21 @@ class PagedEngine:
         self._prefill_tok = 0       # prompt tokens actually prefilled
         self._cached_tok = 0        # prompt tokens skipped via cache hits
         self._cow_forks = 0         # copy-on-write page forks performed
+        self.preemptions = 0        # slots swapped out to host
+        self.resumes = 0            # preempted requests swapped back in
 
     # ---------------------------------------------------------------- API
-    def submit(self, prompt, max_new: int, rid: int | None = None) -> ServeRequest:
+    def submit(self, prompt, max_new: int, rid: int | None = None,
+               priority: int = 0) -> ServeRequest:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if rid is None:
             rid, self._rid = self._rid, self._rid + 1
-        req = ServeRequest(rid=rid, prompt=prompt, max_new=max_new)
+        req = ServeRequest(rid=rid, prompt=prompt, max_new=int(max_new),
+                           priority=int(priority))
         # all rejection classes (over-long prompt, prompt + max_new beyond
-        # the KV budget, queue full) go through the scheduler's one reject
-        # path — stamped with REJECTED so the metrics stay meaningful
+        # the KV budget, empty prompt, max_new < 1, queue full) go through
+        # the scheduler's one reject path — stamped with REJECTED so the
+        # metrics stay meaningful
         self.sched.submit(req)
         return req
 
@@ -286,22 +303,48 @@ class PagedEngine:
         # Chunks issue one per step, so at most one request prefills at a
         # time — claiming pages for a second would only pressure the pool
         # (and park a live-table slot in pure-decode steps).  Admission ==
-        # page claim at first chunk.
+        # page claim at first chunk.  The admission candidate is the
+        # scheduler's priority head (aged class order; strict FIFO with
+        # one class) — and with preemption enabled, a head of a strictly
+        # higher class than some active request may swap a victim out to
+        # host rather than wait behind it.
+        head = self.sched.head()
+        if head is None:
+            return
+        if self.preempt_enabled and self._blocked(head):
+            victim = self.sched.pick_victim(
+                head, [r for r in self.active if r is not None])
+            if victim is not None:
+                self.preempt(victim.slot)
         if any(r is not None and r.state == PREFILLING for r in self.active):
             return
         free = [i for i, a in enumerate(self.active) if a is None]
-        if not free or not self.sched.queue:
+        if not free:
             return
-        # one cache lookup per admission attempt, on the queue head only —
+        head = self.sched.head()   # the preempted victim may now lead
+        if head is None:
+            return
+        if head.swap is not None:
+            # a preempted request resumes through the same admission gate
+            # (all-private page claim — its swapped state needs the full
+            # row), bypassing the prefix-cache *match*: the host snapshot
+            # already holds everything a hit could offer.  Cache *eviction*
+            # still runs (via the admission predicate) so cached-but-idle
+            # pages can never starve a resume.
+            if not self._can_admit_head(None):
+                return
+            self.sched.pop(head, free[0])
+            self._resume(head)
+            return
+        # one cache lookup per admission attempt, on the head only —
         # match takes no references, so a rejected admission drops it cold
         hit: PrefixHit | None = None
         if self.prefix_cache is not None:
-            h = self.prefix_cache.match(self.sched.queue[0].prompt)
+            h = self.prefix_cache.match(head.prompt)
             hit = h if h.is_hit else None
-        got = self.sched.admit(free[:1], lambda: self._can_admit_head(hit))
-        if not got:
+        if not self._can_admit_head(hit):
             return
-        req = got[0]
+        req = self.sched.pop(head, free[0])
         # a cache hit admits straight to PREFILLING(k/K): the shared pages
         # map into the slot's leading logical rows and prefill resumes at
         # the page boundary (full hits recompute only the last token for
@@ -358,6 +401,72 @@ class PagedEngine:
                 self.prefix_cache.evict(
                     need, protect=frozenset(hit.pages if hit else ()))
         return self.state.can_admit(shared=kept)
+
+    # -------------------------------------------------- preempt-to-host
+    def _blocked(self, head: ServeRequest) -> bool:
+        """Whether the admission head cannot be admitted as the engine
+        stands: every slot occupied, or a slot free but the page claim
+        does not fit even after prefix-cache eviction
+        (:meth:`_can_admit_head` runs the refcount-aware LRU first, so
+        preemption is the last resort, never a cache shortcut)."""
+        if all(r is not None for r in self.active):
+            return True
+        return not self._can_admit_head(None)
+
+    def preempt(self, slot: int) -> ServeRequest:
+        """Swap ``slot`` out to host and requeue its request as PREEMPTED.
+
+        The snapshot (page contents + positions + recurrent rows, via
+        ``StateTree.swap_out`` — one geometry for every state kind) plus
+        the host decode cursor is everything resume needs to continue
+        token-identically; the slot's pages/rows are released (shared
+        prefix-cache pages survive through the cache's own refcounts) and
+        the freed table rows sentineled on device.  All host-side and
+        eager work — the engine still compiles exactly three programs."""
+        req = self.active[slot]
+        if req is None or req.state not in (PREFILLING, RUNNING):
+            raise ValueError(f"slot {slot} holds nothing preemptible")
+        req.swap = {
+            "state": self.state.swap_out(self.pools, slot),
+            "cur": int(self._cur[slot, 0]),
+            "pos": int(self._pos[slot]),
+            "running": req.state == RUNNING,
+        }
+        req.preemptions += 1
+        self.active[slot] = None
+        self.state.release(slot)
+        self._push_tables()
+        self.sched.requeue(req)
+        self.preemptions += 1
+        return req
+
+    def _resume(self, req: ServeRequest) -> None:
+        """Swap a preempted request back in: claim an all-private page
+        row, run the one reset program (freed-slot hygiene, sentinel CoW
+        ids — the same shape every admission runs), restore the host
+        snapshot, and re-enter the lifecycle where it left off —
+        PREFILLING(k/K) with k at the swap point, or straight back to
+        RUNNING with its decode cursor."""
+        slot = req.slot
+        self.active[slot] = req
+        self.state.admit(slot)
+        self.pools = self.state.push_tables(self.pools)
+        ids = np.full((self.slots,), -1, np.int32)
+        ids[0] = slot
+        none = jnp.asarray([int(COPY_NONE)], jnp.int32)
+        self.pools = self._reset(self.pools, jnp.asarray(ids), none, none,
+                                 jnp.asarray([0], jnp.int32))
+        self.pools = self.state.swap_in(self.pools, slot, req.swap["state"])
+        self._push_tables()
+        if req.swap["running"]:
+            req.state = RUNNING
+            self._cur[slot, 0] = req.swap["cur"]
+            self._pos[slot] = req.swap["pos"]
+            self._emit_step[slot] = self.steps   # swap gap is not a stall
+        # else: PREFILLING resumes at req.prefill_pos through the normal
+        # chunked mixed step — k/K progress fields survived the round trip
+        req.swap = None
+        self.resumes += 1
 
     def _mixed_step(self, dec: list[int], pf: int) -> None:
         w = self.chunk
@@ -488,7 +597,17 @@ class PagedEngine:
             "cow_forks": self._cow_forks,
             "cache_pages": cache.cached_pages if cache else 0,
             "cache_evictions": cache.evictions if cache else 0,
+            "preempt": self.preempt_enabled,
+            "preemptions": self.preemptions,
+            "resumes": self.resumes,
+            "slo": self.slo(),
         }
+
+    def slo(self) -> dict:
+        """Per-priority-class TTFT/e2e distribution (p50/p99) with
+        attainment against the engine's configured targets."""
+        return slo_summary(self.sched.done, ttft_target_s=self.slo_ttft_s,
+                           e2e_target_s=self.slo_e2e_s)
 
     def report(self) -> str:
         s = self.stats()
@@ -498,6 +617,22 @@ class PagedEngine:
             cache = (f"| prefix hit rate={s['prefix_hit_rate'] * 100:.1f}% "
                      f"({s['cached_prefill_tokens']} tok cached, "
                      f"{s['cow_forks']} cow forks) ")
+        pre = ""
+        if self.preempt_enabled:
+            pre = (f"| preemptions={s['preemptions']} "
+                   f"(resumes={s['resumes']}) ")
+        slo = ""
+        for cls, ent in sorted(s["slo"].items()):
+            seg = (f"p{cls}: ttft p50/p99="
+                   f"{ent['ttft_p50_s'] * 1e3:.0f}/"
+                   f"{ent['ttft_p99_s'] * 1e3:.0f} ms")
+            if "ttft_attained" in ent:
+                seg += (f" ({ent['ttft_attained'] * 100:.0f}% <= "
+                        f"{ent['ttft_target_s'] * 1e3:.0f} ms)")
+            if "e2e_attained" in ent:
+                seg += (f", e2e {ent['e2e_attained'] * 100:.0f}% <= "
+                        f"{ent['e2e_target_s'] * 1e3:.0f} ms")
+            slo += f"| slo {seg} "
         return (f"served {m.get('done', 0)} req "
                 f"({m.get('rejected', 0)} rejected), "
                 f"{m.get('tokens', 0)} tok @ {m.get('tok_s', 0.0):.1f} tok/s "
@@ -505,6 +640,6 @@ class PagedEngine:
                 f"| prefill retraces={s['prefill_retraces']} "
                 f"decode retraces={s['decode_retraces']} "
                 f"| max decode stall={s['max_decode_stall']} steps "
-                f"{cache}"
+                f"{cache}{pre}{slo}"
                 f"| budget util={s['budget_util'] * 100:.1f}% "
                 f"(chunk={s['chunk']}, budget={s['step_budget']})")

@@ -13,6 +13,10 @@ This module owns everything around it:
   pages so a refilled slot never sees its predecessor's tokens.
 * :func:`gather_pages` — per-slot contiguous view of the pool (tests/debug;
   the decode path gathers inside attention).
+* :func:`swap_out_pages` / :func:`swap_in_pages` — the preempt-to-host
+  round trip: snapshot a slot's page contents (values, positions, int8
+  scales) to host and restore them into a freshly claimed row later,
+  eagerly (never a fourth compiled program).
 
 Ring semantics: token position ``p`` of a slot lives at logical index
 ``p % logical_len`` where ``logical_len = max_pages * page_size``; a write
@@ -372,6 +376,43 @@ def copy_page(pool: PagedKVCache, src: jax.Array, dst: jax.Array,
         k=pool.k.at[d].set(pool.k[s], mode="drop"),
         v=pool.v.at[d].set(pool.v[s], mode="drop"),
         pos=pool.pos.at[d].set(prow, mode="drop"),
+        page_table=pool.page_table,
+        k_scale=ksc, v_scale=vsc,
+    )
+
+
+def swap_out_pages(pool: PagedKVCache, pages) -> dict:
+    """Host snapshot of physical ``pages`` (a slot's table row in logical
+    order): k/v values, positions, and int8 scales when quantized — the
+    preempt-to-host payload (DESIGN.md §13).  Runs eagerly (device slice +
+    one device->host copy per field), never inside the engine's jitted
+    programs, so preemption adds no compiled program."""
+    idx = jnp.asarray(np.asarray(pages, np.int32))
+    blob = {"k": np.asarray(pool.k[idx]), "v": np.asarray(pool.v[idx]),
+            "pos": np.asarray(pool.pos[idx])}
+    if pool.quantized:
+        blob["k_scale"] = np.asarray(pool.k_scale[idx])
+        blob["v_scale"] = np.asarray(pool.v_scale[idx])
+    return blob
+
+
+def swap_in_pages(pool: PagedKVCache, pages, blob: dict) -> PagedKVCache:
+    """Restore a :func:`swap_out_pages` snapshot into ``pages`` (the
+    resumed slot's freshly claimed row, logical order).  Physical ids may
+    differ from the swap-out row — only the logical order matters, since
+    position ``p`` maps to logical index ``p % logical_len`` either way.
+    Positions restore exactly (written entries carry their global
+    position, unwritten ones ``POS_EMPTY``), so a resumed slot attends to
+    byte-identical state."""
+    idx = jnp.asarray(np.asarray(pages, np.int32))
+    ksc, vsc = pool.k_scale, pool.v_scale
+    if pool.quantized:
+        ksc = pool.k_scale.at[idx].set(jnp.asarray(blob["k_scale"]))
+        vsc = pool.v_scale.at[idx].set(jnp.asarray(blob["v_scale"]))
+    return PagedKVCache(
+        k=pool.k.at[idx].set(jnp.asarray(blob["k"])),
+        v=pool.v.at[idx].set(jnp.asarray(blob["v"])),
+        pos=pool.pos.at[idx].set(jnp.asarray(blob["pos"])),
         page_table=pool.page_table,
         k_scale=ksc, v_scale=vsc,
     )

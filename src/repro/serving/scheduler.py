@@ -1,18 +1,38 @@
-"""FIFO scheduler with admission control + per-request serving metrics.
+"""Priority scheduler with admission control, aging, preemption support
+and per-request serving metrics (SLO tracking included).
 
 Request lifecycle::
 
     submit() -> QUEUED -> (admit: page claim at first chunk)
                 PREFILLING(k/K chunks) -> RUNNING -> DONE
-             -> REJECTED            (queue full / prompt exceeds capacity)
+             -> REJECTED   (queue full / empty prompt / max_new < 1 /
+                            prompt exceeds capacity)
+    RUNNING/PREFILLING -> PREEMPTED -> (re-admit: swap-in) -> ... -> DONE
 
-Admission is strictly FIFO: a request is admitted when a decode slot is
-free AND its page allocation fits (the engine checks both); it then holds
-the slot through ``PREFILLING`` — the engine feeds its prompt one chunk
-per mixed step — and graduates to ``RUNNING`` when the last chunk's
-logits produce its first token.  Metrics are wall-clock host timestamps:
-queue wait, TTFT (submit -> first token), and decode throughput,
-aggregated by :func:`summarize`.
+Admission is **priority-ordered with aging**: every request carries a
+priority class (0 = most urgent; any small non-negative int), and the
+queue head is the request minimizing the *effective* priority
+
+    priority - (now - t_submit) / aging_s
+
+so a request that has waited ``aging_s`` seconds is as urgent as the
+class above it — low-priority traffic ages toward the front and can
+never starve, while fresh high-priority arrivals still jump the line.
+Within a class, FIFO.  With one class this is exactly the old FIFO
+scheduler (``FIFOScheduler`` remains the exported name).
+
+Preemption is the engine's move (swap-to-host, DESIGN.md §13); the
+scheduler owns the *policy*: :meth:`pick_victim` chooses the least
+urgent active request of a strictly lower class than the blocked head
+(static classes, not aged ones — aging must promote queued work, never
+destabilize running work), and :meth:`requeue` returns the victim to the
+queue as ``PREEMPTED`` (bypassing the capacity bound: the request was
+already admitted once and holds swapped host state).
+
+Metrics are wall-clock host timestamps: queue wait, TTFT (submit ->
+first token), end-to-end latency, and decode throughput, aggregated by
+:func:`summarize`; :func:`slo_summary` buckets TTFT/e2e per priority
+class (p50/p99 + attainment against configurable targets).
 """
 
 from __future__ import annotations
@@ -25,6 +45,7 @@ from typing import Iterable
 QUEUED = "queued"
 PREFILLING = "prefilling"
 RUNNING = "running"
+PREEMPTED = "preempted"
 DONE = "done"
 REJECTED = "rejected"
 
@@ -34,6 +55,7 @@ class ServeRequest:
     rid: int
     prompt: object                    # np.ndarray [S] int32
     max_new: int
+    priority: int = 0                 # class, 0 = most urgent
     state: str = QUEUED
     slot: int = -1
     out: list = dataclasses.field(default_factory=list)
@@ -44,9 +66,12 @@ class ServeRequest:
     cached_tokens: int = 0            # prompt tokens served by the prefix
     #                                   cache (admitted at k > 0: prefill
     #                                   resumes past the cached prefix)
+    # preempt-to-host round trip (engine-maintained; DESIGN.md §13)
+    swap: object = None               # host snapshot while PREEMPTED
+    preemptions: int = 0              # times swapped out to host
     # metrics (host wall-clock seconds)
     t_submit: float = 0.0
-    t_admit: float = 0.0
+    t_admit: float = 0.0              # first admission (queue wait anchor)
     t_first: float = 0.0
     t_done: float = 0.0
 
@@ -57,6 +82,10 @@ class ServeRequest:
     @property
     def ttft(self) -> float:
         return max(0.0, self.t_first - self.t_submit)
+
+    @property
+    def e2e(self) -> float:
+        return max(0.0, self.t_done - self.t_submit)
 
     @property
     def queue_wait(self) -> float:
@@ -70,14 +99,18 @@ class ServeRequest:
 
 
 class FIFOScheduler:
-    """Bounded FIFO queue: ``submit`` applies admission control, ``admit``
-    hands the head of the queue to free slots."""
+    """Bounded priority queue: ``submit`` applies admission control,
+    ``head``/``pop`` hand the most urgent request to free slots,
+    ``pick_victim``/``requeue`` are the preemption policy.  One priority
+    class degenerates to strict FIFO (the class keeps its historical
+    name)."""
 
     def __init__(self, *, max_queue: int = 64, max_total_len: int | None = None,
-                 clock=time.monotonic):
+                 clock=time.monotonic, aging_s: float = 30.0):
         self.max_queue = max_queue
         self.max_total_len = max_total_len
         self.clock = clock
+        self.aging_s = float(aging_s)
         self.queue: deque[ServeRequest] = deque()
         self.rejected: list[ServeRequest] = []
         self.running: dict[int, ServeRequest] = {}   # slot -> request
@@ -85,42 +118,101 @@ class FIFOScheduler:
 
     def submit(self, req: ServeRequest) -> bool:
         """Queue ``req``; False (state=REJECTED) when the queue is at
-        capacity or the request could never fit the KV budget."""
+        capacity, the request could never fit the KV budget, the prompt is
+        empty, or ``max_new < 1``.
+
+        Empty prompts are *rejected*, not served: a length-0 prompt has no
+        last-token logits — it would reach the mixed step as a length-0
+        identity row and emit a garbage first token.  ``max_new < 1`` is
+        likewise rejected (not clamped): the first token falls out of the
+        last prefill chunk unconditionally, so a cap below 1 cannot be
+        honored — the caller asked for nothing and gets a clean reject
+        instead of one surprise token."""
         req.t_submit = self.clock()
         too_long = (self.max_total_len is not None
                     and req.prompt_len + req.max_new > self.max_total_len)
-        if too_long or len(self.queue) >= self.max_queue:
+        bad = (too_long or req.prompt_len == 0 or req.max_new < 1
+               or len(self.queue) >= self.max_queue)
+        if bad:
             req.state = REJECTED
             self.rejected.append(req)
             return False
         self.queue.append(req)
         return True
 
+    # ---------------------------------------------------------- selection
+    def effective_priority(self, req: ServeRequest, now: float) -> float:
+        """Aged priority: waiting ``aging_s`` seconds promotes a request by
+        one full class, so no class can starve behind sustained
+        higher-priority traffic."""
+        if self.aging_s <= 0:
+            return float(req.priority)
+        return req.priority - (now - req.t_submit) / self.aging_s
+
+    def head(self) -> ServeRequest | None:
+        """The most urgent queued request (lowest effective priority;
+        FIFO within a class) — the one admission candidate.  O(queue),
+        which is fine at serving queue depths."""
+        if not self.queue:
+            return None
+        now = self.clock()
+        return min(self.queue,
+                   key=lambda r: (self.effective_priority(r, now),
+                                  r.t_submit, r.rid))
+
+    def pop(self, req: ServeRequest, slot: int,
+            state: str = PREFILLING) -> ServeRequest:
+        """Dequeue ``req`` (typically :meth:`head`) into ``slot``.
+        ``t_admit`` is stamped only on the *first* admission so
+        ``queue_wait`` measures submit -> first slot, preemption round
+        trips notwithstanding."""
+        self.queue.remove(req)
+        req.state = state
+        req.slot = slot
+        if req.t_admit == 0.0:
+            req.t_admit = self.clock()
+        self.running[slot] = req
+        return req
+
     def admit(self, free_slots: Iterable[int], can_alloc,
               state: str = PREFILLING) -> list[ServeRequest]:
-        """FIFO-admit queued requests into ``free_slots`` while
-        ``can_alloc()`` grants pages.  Strict FIFO: the head blocking on
-        pages blocks everything behind it (no head-of-line bypass) — which
-        also guarantees a prefix-cache hit matched against the queue head
-        applies to exactly the request admitted.  ``can_alloc`` must count
-        *physical* pages: with prefix caching, a shared-prefix request
-        needs only its non-cached remainder, so logical-page accounting
-        would over-reject (``StateTree.can_admit(shared=...)`` is that
-        predicate).  Admitted requests enter ``state`` (PREFILLING under
-        the chunked engine — pages are claimed at the first chunk, cached
-        prefixes admit at chunk k > 0; RUNNING only once the last chunk
-        yields the first token)."""
+        """Priority-admit queued requests into ``free_slots`` while
+        ``can_alloc()`` grants pages.  ``can_alloc`` must count *physical*
+        pages: with prefix caching, a shared-prefix request needs only its
+        non-cached remainder (``StateTree.can_admit(shared=...)``)."""
         admitted = []
         for slot in free_slots:
-            if not self.queue or not can_alloc():
+            req = self.head()
+            if req is None or not can_alloc():
                 break
-            req = self.queue.popleft()
-            req.state = state
-            req.slot = slot
-            req.t_admit = self.clock()
-            self.running[slot] = req
-            admitted.append(req)
+            admitted.append(self.pop(req, slot, state))
         return admitted
+
+    # --------------------------------------------------------- preemption
+    def pick_victim(self, candidate: ServeRequest,
+                    active: Iterable[ServeRequest]) -> ServeRequest | None:
+        """The preemption policy: among active requests of a *strictly*
+        lower static class than ``candidate``, the least urgent — lowest
+        class first, latest-admitted within it (least progress lost).
+        Static classes, not aged ones: aging promotes queued work toward
+        admission but must never destabilize running work into a
+        preempt/resume ping-pong.  None when nothing qualifies (equal or
+        higher classes are never preempted)."""
+        victims = [r for r in active
+                   if r is not None and r.state in (PREFILLING, RUNNING)
+                   and r.priority > candidate.priority]
+        if not victims:
+            return None
+        return max(victims, key=lambda r: (r.priority, r.t_admit, r.rid))
+
+    def requeue(self, req: ServeRequest) -> None:
+        """A preempted request back onto the queue (state=PREEMPTED).
+        Bypasses ``max_queue``: the request was already admitted once and
+        holds swapped host state — bouncing it would lose work."""
+        self.running.pop(req.slot, None)
+        req.state = PREEMPTED
+        req.slot = -1
+        self.queue.append(req)
 
     def complete(self, req: ServeRequest) -> None:
         req.state = DONE
@@ -134,6 +226,64 @@ class FIFOScheduler:
         return not self.queue and not self.running
 
 
+#: ``FIFOScheduler`` grew into the priority scheduler; both names refer
+#: to the same class (priority defaults to one class == strict FIFO).
+PriorityScheduler = FIFOScheduler
+
+
+def _percentile(xs: list[float], q: float) -> float:
+    """Nearest-rank percentile (small-sample friendly: p99 of 10 samples
+    is the max, not an extrapolation)."""
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(round(q * (len(xs) - 1))))]
+
+
+def _target_for(target, cls: int):
+    """Targets are a scalar (every class) or a {class: seconds} mapping
+    (missing classes untracked)."""
+    if target is None:
+        return None
+    if isinstance(target, dict):
+        return target.get(cls)
+    return target
+
+
+def slo_summary(requests: list[ServeRequest], *, ttft_target_s=None,
+                e2e_target_s=None) -> dict:
+    """Per-priority-class latency distribution + SLO attainment.
+
+    Returns ``{class: {n, ttft_p50_s, ttft_p99_s, e2e_p50_s, e2e_p99_s
+    [, ttft_target_s, ttft_attained, e2e_target_s, e2e_attained]}}`` over
+    completed requests.  Targets are seconds — a scalar for every class
+    or a ``{class: seconds}`` mapping; attainment is the fraction of the
+    class meeting its target."""
+    done = [r for r in requests if r.state == DONE]
+    out: dict = {}
+    for cls in sorted({r.priority for r in done}):
+        rs = [r for r in done if r.priority == cls]
+        ttfts = [r.ttft for r in rs]
+        e2es = [r.e2e for r in rs]
+        ent = {
+            "n": len(rs),
+            "ttft_p50_s": _percentile(ttfts, 0.50),
+            "ttft_p99_s": _percentile(ttfts, 0.99),
+            "e2e_p50_s": _percentile(e2es, 0.50),
+            "e2e_p99_s": _percentile(e2es, 0.99),
+        }
+        tt = _target_for(ttft_target_s, cls)
+        if tt is not None:
+            ent["ttft_target_s"] = float(tt)
+            ent["ttft_attained"] = sum(t <= tt for t in ttfts) / len(rs)
+        te = _target_for(e2e_target_s, cls)
+        if te is not None:
+            ent["e2e_target_s"] = float(te)
+            ent["e2e_attained"] = sum(t <= te for t in e2es) / len(rs)
+        out[cls] = ent
+    return out
+
+
 def summarize(requests: list[ServeRequest]) -> dict:
     """Aggregate per-request metrics into an engine-level report."""
     done = [r for r in requests if r.state == DONE]
@@ -142,14 +292,19 @@ def summarize(requests: list[ServeRequest]) -> dict:
     t0 = min(r.t_submit for r in done)
     t1 = max(r.t_done for r in done)
     toks = sum(len(r.out) for r in done)
+    # zero-decode requests (max_new=1: the one token falls out of prefill)
+    # have no decode phase at all — averaging their 0.0 in would silently
+    # deflate the reported decode throughput
+    dec = [r.decode_tok_s for r in done if len(r.out) > 1]
     return {
         "done": len(done),
         "rejected": sum(r.state == REJECTED for r in requests),
+        "preemptions": sum(r.preemptions for r in done),
         "tokens": toks,
         "wall_s": t1 - t0,
         "tok_s": toks / (t1 - t0) if t1 > t0 else 0.0,
         "ttft_mean_s": sum(r.ttft for r in done) / len(done),
         "ttft_max_s": max(r.ttft for r in done),
         "queue_wait_mean_s": sum(r.queue_wait for r in done) / len(done),
-        "decode_tok_s_mean": sum(r.decode_tok_s for r in done) / len(done),
+        "decode_tok_s_mean": sum(dec) / len(dec) if dec else 0.0,
     }

@@ -35,6 +35,11 @@ Protocol surface (one method per engine touchpoint)::
     decode_view(leaf, pos)                    traced: what decode consumes
     reset(leaf, slot_ids)                     traced: scrub freed slots
     push_table(leaf)                          host: allocator table -> device
+    swap_out(leaf, slot) / swap_in(leaf, slot, blob)
+                                              eager: preempt-to-host round
+                                              trip (page contents for KV
+                                              pools, whole rows for
+                                              recurrent states)
     geometry()                                StateGeometry descriptor
 
 The chunked mixed step (DESIGN.md §11) updates states *in place* through
@@ -55,7 +60,8 @@ import jax.numpy as jnp
 from repro.models import transformer as T
 from repro.models.layers import PagedKVCache
 from repro.serving.paged_kv import (PageAllocator, ceil_pages, copy_page,
-                                    make_pool, reset_pages, scatter_prefill)
+                                    make_pool, reset_pages, scatter_prefill,
+                                    swap_in_pages, swap_out_pages)
 
 import numpy as np
 
@@ -148,6 +154,23 @@ class PagedKVState:
     def copy_page(self, leaf: PagedKVCache, src, dst, resume) -> PagedKVCache:
         return copy_page(leaf, src, dst, resume)
 
+    # ---- preempt-to-host (DESIGN.md §13) -----------------------------------
+    def swap_out(self, leaf: PagedKVCache, slot: int) -> dict:
+        """Host snapshot of the slot's logical KV ring — the slot must
+        still hold its pages (swap out *before* release).  Shared
+        (prefix-cache) pages snapshot like private ones: the restored
+        slot owns a private copy, the cache keeps the original."""
+        pages = self.alloc_.slot_pages(slot)
+        if not pages:
+            raise ValueError(f"slot {slot} holds no pages to swap out")
+        return swap_out_pages(leaf, pages)
+
+    def swap_in(self, leaf: PagedKVCache, slot: int, blob: dict) -> PagedKVCache:
+        """Restore a swapped snapshot into the slot's freshly claimed row
+        (swap in *after* alloc; physical ids may differ — logical order
+        is the identity that matters)."""
+        return swap_in_pages(leaf, self.alloc_.slot_pages(slot), blob)
+
     def push_table(self, leaf: PagedKVCache,
                    private_only_slot: int | None = None) -> PagedKVCache:
         # a fresh copy per push: the pools tree is donated into the jitted
@@ -229,6 +252,18 @@ class SlotRowState:
 
     def copy_page(self, leaf, src, dst, resume):
         return leaf   # no page identity: CoW is a paged-pool concern
+
+    # ---- preempt-to-host: a row *is* the whole state -----------------------
+    def swap_out(self, leaf, slot: int):
+        """Host snapshot of the slot's recurrent/frozen rows — the same
+        geometry as the paged swap, one level simpler: the O(1) row holds
+        the exact state after the slot's tokens, so copying it out (and
+        back in) is the whole round trip."""
+        return jax.tree.map(lambda a: np.asarray(a[slot]), leaf)
+
+    def swap_in(self, leaf, slot: int, blob):
+        return jax.tree.map(
+            lambda a, b: a.at[slot].set(jnp.asarray(b, a.dtype)), leaf, blob)
 
     def push_table(self, leaf, private_only_slot: int | None = None):
         return leaf
@@ -313,6 +348,23 @@ class StateTree:
         return self.map_device(
             lambda st, pl: st.push_table(
                 pl, private_only_slot=private_only_slot), pools)
+
+    # ---- preempt-to-host: one geometry for every state kind -----------------
+    def swap_out(self, pools, slot: int):
+        """Host snapshot of ``slot`` across every layer state — page
+        contents + positions for KV pools, whole rows for recurrent
+        states — structured exactly like the device tree, so
+        :meth:`swap_in` is the structural inverse.  Call *before*
+        releasing the slot (the paged states read their current table
+        rows)."""
+        return self.map_device(lambda st, pl: st.swap_out(pl, slot), pools)
+
+    def swap_in(self, pools, slot: int, blobs):
+        """Restore a :meth:`swap_out` snapshot into ``slot``'s freshly
+        claimed pages/rows (call *after* ``admit``).  Eager device writes
+        — never part of the engine's three jitted programs."""
+        return self.map_device(
+            lambda st, pl, b: st.swap_in(pl, slot, b), pools, blobs)
 
     # ---- admission: every layer's capacity vote, through the protocol -------
     def can_admit(self, *, shared: int = 0) -> bool:

@@ -1,0 +1,382 @@
+"""Priority scheduling + preempt-to-host lockdown (DESIGN.md §13).
+
+Four layers of pinning:
+
+* **queue-edge regressions** — the submit-time validation sweep: an empty
+  prompt and ``max_new < 1`` are *rejected* (both used to sail through and
+  emit garbage tokens from the idle-identity logits / the unconditional
+  first-token append), and zero-decode requests no longer deflate
+  ``decode_tok_s_mean``;
+* **policy units** — priority admission order, aging promotion (a fake
+  clock drives ``effective_priority``), and the victim policy (strictly
+  lower static class only, least progress lost);
+* **round-trip equivalence** — a preempted request's output is
+  token-identical to an uninterrupted run, for forced mid-decode and
+  mid-prefill swaps, for a paged arch *and* a recurrent arch, scheduler-
+  driven two-class bursts included — at zero extra compiled programs
+  (the swap path is eager: the engine still runs exactly three);
+* **burst property** — random priority/length/stagger workloads drain
+  completely (no starvation, no livelock: every admitted request
+  completes under a bounded step budget), token-identically, with
+  ``PageAllocator.check()`` + prefix-cache invariants intact after the
+  swap round trips.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_arch, smoke_config
+from repro.models.model import Model
+from repro.serving import (DONE, PREEMPTED, REJECTED, RUNNING, FIFOScheduler,
+                           PagedEngine, ServeRequest, summarize)
+
+_SETUP: dict = {}
+
+
+def setup_arch(arch):
+    if arch not in _SETUP:
+        cfg = dataclasses.replace(smoke_config(get_arch(arch)),
+                                  dtype="float32", capacity_factor=64.0)
+        model = Model(cfg)
+        params = model.init(jax.random.key(0))
+        _SETUP[arch] = (cfg, model, params)
+    return _SETUP[arch]
+
+
+def make_engine(arch, **kw):
+    cfg, model, params = setup_arch(arch)
+    kw.setdefault("slots", 2)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("max_len", 32)
+    return cfg, PagedEngine(model, params, **kw)
+
+
+def mixed_prompts(cfg, lens, seed=7):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, (l,)).astype(np.int32)
+            for l in lens]
+
+
+def check_clean(eng):
+    """Post-drain invariants: every page free, allocator tables coherent,
+    prefix-cache refcounts consistent (when enabled, cached pages may
+    legitimately remain referenced by the cache itself)."""
+    for alloc in eng.state.allocators.values():
+        alloc.check()
+        if eng.prefix_cache is None:
+            assert alloc.free_pages == alloc.n_pages
+    if eng.prefix_cache is not None:
+        eng.prefix_cache.check()
+
+
+# --------------------------------------------------------------------------
+# queue-edge regressions (the bugfix sweep)
+# --------------------------------------------------------------------------
+
+def test_empty_prompt_rejected():
+    """A length-0 prompt must be rejected at submit — it used to reach the
+    mixed step as a length-0 identity row and emit one garbage token."""
+    cfg, eng = make_engine("yi-6b")
+    bad = eng.submit(np.array([], np.int32), 4)
+    good = eng.submit(mixed_prompts(cfg, [5])[0], 3)
+    assert bad.state == REJECTED and bad.out == []
+    done = eng.run_until_idle()
+    assert bad.rid not in done and len(done[good.rid]) == 3
+    m = summarize(eng.sched.done + eng.sched.rejected)
+    assert m["rejected"] == 1 and m["done"] == 1
+    check_clean(eng)
+
+
+@pytest.mark.parametrize("max_new", [0, -3])
+def test_nonpositive_max_new_rejected(max_new):
+    """``max_new < 1`` is rejected, not clamped: the first token falls out
+    of the last prefill chunk unconditionally, so a cap below one token
+    cannot be honored — it used to emit one token anyway."""
+    cfg, eng = make_engine("yi-6b")
+    bad = eng.submit(mixed_prompts(cfg, [5])[0], max_new)
+    assert bad.state == REJECTED
+    assert eng.run_until_idle() == {}
+    assert bad.out == []
+    check_clean(eng)
+
+
+def test_zero_decode_requests_excluded_from_decode_mean():
+    """A max_new=1 request has no decode phase (its one token falls out of
+    prefill): its structural 0.0 must not deflate ``decode_tok_s_mean``."""
+    one = ServeRequest(rid=0, prompt=np.arange(3), max_new=1, state=DONE,
+                       out=[7], t_submit=0.0, t_first=1.0, t_done=1.0)
+    many = ServeRequest(rid=1, prompt=np.arange(3), max_new=5, state=DONE,
+                        out=[1, 2, 3, 4, 5], t_submit=0.0, t_first=1.0,
+                        t_done=3.0)
+    assert one.decode_tok_s == 0.0
+    assert many.decode_tok_s == pytest.approx(2.0)
+    m = summarize([one, many])
+    assert m["decode_tok_s_mean"] == pytest.approx(2.0)   # not (0 + 2) / 2
+    assert m["done"] == 2 and m["preemptions"] == 0
+    # all-zero-decode workloads report 0.0, never divide by zero
+    assert summarize([one])["decode_tok_s_mean"] == 0.0
+
+
+# --------------------------------------------------------------------------
+# policy units (fake clock)
+# --------------------------------------------------------------------------
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _req(rid, prio, clock_sched):
+    r = ServeRequest(rid=rid, prompt=np.arange(4), max_new=2, priority=prio)
+    assert clock_sched.submit(r)
+    return r
+
+
+def test_priority_admission_order():
+    clk = FakeClock()
+    s = FIFOScheduler(clock=clk, aging_s=30.0)
+    low = _req(0, 2, s)
+    mid = _req(1, 1, s)
+    hi = _req(2, 0, s)
+    hi2 = _req(3, 0, s)
+    assert s.head() is hi                 # lowest class first
+    s.pop(hi, 0)
+    assert s.head() is hi2                # FIFO within a class
+    s.pop(hi2, 1)
+    assert [s.head(), (s.pop(s.head(), 2), s.head())[1]] == [mid, low]
+
+
+def test_aging_promotes_low_priority():
+    """Waiting ``aging_s`` seconds promotes a request one full class, so
+    sustained high-priority traffic can never starve the low class."""
+    clk = FakeClock()
+    s = FIFOScheduler(clock=clk, aging_s=10.0)
+    low = _req(0, 1, s)
+    clk.t = 11.0                          # low has aged past one class
+    hi = _req(1, 0, s)
+    assert s.head() is low                # aged effective 1 - 1.1 < fresh 0
+    clk.t = 12.0
+    s.pop(low, 0)
+    assert s.head() is hi
+    # aging off (aging_s=0): static classes only, no promotion
+    s2 = FIFOScheduler(clock=clk, aging_s=0.0)
+    low2 = _req(2, 1, s2)
+    clk.t = 1e6
+    hi2 = _req(3, 0, s2)
+    assert s2.head() is hi2 and s2.effective_priority(low2, clk.t) == 1.0
+
+
+def test_pick_victim_policy():
+    """Victims come from strictly lower *static* classes only (aging never
+    destabilizes running work), least urgent / least progress first."""
+    clk = FakeClock()
+    s = FIFOScheduler(clock=clk, aging_s=10.0)
+    a = _req(0, 2, s)
+    b = _req(1, 2, s)
+    c = _req(2, 1, s)
+    for slot, r in enumerate((a, b, c)):
+        clk.t += 1.0
+        s.pop(r, slot)
+    cand = ServeRequest(rid=9, prompt=np.arange(4), max_new=2, priority=0)
+    # lowest class first; within it, the latest-admitted (b, not a)
+    assert s.pick_victim(cand, [a, b, c]) is b
+    assert s.pick_victim(cand, [c]) is c
+    # equal class is never preempted — even when the candidate has aged
+    cand1 = ServeRequest(rid=10, prompt=np.arange(4), max_new=2, priority=1)
+    assert s.pick_victim(cand1, [c]) is None
+    assert s.pick_victim(cand1, [a, b]) in (a, b)
+    # requeue returns the victim as PREEMPTED, bypassing max_queue
+    s.requeue(b)
+    assert b.state == PREEMPTED and b.slot == -1 and b in s.queue
+
+
+def test_submit_validation_matrix():
+    s = FIFOScheduler(max_queue=2, max_total_len=16)
+    ok = ServeRequest(rid=0, prompt=np.arange(4), max_new=2)
+    assert s.submit(ok)
+    for bad in (ServeRequest(rid=1, prompt=np.arange(0), max_new=2),
+                ServeRequest(rid=2, prompt=np.arange(4), max_new=0),
+                ServeRequest(rid=3, prompt=np.arange(4), max_new=-1),
+                ServeRequest(rid=4, prompt=np.arange(15), max_new=2)):
+        assert not s.submit(bad) and bad.state == REJECTED
+    assert s.submit(ServeRequest(rid=5, prompt=np.arange(4), max_new=2))
+    full = ServeRequest(rid=6, prompt=np.arange(4), max_new=2)
+    assert not s.submit(full) and full.state == REJECTED
+
+
+# --------------------------------------------------------------------------
+# round-trip equivalence: preempted == uninterrupted
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["yi-6b", "rwkv6-3b"])
+def test_forced_preempt_mid_decode_token_identity(arch):
+    """Swap a RUNNING slot out to host and back: paged KV contents,
+    positions, and recurrent rows all survive — output tokens identical to
+    an uninterrupted run, at zero extra compiled programs."""
+    cfg, eng0 = make_engine(arch)
+    prompts = mixed_prompts(cfg, [5, 9])
+    for p in prompts:
+        eng0.submit(p, 6)
+    ref = eng0.run_until_idle()
+
+    _, eng = make_engine(arch, preempt=True)
+    for p in prompts:
+        eng.submit(p, 6)
+    for _ in range(3):
+        eng.step()
+    victim = next(i for i, r in enumerate(eng.active)
+                  if r is not None and r.state == RUNNING)
+    eng.preempt(victim)
+    assert eng.run_until_idle() == ref
+    s = eng.stats()
+    assert s["preemptions"] == 1 and s["resumes"] == 1
+    assert s["prefill_retraces"] <= 1 and s["decode_retraces"] <= 1
+    assert eng._reset.retraces == 1       # resume reuses the one reset shape
+    check_clean(eng)
+
+
+def test_forced_preempt_mid_prefill_token_identity():
+    """A victim caught mid-prefill resumes as PREFILLING(k/K) with k at
+    its swap point, riding the existing chunked-admission path."""
+    cfg, eng0 = make_engine("yi-6b", chunk=4)
+    prompts = mixed_prompts(cfg, [20, 24], seed=3)
+    for p in prompts:
+        eng0.submit(p, 5)
+    ref = eng0.run_until_idle()
+
+    _, eng = make_engine("yi-6b", chunk=4, preempt=True)
+    for p in prompts:
+        eng.submit(p, 5)
+    eng.step()
+    eng.step()
+    pf = next(i for i, r in enumerate(eng.active)
+              if r is not None and r.state == "prefilling")
+    r = eng.active[pf]
+    assert 0 < r.prefill_pos < r.prompt_len
+    k_at_swap = r.chunks_done
+    eng.preempt(pf)
+    assert r.state == PREEMPTED and r.chunks_done == k_at_swap
+    assert eng.run_until_idle() == ref
+    assert r.preemptions == 1 and r.n_chunks == -(-r.prompt_len // 4)
+    check_clean(eng)
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "zamba2-1.2b"])
+def test_scheduler_driven_two_class_preemption(arch):
+    """Low-priority requests fill every slot; a high-priority arrival
+    preempts one to host.  Output identical to the same workload with
+    preemption off, and the engine still compiled exactly 3 programs."""
+    cfg, eng0 = make_engine(arch, chunk=8)
+    prompts = mixed_prompts(cfg, [20, 24, 6], seed=3)
+    subs = [(0, prompts[0], 6, 1), (1, prompts[1], 6, 1),
+            (2, prompts[2], 5, 0)]
+    for rid, p, mn, prio in subs:
+        eng0.submit(p, mn, rid=rid, priority=prio)
+    ref = eng0.run_until_idle()
+
+    _, eng = make_engine(arch, chunk=8, preempt=True)
+    eng.submit(prompts[0], 6, rid=0, priority=1)
+    eng.submit(prompts[1], 6, rid=1, priority=1)
+    for _ in range(5):
+        eng.step()                        # both low-pri slots live
+    eng.submit(prompts[2], 5, rid=2, priority=0)   # the urgent arrival
+    assert eng.run_until_idle() == ref
+    s = eng.stats()
+    assert s["preemptions"] >= 1 and s["resumes"] == s["preemptions"]
+    assert s["prefill_retraces"] <= 1 and s["decode_retraces"] <= 1
+    assert eng._reset.retraces == 1
+    assert set(s["slo"]) == {0, 1}
+    assert all(ent["n"] >= 1 and ent["ttft_p50_s"] <= ent["ttft_p99_s"]
+               for ent in s["slo"].values())
+    check_clean(eng)
+
+
+def test_preempt_survives_prefix_cache_round_trip():
+    """Swap-out/in under prefix caching: the resumed request claims
+    all-private pages (its snapshot holds the shared content), the cache
+    keeps its originals via its own refcounts, and both the allocator and
+    cache invariants hold after the round trip — token-identically."""
+    cfg, eng = make_engine("yi-6b", chunk=8, preempt=True, prefix_cache=True)
+    base, tail1, tail2 = mixed_prompts(cfg, [12, 6, 7], seed=3)
+    p1 = np.concatenate([base, tail1])
+    p2 = np.concatenate([base, tail2])
+    eng.submit(p1, 5, rid=0)
+    eng.run_until_idle()                  # seeds the cache with base pages
+    eng.submit(p2, 6, rid=1, priority=1)
+    for _ in range(3):
+        eng.step()
+    hits_before = eng.prefix_cache.hits
+    eng.preempt(next(i for i, r in enumerate(eng.active) if r is not None))
+    out = eng.run_until_idle()
+    assert eng.prefix_cache.hits == hits_before   # resume bypasses match
+    check_clean(eng)
+
+    cfg, eng0 = make_engine("yi-6b", chunk=8)
+    eng0.submit(p1, 5, rid=0)
+    eng0.run_until_idle()
+    eng0.submit(p2, 6, rid=1)
+    ref = eng0.run_until_idle()
+    assert out[1] == ref[1]
+    assert eng.stats()["preemptions"] == 1
+
+
+def test_preempt_empty_slot_raises():
+    _, eng = make_engine("yi-6b", preempt=True)
+    with pytest.raises(ValueError, match="nothing preemptible"):
+        eng.preempt(0)
+
+
+# --------------------------------------------------------------------------
+# burst property: no starvation, identity, invariants
+# --------------------------------------------------------------------------
+
+@settings(max_examples=5, deadline=None, derandomize=True)
+@given(seed=st.integers(min_value=0, max_value=10 ** 6),
+       stagger=st.integers(min_value=0, max_value=6),
+       cache=st.booleans())
+def test_burst_no_starvation_and_identity(seed, stagger, cache):
+    """Random priority/length/arrival bursts: every admitted request
+    completes within a bounded step budget (aging forbids starvation, the
+    resume gate forbids livelock), outputs match a preempt-off engine
+    request for request, and the page allocator (+ prefix cache) pass
+    their invariant oracles after all the swap round trips."""
+    cfg, eng = make_engine("yi-6b", chunk=8, preempt=True, aging_s=0.05,
+                           prefix_cache=cache)
+    rng = np.random.default_rng(seed)
+    n = 6
+    lens = rng.integers(1, 24, size=n)
+    prios = rng.integers(0, 3, size=n)
+    subs = []
+    for i in range(n):
+        p = rng.integers(0, cfg.vocab_size, (lens[i],)).astype(np.int32)
+        mn = int(rng.integers(1, 6))
+        r = eng.submit(p, mn, priority=int(prios[i]))
+        assert r.state != REJECTED
+        subs.append((r.rid, p, mn, int(prios[i])))
+        for _ in range(stagger):
+            eng.step()
+    cap = 2000                            # >> any honest drain; bounds livelock
+    steps = 0
+    while not eng.sched.idle and steps < cap:
+        eng.step()
+        steps += 1
+    assert eng.sched.idle, (
+        f"starvation/livelock: {len(eng.sched.queue)} queued, "
+        f"{len(eng.sched.running)} running after {cap} steps")
+    done = {r.rid: list(r.out) for r in eng.sched.done}
+    assert sorted(done) == sorted(rid for rid, *_ in subs)
+    assert all(len(done[rid]) == mn for rid, _, mn, _ in subs)
+    check_clean(eng)
+
+    _, ref_eng = make_engine("yi-6b", chunk=8, prefix_cache=cache)
+    for rid, p, mn, prio in subs:
+        ref_eng.submit(p, mn, rid=rid, priority=prio)
+    assert ref_eng.run_until_idle() == done
