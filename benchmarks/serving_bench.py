@@ -284,6 +284,81 @@ def preempt_burst_records(arch: str = "yi-6b", *, slots: int = 2,
     }]
 
 
+def fault_injection_records(arch: str = "yi-6b", *, requests: int = 6,
+                            slots: int = 2, max_new: int = 8,
+                            lens: tuple = (4, 7, 12), cache_len: int = 32,
+                            chunk: int = 8, seed: int = 0,
+                            n_events: int = 6) -> list[dict]:
+    """The seeded fault-injection trace (DESIGN.md §14): one fixed
+    workload served fault-free for reference, then re-served through a
+    watchdog-enabled engine under a deterministic ``FaultPlan`` (step
+    exceptions + allocator exhaustion + corrupted swap blobs + latency)
+    injected *after* the warm-up pass.  The acceptance extras on the row:
+    the engine drains (no crash), every request that still completes is
+    token-identical to the fault-free run (``token_identity=1``), faults
+    fire and recoveries happen, and the faulted warm pass shows zero
+    retraces — recovery is eager host work, never a fourth program."""
+    import numpy as np
+    import jax
+
+    from repro.configs import get_arch, smoke_config
+    from repro.models.model import Model
+    from repro.serving import FaultPlan, PagedEngine
+
+    cfg = dataclasses.replace(smoke_config(get_arch(arch)), dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(3)
+    prompts = _workload(rng, cfg.vocab_size, requests, list(lens))
+
+    ref_eng = PagedEngine(model, params, slots=slots, page_size=8,
+                          max_len=cache_len, chunk=chunk)
+    ref_rids = [ref_eng.submit(p, max_new).rid for p in prompts]
+    ref = ref_eng.run_until_idle()
+
+    eng = PagedEngine(model, params, slots=slots, page_size=8,
+                      max_len=cache_len, chunk=chunk, watchdog=True)
+    for p in prompts:                       # pass 1: warm the compiles
+        eng.submit(p, max_new)
+    eng.run_until_idle()
+    before = (eng._prefill.retraces, eng._decode.retraces)
+    # the plan fires across the measured pass: shift its tick window past
+    # the warm-up (ticks only ever advance)
+    plan = FaultPlan.seeded(seed, n_events=n_events,
+                            ticks=max(16, requests * max_new))
+    for ev in plan.events:
+        ev.tick += eng.ticks
+    eng.faults = plan
+    t0 = time.perf_counter()
+    rids = [eng.submit(p, max_new).rid for p in prompts]
+    eng.run_until_idle()
+    dt = time.perf_counter() - t0
+    done = {r.rid: list(r.out) for r in eng.sched.done}
+    survivors = [i for i, rid in enumerate(rids) if rid in done]
+    identical = all(done[rids[i]] == ref[ref_rids[i]] for i in survivors)
+    s = eng.stats()
+    return [{
+        "name": f"serving_faults_{arch}",
+        "arch": arch,
+        "family": cfg.family,
+        "warm_tok_s": round(
+            sum(len(done[rids[i]]) for i in survivors) / dt, 2),
+        "prefill_retraces": eng._prefill.retraces - before[0],
+        "decode_retraces": eng._decode.retraces - before[1],
+        "max_decode_stall": int(s["max_decode_stall"]),
+        "budget_util": round(float(s["budget_util"]), 4),
+        "chunk": int(s["chunk"]),
+        "step_budget": int(s["step_budget"]),
+        # the fault-tolerance acceptance extras (schema allows extras)
+        "faults_injected": int(sum(plan.injected.values())),
+        "recovered": int(s["recovered"]),
+        "failed": int(s["failed_total"]),
+        "survivors": len(survivors),
+        "token_identity": int(identical),
+        "watchdog_sweeps": int(eng.watchdog.sweeps),
+    }]
+
+
 def check_regression(prev: dict, doc: dict,
                      max_drop: float = 0.10) -> list[str]:
     """Warm-throughput regression gate: every row present in both documents
@@ -547,6 +622,11 @@ def main(argv=None) -> int:
                         "requests fill the slots, a high-priority burst "
                         "preempts to host (SLO attainment + preemption "
                         "count as row extras)")
+    p.add_argument("--faults", action="store_true",
+                   help="add the seeded fault-injection trace row: warm "
+                        "workload re-served under a deterministic "
+                        "FaultPlan (recoveries, failures, and survivor "
+                        "token-identity as row extras)")
     p.add_argument("--check-regression", default=None, metavar="PATH",
                    help="fail (exit 1) when any row's warm tok/s drops "
                         "more than --max-regression below the same row in "
@@ -583,6 +663,8 @@ def main(argv=None) -> int:
                 recs += prefix_cache_records(requests=4, max_new=6)
             if args.preempt and want("serving_preempt_burst_"):
                 recs += preempt_burst_records(n_low=3, n_high=2, max_new=6)
+            if args.faults and want("serving_faults_"):
+                recs += fault_injection_records(requests=4, max_new=6)
             return recs
 
         records = measure()
@@ -596,6 +678,13 @@ def main(argv=None) -> int:
                          f" -> {r['prefill_tok_per_req_on']} "
                          f"({r['prefill_tok_reduction']}x), "
                          f"cow forks={r['cow_forks']}")
+            if "faults_injected" in r:
+                extra = (f", faults injected={r['faults_injected']}, "
+                         f"recovered={r['recovered']}, "
+                         f"failed={r['failed']}, "
+                         f"survivors={r['survivors']}/"
+                         f"{r['survivors'] + r['failed']} "
+                         f"token-identical={bool(r['token_identity'])}")
             if "preemptions" in r:
                 extra = (f", preemptions={r['preemptions']}, "
                          f"high-class ttft p99="
@@ -658,6 +747,8 @@ def main(argv=None) -> int:
         records += prefix_cache_records()
     if args.preempt:
         records += preempt_burst_records()
+    if args.faults:
+        records += fault_injection_records()
     rows = _family_rows(records) + paged_decode_paths()
     print("name,us_per_tok,derived")
     for name, us, derived in rows:

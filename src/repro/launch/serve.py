@@ -22,6 +22,14 @@ and ``--arch zamba2-1.2b`` run the same programs as ``--arch yi-6b``.
 second pass's compile deltas (the CI smokes assert
 ``prefill retraces=0 decode retraces=0`` and ``max decode stall=0``).
 
+Fault tolerance (DESIGN.md §14): ``--deadline-s`` gives every request a
+wall-clock budget (TIMEOUT past it), ``--faults SPEC`` injects a seeded
+deterministic fault plan (step exceptions recover through the PREEMPTED
+retry path — ``--verify-faults`` asserts every surviving request is
+token-identical to a fault-free replay), ``--watchdog`` runs periodic +
+at-drain invariant sweeps, and ``--heartbeat PATH`` writes a liveness
+file an external orchestrator can poll.
+
 The legacy dense-cache continuous-batching loop (and its ``--dense``
 escape hatch) was deleted; its sequential per-request form survives only
 as the equivalence oracle in ``tests/test_serving_engine.py``.
@@ -168,6 +176,28 @@ def main(argv=None) -> int:
                    help="replay every submission through a fresh "
                         "preempt-off engine and assert token identity "
                         "(greedy only)")
+    p.add_argument("--deadline-s", type=float, default=None,
+                   help="per-request wall-clock deadline in seconds; a "
+                        "request still unfinished past it ends TIMEOUT "
+                        "with all resources reclaimed (DESIGN.md §14)")
+    p.add_argument("--watchdog", action="store_true",
+                   help="run periodic invariant sweeps (allocator/cache "
+                        "oracles, refcount reconciliation, slot "
+                        "consistency) and the at-drain sweep")
+    p.add_argument("--faults", default=None, metavar="SPEC",
+                   help="inject a seeded deterministic fault plan, e.g. "
+                        "'seed=0,n=8,ticks=64,kinds=step_exc+alloc_exhaust"
+                        "+swap_corrupt+latency' — step faults recover "
+                        "through the PREEMPTED retry path (DESIGN.md §14)")
+    p.add_argument("--heartbeat", default=None, metavar="PATH",
+                   help="write a throttled JSON liveness file every step "
+                        "(runtime.fault_tolerance.Heartbeat) so a wedged "
+                        "serve process is detectable from outside")
+    p.add_argument("--verify-faults", action="store_true",
+                   help="replay every submission through a fresh "
+                        "fault-free engine and assert each request that "
+                        "completed under faults is token-identical "
+                        "(greedy only)")
     p.add_argument("--autotune", action="store_true",
                    help="benchmark tile candidates for this arch's GEMM "
                         "cells and persist the winners before serving")
@@ -223,18 +253,24 @@ def main(argv=None) -> int:
     slo_kw = dict(
         slo_ttft_s=args.slo_ttft_ms / 1e3 if args.slo_ttft_ms else None,
         slo_e2e_s=args.slo_e2e_ms / 1e3 if args.slo_e2e_ms else None)
+    from repro.serving import FaultPlan
+    plan = FaultPlan.from_spec(args.faults) if args.faults else None
     eng = PagedEngine(model, params, slots=args.slots,
                       page_size=args.page_size, max_len=args.cache_len,
                       chunk=args.chunk, step_budget=args.step_budget,
                       temperature=args.temperature,
                       decode_kernel=args.paged_kernel,
                       prefix_cache=args.prefix_cache,
-                      preempt=args.preempt, **slo_kw)
+                      preempt=args.preempt,
+                      deadline_s=args.deadline_s, watchdog=args.watchdog,
+                      faults=plan, heartbeat=args.heartbeat, **slo_kw)
     print(f"# paged decode kernel: {eng.decode_kernel} "
           f"chunk={eng.chunk} step budget={eng.step_budget}"
           + (f" prefix cache={'on' if eng.prefix_cache is not None else 'off'}"
              if args.prefix_cache else "")
-          + (" preempt=on" if args.preempt else ""))
+          + (" preempt=on" if args.preempt else "")
+          + (" watchdog=on" if args.watchdog else "")
+          + (f" faults[{args.faults}]" if args.faults else ""))
     done = {}
     subs = []   # every submission, for the --verify-preempt replay
     for rep in range(max(1, args.repeat)):
@@ -273,6 +309,32 @@ def main(argv=None) -> int:
             print(f"preempt token-identity: FAIL (requests {bad})")
             return 1
         print(f"preempt token-identity: ok ({len(subs)} requests)")
+    if args.faults:
+        fs = eng.faults.stats()
+        ws = eng.watchdog.stats()
+        print(f"faults: injected={fs['injected']} "
+              f"corrupted={fs['corrupted_snapshots']} "
+              f"recovered={eng.recovered} "
+              f"failed={len(eng.sched.failed)} sweeps={ws['sweeps']}")
+    if args.verify_faults:
+        # replay the exact submissions through a fresh fault-free engine:
+        # every request that still completed under the fault plan must be
+        # token-identical — faults may fail requests, never corrupt them
+        ref_eng = PagedEngine(model, params, slots=args.slots,
+                              page_size=args.page_size,
+                              max_len=args.cache_len, chunk=args.chunk,
+                              step_budget=args.step_budget,
+                              decode_kernel=args.paged_kernel,
+                              prefix_cache=args.prefix_cache)
+        for rid, prompt, max_new, prio in subs:
+            ref_eng.submit(prompt, max_new, rid=rid, priority=prio)
+        ref = ref_eng.run_until_idle()
+        bad = [rid for rid in done if done[rid] != ref.get(rid)]
+        if bad:
+            print(f"fault token-identity: FAIL (requests {bad})")
+            return 1
+        print(f"fault token-identity: ok ({len(done)}/{len(subs)} "
+              f"completed, {len(subs) - len(done)} faulted)")
     return 0
 
 

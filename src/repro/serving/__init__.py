@@ -14,19 +14,24 @@ survives only as the tests' oracle).
 """
 
 from repro.serving.engine import JitCounter, PagedEngine
+from repro.serving.faults import FaultEvent, FaultInjected, FaultPlan
 from repro.serving.paged_kv import (COPY_NONE, PageAllocator, PoolLayout,
-                                    ceil_pages, copy_page, gather_pages,
-                                    make_pool, modeled_decode_bytes,
-                                    pool_layout, reset_pages, scatter_prefill,
-                                    swap_in_pages, swap_out_pages)
+                                    SwapIntegrityError, ceil_pages, copy_page,
+                                    gather_pages, make_pool,
+                                    modeled_decode_bytes, pool_layout,
+                                    reset_pages, scatter_prefill,
+                                    snapshot_digest, swap_in_pages,
+                                    swap_out_pages)
 from repro.serving.prefix_cache import PrefixCache, PrefixHit
-from repro.serving.scheduler import (DONE, PREEMPTED, PREFILLING, QUEUED,
-                                     REJECTED, RUNNING, FIFOScheduler,
+from repro.serving.scheduler import (CANCELLED, DONE, FAILED, PREEMPTED,
+                                     PREFILLING, QUEUED, REJECTED, RUNNING,
+                                     TIMEOUT, FIFOScheduler,
                                      PriorityScheduler, ServeRequest,
                                      slo_summary, summarize)
 from repro.serving.state import (PagedKVState, SlotRowState, StateGeometry,
                                  StateTree, build_state_tree,
                                  stack_is_stateable)
+from repro.serving.watchdog import Watchdog, WatchdogConfig, WatchdogError
 
 __all__ = [
     "PagedEngine", "JitCounter", "PageAllocator", "FIFOScheduler",
@@ -34,8 +39,12 @@ __all__ = [
     "ceil_pages", "make_pool", "scatter_prefill",
     "reset_pages", "gather_pages", "copy_page", "COPY_NONE", "PoolLayout",
     "pool_layout", "modeled_decode_bytes", "swap_out_pages", "swap_in_pages",
+    "SwapIntegrityError", "snapshot_digest",
     "PrefixCache", "PrefixHit",
     "PagedKVState", "SlotRowState", "StateGeometry", "StateTree",
     "build_state_tree", "stack_is_stateable",
+    "FaultPlan", "FaultEvent", "FaultInjected",
+    "Watchdog", "WatchdogConfig", "WatchdogError",
     "QUEUED", "PREFILLING", "RUNNING", "PREEMPTED", "DONE", "REJECTED",
+    "TIMEOUT", "CANCELLED", "FAILED",
 ]

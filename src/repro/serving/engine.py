@@ -36,16 +36,22 @@ a time (DESIGN.md §11).
 
 from __future__ import annotations
 
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
-from repro.serving.paged_kv import COPY_NONE
+from repro.runtime.fault_tolerance import Heartbeat, StragglerDetector
+from repro.serving.faults import FaultPlan
+from repro.serving.paged_kv import COPY_NONE, SwapIntegrityError
 from repro.serving.prefix_cache import PrefixCache, PrefixHit
-from repro.serving.scheduler import (PREFILLING, RUNNING, FIFOScheduler,
-                                     ServeRequest, slo_summary, summarize)
+from repro.serving.scheduler import (CANCELLED, FAILED, PREFILLING, RUNNING,
+                                     TIMEOUT, FIFOScheduler, ServeRequest,
+                                     slo_summary, summarize)
 from repro.serving.state import build_state_tree, stack_is_stateable
+from repro.serving.watchdog import Watchdog, WatchdogConfig
 
 
 class JitCounter:
@@ -127,7 +133,12 @@ class PagedEngine:
                  max_queue: int = 64, temperature: float = 0.0, seed: int = 0,
                  overcommit: float = 1.0, decode_kernel: str | None = None,
                  prefix_cache: bool = False, preempt: bool = False,
-                 aging_s: float = 30.0, slo_ttft_s=None, slo_e2e_s=None):
+                 aging_s: float = 30.0, slo_ttft_s=None, slo_e2e_s=None,
+                 pool_pages: int | None = None,
+                 deadline_s: float | None = None,
+                 watchdog: WatchdogConfig | bool | None = None,
+                 faults: FaultPlan | None = None,
+                 heartbeat: Heartbeat | str | None = None):
         from repro.kernels import paged_attention as _pa
         cfg = model.cfg
         if not self.supports(model):   # the one eligibility predicate
@@ -169,8 +180,28 @@ class PagedEngine:
         # --- the uniform state tree ---------------------------------------
         self.state = build_state_tree(model, slots=slots,
                                       page_size=page_size, max_len=max_len,
-                                      overcommit=overcommit)
+                                      overcommit=overcommit,
+                                      pool_pages=pool_pages)
         self.pools = self.state.init_device()
+
+        # --- fault tolerance (DESIGN.md §14) --------------------------------
+        # The watchdog instance always exists (it owns the step-fault
+        # recovery policy); periodic invariant sweeps only run when the
+        # caller opted in (`watchdog=True` or an explicit config).
+        self.default_deadline_s = deadline_s
+        self.faults = faults
+        self.watchdog_enabled = bool(watchdog)
+        cfg_wd = watchdog if isinstance(watchdog, WatchdogConfig) else \
+            WatchdogConfig()
+        if not self.watchdog_enabled:
+            cfg_wd = WatchdogConfig(cadence=0,
+                                    max_retries=cfg_wd.max_retries,
+                                    backoff_ticks=cfg_wd.backoff_ticks,
+                                    quarantine_ticks=cfg_wd.quarantine_ticks)
+        self.watchdog = Watchdog(self, cfg_wd)
+        self.heartbeat = Heartbeat(heartbeat, interval_s=1.0) \
+            if isinstance(heartbeat, str) else heartbeat
+        self.straggler = StragglerDetector()
 
         # --- prefix cache (DESIGN.md §12) ---------------------------------
         # Enabled only when every layer state is cacheable (full-attention
@@ -239,6 +270,11 @@ class PagedEngine:
         self._pos = np.zeros((slots,), np.int32)
         self._emit_step = np.zeros((slots,), np.int64)
         self._rid = 0
+        self.ticks = 0              # step() calls, program or not — the
+        #                             clock faults/backoff/quarantine key on
+        #                             (keying on `steps` would livelock
+        #                             run_until_idle while everything queued
+        #                             is backing off: no program, no step)
         self.steps = 0              # programs run (mixed + pure decode)
         self.decode_steps = 0       # steps that advanced >= 1 decode slot
         self._issued = 0            # real tokens issued across all steps
@@ -248,15 +284,23 @@ class PagedEngine:
         self._cow_forks = 0         # copy-on-write page forks performed
         self.preemptions = 0        # slots swapped out to host
         self.resumes = 0            # preempted requests swapped back in
+        self.recovered = 0          # step faults survived via requeue
+        self.timeouts = 0           # requests expired past their deadline
+        self.cancels = 0            # requests cancelled by their caller
+        self.unservable = 0         # queue heads failed as never-admittable
+        self.swap_rejects = 0       # corrupted snapshots rejected at swap-in
 
     # ---------------------------------------------------------------- API
     def submit(self, prompt, max_new: int, rid: int | None = None,
-               priority: int = 0) -> ServeRequest:
+               priority: int = 0,
+               deadline_s: float | None = None) -> ServeRequest:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if rid is None:
             rid, self._rid = self._rid, self._rid + 1
         req = ServeRequest(rid=rid, prompt=prompt, max_new=int(max_new),
-                           priority=int(priority))
+                           priority=int(priority),
+                           deadline_s=deadline_s if deadline_s is not None
+                           else self.default_deadline_s)
         # all rejection classes (over-long prompt, prompt + max_new beyond
         # the KV budget, empty prompt, max_new < 1, queue full) go through
         # the scheduler's one reject path — stamped with REJECTED so the
@@ -264,20 +308,51 @@ class PagedEngine:
         self.sched.submit(req)
         return req
 
+    def cancel(self, rid: int) -> bool:
+        """Cancel request ``rid`` in *any* non-terminal lifecycle state —
+        QUEUED/PREEMPTED (in the queue), PREFILLING/RUNNING (in a slot).
+        Every resource the request held is reclaimed (page decrefs,
+        slot, host swap snapshot); partial output survives on the
+        request for the caller.  False when ``rid`` is unknown or
+        already terminal — cancellation is idempotent, never an error."""
+        req = next((r for r in self.sched.queue if r.rid == rid), None)
+        if req is None:
+            req = next((r for r in self.active
+                        if r is not None and r.rid == rid), None)
+        if req is None:
+            return False
+        self._terminate(req, CANCELLED, "cancelled by caller")
+        self.cancels += 1
+        return True
+
     def run_until_idle(self, log=None) -> dict[int, list[int]]:
         while not self.sched.idle:
             self.step()
+        if self.faults is not None:
+            # a drained engine returns every injected resource: hostage
+            # pages still held go back to their free lists
+            self.faults.drain()
+        if self.watchdog_enabled:
+            self.watchdog.sweep()   # the at-drain invariant oracle
         if log is not None:
             log(self.report())
         return {r.rid: list(r.out) for r in self.sched.done}
 
     # ------------------------------------------------------------- engine
     def step(self) -> None:
-        """One scheduler iteration: admit the queue head into a free slot
-        (page claim at first chunk), then issue one fixed-shape program —
-        the mixed step (every live decode slot + at most one prefill
-        chunk, decode accounted against the budget first) when a chunk
-        fits, the pure fused-kernel decode step otherwise."""
+        """One scheduler iteration: expire deadlines, admit the queue
+        head into a free slot (page claim at first chunk), then issue
+        one fixed-shape program — the mixed step (every live decode slot
+        + at most one prefill chunk, decode accounted against the
+        budget first) when a chunk fits, the pure fused-kernel decode
+        step otherwise.  A fault injected at the pre-program seam is
+        handed to the watchdog's recovery policy instead of crashing
+        the batch (DESIGN.md §14)."""
+        self.ticks += 1
+        if self.faults is not None:
+            self.faults.on_tick(self)
+        self._expire()
+        self.watchdog.maybe_sweep()
         self._admit()
         dec = [i for i, r in enumerate(self.active)
                if r is not None and r.state == RUNNING]
@@ -293,11 +368,76 @@ class PagedEngine:
                 pf = None
         if not dec and pf is None:
             return
+        if self.faults is not None:
+            # the pre-program seam: slots are selected but the jitted call
+            # has not consumed (donated) the pools, so a fault raised here
+            # is fully recoverable — swap the offending slot out and retry
+            try:
+                self.faults.before_program(self)
+            except Exception as e:   # noqa: BLE001 — any injected fault
+                self._recover(e, dec, pf)
+                return
+        t0 = time.perf_counter()
         self.steps += 1
         if pf is not None:
             self._mixed_step(dec, pf)
         else:
             self._decode_step(dec)
+        dt = time.perf_counter() - t0
+        self.straggler.record(dt)
+        if self.heartbeat is not None:
+            self.heartbeat.beat(self.ticks, steps=self.steps,
+                                queued=len(self.sched.queue),
+                                running=len(self.sched.running),
+                                done=len(self.sched.done))
+
+    # ------------------------------------------------- failure edges (§14)
+    def _expire(self) -> None:
+        """Terminate every request past its wall-clock deadline, in any
+        non-terminal state: queued (incl. PREEMPTED — its snapshot is
+        dropped) or live in a slot (pages released, slot freed)."""
+        now = self.sched.clock()
+        stale = [r for r in list(self.sched.queue)
+                 + [r for r in self.active if r is not None]
+                 if r.deadline_s is not None
+                 and now - r.t_submit > r.deadline_s]
+        for req in stale:
+            self._terminate(req, TIMEOUT,
+                            f"deadline {req.deadline_s:g}s exceeded")
+            self.timeouts += 1
+
+    def _terminate(self, req: ServeRequest, status: str,
+                   error: str | None = None) -> None:
+        """One reclamation path for every abnormal end: release the slot's
+        pages/rows if the request holds one (decrefs shared pages — the
+        prefix cache keeps its own holds), then hand the bookkeeping to
+        the scheduler.  Eager host work only: no fourth program."""
+        slot = req.slot
+        if slot >= 0 and self.active[slot] is req:
+            self.active[slot] = None
+            self.state.release(slot)
+            self._push_tables()
+        self.sched.terminate(req, status, error)
+
+    def _recover(self, exc: Exception, dec: list[int],
+                 pf: int | None) -> None:
+        """The step-fault handler: the watchdog decides retry vs fail for
+        the offending slot's request (the prefilling slot when one was
+        selected — prefill drives the step — else the first decode
+        slot).  Retry rides the existing PREEMPTED machinery: swap out,
+        requeue with backoff (``hold_until_tick``), quarantine the slot;
+        resume is the standard admission-gate swap-in.  Retries
+        exhausted means FAILED, never a crashed batch."""
+        slot = pf if pf is not None else dec[0]
+        req = self.active[slot]
+        verdict = self.watchdog.on_step_fault(req, exc)
+        if verdict == "retry":
+            self.preempt(slot)
+            self.recovered += 1
+        else:
+            self._terminate(req, FAILED,
+                            f"retries exhausted after {req.retries - 1} "
+                            f"recoveries ({req.error})")
 
     def _admit(self) -> None:
         # Chunks issue one per step, so at most one request prefills at a
@@ -308,7 +448,7 @@ class PagedEngine:
         # one class) — and with preemption enabled, a head of a strictly
         # higher class than some active request may swap a victim out to
         # host rather than wait behind it.
-        head = self.sched.head()
+        head = self.sched.head(self.ticks)
         if head is None:
             return
         if self.preempt_enabled and self._blocked(head):
@@ -318,10 +458,11 @@ class PagedEngine:
                 self.preempt(victim.slot)
         if any(r is not None and r.state == PREFILLING for r in self.active):
             return
-        free = [i for i, a in enumerate(self.active) if a is None]
+        free = self.watchdog.usable_slots(
+            [i for i, a in enumerate(self.active) if a is None])
         if not free:
             return
-        head = self.sched.head()   # the preempted victim may now lead
+        head = self.sched.head(self.ticks)  # the preempted victim may lead
         if head is None:
             return
         if head.swap is not None:
@@ -334,7 +475,18 @@ class PagedEngine:
             if not self._can_admit_head(None):
                 return
             self.sched.pop(head, free[0])
-            self._resume(head)
+            try:
+                self._resume(head)
+            except SwapIntegrityError as e:
+                # a corrupted/truncated host snapshot is rejected before
+                # any device write: undo the claim (slot, pages, tables)
+                # and fail the request — never resume garbage
+                slot = head.slot
+                self.active[slot] = None
+                self.state.release(slot)
+                self._push_tables()
+                self.sched.terminate(head, FAILED, str(e))
+                self.swap_rejects += 1
             return
         # one cache lookup per admission attempt, on the head only —
         # match takes no references, so a rejected admission drops it cold
@@ -342,6 +494,20 @@ class PagedEngine:
         if self.prefix_cache is not None:
             h = self.prefix_cache.match(head.prompt)
             hit = h if h.is_hit else None
+        kept = 0
+        if hit is not None:
+            kept = len(hit.pages) - (1 if hit.fork_logical is not None else 0)
+        if not self.state.can_ever_admit(shared=kept):
+            # structurally unservable: the claim exceeds what the whole
+            # pool could supply even empty — waiting can never help, and
+            # leaving it at the head would livelock run_until_idle.
+            # Deliberately *never* keyed on transient free-page counts
+            # (live neighbours / injected exhaustion mean "wait").
+            self._terminate(head, FAILED,
+                            "unservable: the request needs more pages than "
+                            "the pool can ever supply")
+            self.unservable += 1
+            return
         if not self._can_admit_head(hit):
             return
         req = self.sched.pop(head, free[0])
@@ -426,8 +592,13 @@ class PagedEngine:
         req = self.active[slot]
         if req is None or req.state not in (PREFILLING, RUNNING):
             raise ValueError(f"slot {slot} holds nothing preemptible")
+        snap = self.state.swap_out(self.pools, slot)
+        if self.faults is not None:
+            # the swap_corrupt seam: an armed event flips one byte of
+            # this snapshot (digest left stale) — resume must reject it
+            snap = self.faults.maybe_corrupt(snap)
         req.swap = {
-            "state": self.state.swap_out(self.pools, slot),
+            "state": snap,
             "cur": int(self._cur[slot, 0]),
             "pos": int(self._pos[slot]),
             "running": req.state == RUNNING,
@@ -466,6 +637,7 @@ class PagedEngine:
         # else: PREFILLING resumes at req.prefill_pos through the normal
         # chunked mixed step — k/K progress fields survived the round trip
         req.swap = None
+        req.recovering = False   # a watchdog retry that made it back in
         self.resumes += 1
 
     def _mixed_step(self, dec: list[int], pf: int) -> None:
@@ -600,6 +772,18 @@ class PagedEngine:
             "preempt": self.preempt_enabled,
             "preemptions": self.preemptions,
             "resumes": self.resumes,
+            "ticks": self.ticks,
+            "recovered": self.recovered,
+            "timeouts": self.timeouts,
+            "cancels": self.cancels,
+            "unservable": self.unservable,
+            "swap_rejects": self.swap_rejects,
+            "failed_total": len(self.sched.failed),
+            "straggler_steps": self.straggler.flagged,
+            "watchdog": self.watchdog.stats() if self.watchdog_enabled
+            else None,
+            "faults": self.faults.stats() if self.faults is not None
+            else None,
             "slo": self.slo(),
         }
 
@@ -611,7 +795,8 @@ class PagedEngine:
 
     def report(self) -> str:
         s = self.stats()
-        m = summarize(self.sched.done + self.sched.rejected)
+        m = summarize(self.sched.done + self.sched.rejected
+                      + self.sched.failed)
         cache = ""
         if s["prefix_cache"]:
             cache = (f"| prefix hit rate={s['prefix_hit_rate'] * 100:.1f}% "
@@ -621,6 +806,12 @@ class PagedEngine:
         if self.preempt_enabled:
             pre = (f"| preemptions={s['preemptions']} "
                    f"(resumes={s['resumes']}) ")
+        ft = ""
+        if (self.faults is not None or self.watchdog_enabled
+                or s["failed_total"] or s["timeouts"] or s["cancels"]):
+            ft = (f"| faults: recovered={s['recovered']} "
+                  f"timeout={s['timeouts']} cancelled={s['cancels']} "
+                  f"failed={s['failed_total'] - s['timeouts'] - s['cancels']} ")
         slo = ""
         for cls, ent in sorted(s["slo"].items()):
             seg = (f"p{cls}: ttft p50/p99="
@@ -640,6 +831,6 @@ class PagedEngine:
                 f"| prefill retraces={s['prefill_retraces']} "
                 f"decode retraces={s['decode_retraces']} "
                 f"| max decode stall={s['max_decode_stall']} steps "
-                f"{cache}{pre}{slo}"
+                f"{cache}{pre}{ft}{slo}"
                 f"| budget util={s['budget_util'] * 100:.1f}% "
                 f"(chunk={s['chunk']}, budget={s['step_budget']})")

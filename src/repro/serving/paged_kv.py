@@ -29,6 +29,7 @@ position-based attention mask keeps the result exact as long as
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import NamedTuple
 
 import jax
@@ -154,6 +155,33 @@ class PageAllocator:
         """Whether a slot claim fits, given ``shared`` of its pages come
         from the prefix cache (free of charge)."""
         return len(self._free) >= max(0, self.pages_per_slot - shared)
+
+    def can_ever_alloc(self, *, shared: int = 0) -> bool:
+        """Whether a slot claim could fit even with the *whole* pool free —
+        the structural half of admission (DESIGN.md §14).  False means the
+        claim is unservable: no amount of waiting, eviction, or draining
+        will ever produce enough pages, so the engine must fail the
+        request instead of spinning on it at the queue head forever.
+        (Transient exhaustion — pages held by live slots, the prefix
+        cache, or an injected fault — keeps this True: the pool *can*
+        supply the claim once they drain.)"""
+        return self.pages_per_slot - shared <= self.n_pages
+
+    def owned_slots(self) -> set[int]:
+        """Slots currently holding a page claim (the watchdog's
+        scheduler/allocator consistency oracle compares this against the
+        engine's active set)."""
+        return set(self._owned)
+
+    def owned_page_counts(self) -> np.ndarray:
+        """Per-page count of slot-row mappings — the slot half of the
+        refcount oracle: ``refcount == owned_page_counts() + cache
+        holds`` exactly (watchdog sweep, DESIGN.md §14)."""
+        counts = np.zeros((self.n_pages,), np.int32)
+        for pages in self._owned.values():
+            for p in pages:
+                counts[p] += 1
+        return counts
 
     def alloc(self, slot: int, shared=()) -> list[int]:
         """Claim pages for ``slot``; raises if the slot is live or the pool
@@ -416,6 +444,28 @@ def swap_in_pages(pool: PagedKVCache, pages, blob: dict) -> PagedKVCache:
         page_table=pool.page_table,
         k_scale=ksc, v_scale=vsc,
     )
+
+
+class SwapIntegrityError(RuntimeError):
+    """A preempt-to-host snapshot failed validation at swap-in: its
+    content digest does not match what swap-out recorded (bit corruption,
+    truncation, or a structurally different blob).  Raised *before* any
+    device write, so the pools and the allocator invariants are exactly
+    what they were — the engine fails the request cleanly instead of
+    silently resuming garbage (DESIGN.md §14)."""
+
+
+def snapshot_digest(blobs) -> bytes:
+    """Content digest of a swap snapshot tree: blake2b over every leaf
+    array's shape, dtype, and bytes, in tree order.  Any flipped byte,
+    truncated array, or missing/extra leaf changes the digest, so
+    ``swap_in`` can reject a damaged blob outright."""
+    h = hashlib.blake2b(digest_size=16)
+    for leaf in jax.tree_util.tree_leaves(blobs):
+        a = np.ascontiguousarray(np.asarray(leaf))
+        h.update(repr((a.shape, str(a.dtype))).encode())
+        h.update(a.tobytes())
+    return h.digest()
 
 
 def gather_pages(pool: PagedKVCache) -> tuple[jax.Array, jax.Array, jax.Array]:

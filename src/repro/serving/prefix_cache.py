@@ -211,6 +211,16 @@ class PrefixCache:
             evicted += 1
         return evicted
 
+    def page_refs(self) -> np.ndarray:
+        """Per-physical-page count of references *the cache itself* holds
+        (0 or 1 per page — the cache takes at most one hold per page).
+        The watchdog's refcount oracle subtracts these from the
+        allocator's refcounts to reconcile against slot-table ownership."""
+        refs = np.zeros(self.alloc.n_pages, dtype=np.int32)
+        for ent in self._entries.values():
+            refs[ent.page] += 1
+        return refs
+
     def check(self) -> None:
         """Cache-side structural invariants (the property suite's oracle):
         every cached page is live in the allocator, chains are closed under

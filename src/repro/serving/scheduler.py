@@ -8,6 +8,10 @@ Request lifecycle::
              -> REJECTED   (queue full / empty prompt / max_new < 1 /
                             prompt exceeds capacity)
     RUNNING/PREFILLING -> PREEMPTED -> (re-admit: swap-in) -> ... -> DONE
+    any non-terminal state -> TIMEOUT   (deadline_s exceeded)
+                           -> CANCELLED (engine.cancel(rid))
+                           -> FAILED    (watchdog retries exhausted /
+                                         corrupted swap / unservable head)
 
 Admission is **priority-ordered with aging**: every request carries a
 priority class (0 = most urgent; any small non-negative int), and the
@@ -48,6 +52,16 @@ RUNNING = "running"
 PREEMPTED = "preempted"
 DONE = "done"
 REJECTED = "rejected"
+# terminal failure states (DESIGN.md §14): a request that ran out of
+# wall-clock budget, was cancelled by its caller, or exhausted the
+# watchdog's retry budget — all three reclaim every resource the request
+# held (pages, prefix-cache refs, slot) and park it on `failed`
+TIMEOUT = "timeout"
+CANCELLED = "cancelled"
+FAILED = "failed"
+
+#: the abnormal-terminal set `FIFOScheduler.terminate` may stamp
+TERMINAL_FAILURES = (TIMEOUT, CANCELLED, FAILED)
 
 
 @dataclasses.dataclass
@@ -69,6 +83,13 @@ class ServeRequest:
     # preempt-to-host round trip (engine-maintained; DESIGN.md §13)
     swap: object = None               # host snapshot while PREEMPTED
     preemptions: int = 0              # times swapped out to host
+    # fault tolerance (engine-maintained; DESIGN.md §14)
+    deadline_s: float | None = None   # wall-clock budget from t_submit
+    retries: int = 0                  # watchdog requeues after step faults
+    recovering: bool = False          # requeued by the watchdog, not admitted yet
+    hold_until_tick: int = 0          # retry backoff: ineligible before this
+    #                                   engine tick (head() skips it)
+    error: str | None = None          # human-readable failure reason
     # metrics (host wall-clock seconds)
     t_submit: float = 0.0
     t_admit: float = 0.0              # first admission (queue wait anchor)
@@ -115,6 +136,7 @@ class FIFOScheduler:
         self.rejected: list[ServeRequest] = []
         self.running: dict[int, ServeRequest] = {}   # slot -> request
         self.done: list[ServeRequest] = []
+        self.failed: list[ServeRequest] = []   # TIMEOUT/CANCELLED/FAILED
 
     def submit(self, req: ServeRequest) -> bool:
         """Queue ``req``; False (state=REJECTED) when the queue is at
@@ -149,14 +171,19 @@ class FIFOScheduler:
             return float(req.priority)
         return req.priority - (now - req.t_submit) / self.aging_s
 
-    def head(self) -> ServeRequest | None:
+    def head(self, tick: int | None = None) -> ServeRequest | None:
         """The most urgent queued request (lowest effective priority;
         FIFO within a class) — the one admission candidate.  O(queue),
-        which is fine at serving queue depths."""
-        if not self.queue:
+        which is fine at serving queue depths.  ``tick`` (the engine's
+        step-attempt counter) filters out requests still inside their
+        watchdog retry backoff (``hold_until_tick``), so a faulting
+        request backs off without blocking the queue behind it."""
+        cands = [r for r in self.queue
+                 if tick is None or r.hold_until_tick <= tick]
+        if not cands:
             return None
         now = self.clock()
-        return min(self.queue,
+        return min(cands,
                    key=lambda r: (self.effective_priority(r, now),
                                   r.t_submit, r.rid))
 
@@ -221,6 +248,26 @@ class FIFOScheduler:
         req.slot = -1
         self.done.append(req)
 
+    def terminate(self, req: ServeRequest, status: str,
+                  error: str | None = None) -> None:
+        """Abnormal completion (DESIGN.md §14): stamp ``status`` (one of
+        ``TIMEOUT``/``CANCELLED``/``FAILED``) and remove the request from
+        wherever it currently lives — the queue (QUEUED or PREEMPTED) or
+        the running map — dropping any host swap snapshot.  The *engine*
+        owns releasing device-side resources (pages/rows) before calling
+        this; the scheduler only owns the bookkeeping."""
+        if status not in TERMINAL_FAILURES:
+            raise ValueError(f"not a terminal failure status: {status!r}")
+        if req in self.queue:
+            self.queue.remove(req)
+        self.running.pop(req.slot, None)
+        req.state = status
+        req.error = error
+        req.swap = None               # a dropped snapshot frees its host copy
+        req.t_done = self.clock()
+        req.slot = -1
+        self.failed.append(req)
+
     @property
     def idle(self) -> bool:
         return not self.queue and not self.running
@@ -284,11 +331,20 @@ def slo_summary(requests: list[ServeRequest], *, ttft_target_s=None,
     return out
 
 
+def _failure_counts(requests: list[ServeRequest]) -> dict:
+    return {
+        "rejected": sum(r.state == REJECTED for r in requests),
+        "timeout": sum(r.state == TIMEOUT for r in requests),
+        "cancelled": sum(r.state == CANCELLED for r in requests),
+        "failed": sum(r.state == FAILED for r in requests),
+    }
+
+
 def summarize(requests: list[ServeRequest]) -> dict:
     """Aggregate per-request metrics into an engine-level report."""
     done = [r for r in requests if r.state == DONE]
     if not done:
-        return {"done": 0, "rejected": sum(r.state == REJECTED for r in requests)}
+        return {"done": 0, **_failure_counts(requests)}
     t0 = min(r.t_submit for r in done)
     t1 = max(r.t_done for r in done)
     toks = sum(len(r.out) for r in done)
@@ -298,7 +354,7 @@ def summarize(requests: list[ServeRequest]) -> dict:
     dec = [r.decode_tok_s for r in done if len(r.out) > 1]
     return {
         "done": len(done),
-        "rejected": sum(r.state == REJECTED for r in requests),
+        **_failure_counts(requests),
         "preemptions": sum(r.preemptions for r in done),
         "tokens": toks,
         "wall_s": t1 - t0,

@@ -59,9 +59,11 @@ import jax.numpy as jnp
 
 from repro.models import transformer as T
 from repro.models.layers import PagedKVCache
-from repro.serving.paged_kv import (PageAllocator, ceil_pages, copy_page,
-                                    make_pool, reset_pages, scatter_prefill,
-                                    swap_in_pages, swap_out_pages)
+from repro.serving.paged_kv import (PageAllocator, SwapIntegrityError,
+                                    ceil_pages, copy_page, make_pool,
+                                    reset_pages, scatter_prefill,
+                                    snapshot_digest, swap_in_pages,
+                                    swap_out_pages)
 
 import numpy as np
 
@@ -356,15 +358,31 @@ class StateTree:
         states — structured exactly like the device tree, so
         :meth:`swap_in` is the structural inverse.  Call *before*
         releasing the slot (the paged states read their current table
-        rows)."""
-        return self.map_device(lambda st, pl: st.swap_out(pl, slot), pools)
+        rows).  The snapshot carries a content digest
+        (:func:`~repro.serving.paged_kv.snapshot_digest`) so a blob that
+        was corrupted or truncated while parked on host — or on a disk /
+        network hop in between — is rejected at :meth:`swap_in` instead
+        of silently resuming garbage."""
+        blobs = self.map_device(lambda st, pl: st.swap_out(pl, slot), pools)
+        return {"blobs": blobs, "digest": snapshot_digest(blobs)}
 
-    def swap_in(self, pools, slot: int, blobs):
+    def swap_in(self, pools, slot: int, snap):
         """Restore a :meth:`swap_out` snapshot into ``slot``'s freshly
         claimed pages/rows (call *after* ``admit``).  Eager device writes
-        — never part of the engine's three jitted programs."""
+        — never part of the engine's three jitted programs.  Validates
+        the snapshot's content digest *before* touching any device
+        buffer and raises :class:`SwapIntegrityError` on mismatch, so a
+        rejected blob leaves the pools and the allocator invariants
+        exactly as they were."""
+        if not isinstance(snap, dict) or "blobs" not in snap:
+            raise SwapIntegrityError(
+                "swap snapshot is structurally invalid (no blobs)")
+        if snap.get("digest") != snapshot_digest(snap["blobs"]):
+            raise SwapIntegrityError(
+                "swap snapshot digest mismatch — the blob was corrupted "
+                "or truncated while parked on host")
         return self.map_device(
-            lambda st, pl, b: st.swap_in(pl, slot, b), pools, blobs)
+            lambda st, pl, b: st.swap_in(pl, slot, b), pools, snap["blobs"])
 
     # ---- admission: every layer's capacity vote, through the protocol -------
     def can_admit(self, *, shared: int = 0) -> bool:
@@ -373,6 +391,16 @@ class StateTree:
         request with a cached prefix only needs the remainder — a shared
         page is never double-charged against admission."""
         return all(st.can_alloc(shared=shared) for st in self.leaves())
+
+    def can_ever_admit(self, *, shared: int = 0) -> bool:
+        """Structural servability of a full-row claim: whether an
+        *otherwise empty* engine could ever grant it.  Pure pool
+        geometry — never transient free-page counts — so a temporarily
+        exhausted pool (live neighbours, injected faults) means "wait",
+        and only a claim no drain can satisfy means "fail" (the
+        ``run_until_idle`` livelock guard, DESIGN.md §14)."""
+        return all(a.can_ever_alloc(shared=shared)
+                   for a in self.allocators.values())
 
     def admit(self, slot: int, shared=()) -> None:
         for st in self.leaves():
@@ -422,9 +450,15 @@ def _ring_len(window: int, max_len: int) -> int:
 
 
 def build_state_tree(model, *, slots: int, page_size: int, max_len: int,
-                     overcommit: float = 1.0) -> StateTree:
+                     overcommit: float = 1.0,
+                     pool_pages: int | None = None) -> StateTree:
     """One LayerState per layer of the flat stack, sharing a
-    :class:`PageAllocator` per distinct pool ring length."""
+    :class:`PageAllocator` per distinct pool ring length.
+
+    ``pool_pages`` hard-caps every allocator's pool size — below
+    ``pages_per_slot`` it makes a full-length prompt structurally
+    unservable, which is exactly what the engine's unservable-head
+    guard (and its tests) need to exercise."""
     cfg = model.cfg
     stack = model.stack
     if not stack_is_stateable(model):
@@ -437,10 +471,13 @@ def build_state_tree(model, *, slots: int, page_size: int, max_len: int,
         attn_windows.append(0)   # zamba2's shared block: full attention
     group_pps = sorted({ceil_pages(_ring_len(w, max_len), page_size)
                         for w in attn_windows})
+    def _pool_size(pps: int) -> int:
+        n = max(pps, int(np.ceil(slots * pps * overcommit)))
+        return min(n, pool_pages) if pool_pages is not None else n
+
     allocators = {
-        pps: PageAllocator(
-            n_pages=max(pps, int(np.ceil(slots * pps * overcommit))),
-            pages_per_slot=pps, n_slots=slots)
+        pps: PageAllocator(n_pages=_pool_size(pps),
+                           pages_per_slot=pps, n_slots=slots)
         for pps in group_pps}
 
     def state_for(slot: T.Slot):

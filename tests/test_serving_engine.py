@@ -177,7 +177,8 @@ def test_rejected_request_metrics():
     assert full.state == REJECTED
     # nothing ran yet: summarize must still report the rejects
     m0 = summarize(eng.sched.done + eng.sched.rejected)
-    assert m0 == {"done": 0, "rejected": 3}
+    assert m0 == {"done": 0, "rejected": 3,
+                  "timeout": 0, "cancelled": 0, "failed": 0}
     eng.run_until_idle()
     m = summarize(eng.sched.done + eng.sched.rejected)
     assert m["done"] == 1 and m["rejected"] == 3
