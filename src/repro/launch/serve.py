@@ -30,6 +30,14 @@ token-identical to a fault-free replay), ``--watchdog`` runs periodic +
 at-drain invariant sweeps, and ``--heartbeat PATH`` writes a liveness
 file an external orchestrator can poll.
 
+Speculative decoding (DESIGN.md §15): ``--speculate K`` drafts up to K
+tokens per decoding slot from the request's own committed history (n-gram
+prompt lookup — no second model) and verifies them inside the very same
+mixed chunk program (the engine still compiles exactly three programs);
+rejected drafts roll back via ``LayerState.truncate``.  Greedy only.
+``--verify-speculate`` replays the workload through a speculation-off
+engine and asserts token identity.
+
 The legacy dense-cache continuous-batching loop (and its ``--dense``
 escape hatch) was deleted; its sequential per-request form survives only
 as the equivalence oracle in ``tests/test_serving_engine.py``.
@@ -172,6 +180,15 @@ def main(argv=None) -> int:
                         "reported per pass)")
     p.add_argument("--slo-e2e-ms", type=float, default=None,
                    help="end-to-end latency SLO target in ms")
+    p.add_argument("--speculate", type=int, default=0, metavar="K",
+                   help="draft up to K tokens per decoding slot from the "
+                        "request's committed history (n-gram prompt "
+                        "lookup) and verify them in the mixed chunk step; "
+                        "greedy only (DESIGN.md §15)")
+    p.add_argument("--verify-speculate", action="store_true",
+                   help="replay every submission through a fresh "
+                        "speculation-off engine and assert token identity "
+                        "(greedy only)")
     p.add_argument("--verify-preempt", action="store_true",
                    help="replay every submission through a fresh "
                         "preempt-off engine and assert token identity "
@@ -263,12 +280,14 @@ def main(argv=None) -> int:
                       prefix_cache=args.prefix_cache,
                       preempt=args.preempt,
                       deadline_s=args.deadline_s, watchdog=args.watchdog,
-                      faults=plan, heartbeat=args.heartbeat, **slo_kw)
+                      faults=plan, heartbeat=args.heartbeat,
+                      speculate=args.speculate, **slo_kw)
     print(f"# paged decode kernel: {eng.decode_kernel} "
           f"chunk={eng.chunk} step budget={eng.step_budget}"
           + (f" prefix cache={'on' if eng.prefix_cache is not None else 'off'}"
              if args.prefix_cache else "")
           + (" preempt=on" if args.preempt else "")
+          + (f" speculate={eng.speculate}" if args.speculate else "")
           + (" watchdog=on" if args.watchdog else "")
           + (f" faults[{args.faults}]" if args.faults else ""))
     done = {}
@@ -291,6 +310,24 @@ def main(argv=None) -> int:
         print(f"req {rid}: {done[rid][:8]}...")
     expected = args.requests * max(1, args.repeat)
     print(f"served {len(done)}/{expected} requests")
+    if args.verify_speculate:
+        # replay the exact submissions through a fresh engine with
+        # speculation off: accepted drafts must reproduce the greedy chain
+        # token for token — speculation changes latency, never output
+        ref_eng = PagedEngine(model, params, slots=args.slots,
+                              page_size=args.page_size,
+                              max_len=args.cache_len, chunk=args.chunk,
+                              step_budget=args.step_budget,
+                              decode_kernel=args.paged_kernel,
+                              prefix_cache=args.prefix_cache)
+        for rid, prompt, max_new, prio in subs:
+            ref_eng.submit(prompt, max_new, rid=rid, priority=prio)
+        ref = ref_eng.run_until_idle()
+        bad = [rid for rid, *_ in subs if done.get(rid) != ref.get(rid)]
+        if bad:
+            print(f"speculate token-identity: FAIL (requests {bad})")
+            return 1
+        print(f"speculate token-identity: ok ({len(subs)} requests)")
     if args.verify_preempt:
         # replay the exact submissions through a fresh engine with
         # preemption off: a preempted request's output must be

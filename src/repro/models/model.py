@@ -226,7 +226,8 @@ class Model:
 
     def chunk_step(self, params: Params, caches, tokens: jax.Array,
                    positions: jax.Array, lengths: jax.Array,
-                   frontend: jax.Array | None = None):
+                   frontend: jax.Array | None = None,
+                   return_greedy: bool = False):
         """One *mixed* continuous-batching step: tokens [B, S], positions
         [B, S] absolute per-slot (row ``b`` holds ``start_b + arange(S)``),
         lengths [B] = real tokens per row this step.
@@ -237,6 +238,13 @@ class Model:
         any mix of request phases: the scheduler-level restatement of the
         paper's one-uniform-dataflow thesis (DESIGN.md §11).  Returns
         (per-row logits at column ``lengths - 1`` [B, V], new caches).
+
+        ``return_greedy=True`` additionally returns the per-column argmax
+        chain ``[B, S] int32`` (``greedy[b, j]`` = the greedy next token
+        after row ``b``'s tokens ``0..j``) — what speculative verify
+        accepts drafts against (DESIGN.md §15).  The argmax rides the
+        logits the chunk already computed, so verify is this very program,
+        not a fourth one.
         """
         positions = jnp.asarray(positions, jnp.int32)
         if positions.ndim != 2:
@@ -248,6 +256,9 @@ class Model:
                                          caches=caches)
         idx = jnp.clip(lengths - 1, 0)[:, None, None]
         last = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
+        if return_greedy:
+            greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return last, greedy, caches
         return last, caches
 
 

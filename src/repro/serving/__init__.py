@@ -21,13 +21,14 @@ from repro.serving.paged_kv import (COPY_NONE, PageAllocator, PoolLayout,
                                     modeled_decode_bytes, pool_layout,
                                     reset_pages, scatter_prefill,
                                     snapshot_digest, swap_in_pages,
-                                    swap_out_pages)
+                                    swap_out_pages, truncate_pages)
 from repro.serving.prefix_cache import PrefixCache, PrefixHit
 from repro.serving.scheduler import (CANCELLED, DONE, FAILED, PREEMPTED,
                                      PREFILLING, QUEUED, REJECTED, RUNNING,
                                      TIMEOUT, FIFOScheduler,
                                      PriorityScheduler, ServeRequest,
                                      slo_summary, summarize)
+from repro.serving.speculative import Drafter, NGramDrafter, greedy_accept
 from repro.serving.state import (PagedKVState, SlotRowState, StateGeometry,
                                  StateTree, build_state_tree,
                                  stack_is_stateable)
@@ -39,8 +40,9 @@ __all__ = [
     "ceil_pages", "make_pool", "scatter_prefill",
     "reset_pages", "gather_pages", "copy_page", "COPY_NONE", "PoolLayout",
     "pool_layout", "modeled_decode_bytes", "swap_out_pages", "swap_in_pages",
-    "SwapIntegrityError", "snapshot_digest",
+    "SwapIntegrityError", "snapshot_digest", "truncate_pages",
     "PrefixCache", "PrefixHit",
+    "Drafter", "NGramDrafter", "greedy_accept",
     "PagedKVState", "SlotRowState", "StateGeometry", "StateTree",
     "build_state_tree", "stack_is_stateable",
     "FaultPlan", "FaultEvent", "FaultInjected",

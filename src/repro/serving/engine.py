@@ -50,6 +50,7 @@ from repro.serving.prefix_cache import PrefixCache, PrefixHit
 from repro.serving.scheduler import (CANCELLED, FAILED, PREFILLING, RUNNING,
                                      TIMEOUT, FIFOScheduler, ServeRequest,
                                      slo_summary, summarize)
+from repro.serving.speculative import Drafter, NGramDrafter, greedy_accept
 from repro.serving.state import build_state_tree, stack_is_stateable
 from repro.serving.watchdog import Watchdog, WatchdogConfig
 
@@ -138,7 +139,8 @@ class PagedEngine:
                  deadline_s: float | None = None,
                  watchdog: WatchdogConfig | bool | None = None,
                  faults: FaultPlan | None = None,
-                 heartbeat: Heartbeat | str | None = None):
+                 heartbeat: Heartbeat | str | None = None,
+                 speculate: int = 0, drafter: Drafter | None = None):
         from repro.kernels import paged_attention as _pa
         cfg = model.cfg
         if not self.supports(model):   # the one eligibility predicate
@@ -168,6 +170,20 @@ class PagedEngine:
                 "the full decode load")
         self.temperature = temperature
         self._key = jax.random.key(seed)
+        # --- speculative decoding (DESIGN.md §15) --------------------------
+        # Greedy-only: the accept walk compares drafts against the argmax
+        # chain, which *is* the sampled stream only at temperature 0 —
+        # anything else would silently change the output distribution.
+        self.speculate = int(speculate)
+        if self.speculate < 0:
+            raise ValueError("speculate must be >= 0")
+        if self.speculate and temperature > 0:
+            raise ValueError(
+                "speculative decoding is greedy-only: the accept rule "
+                "matches drafts against the argmax chain, so speculate > 0 "
+                "requires temperature == 0")
+        self.drafter: Drafter | None = drafter if drafter is not None \
+            else (NGramDrafter() if self.speculate else None)
         # priority scheduling + preempt-to-host (DESIGN.md §13): the
         # scheduler owns the policy (aged priority order, victim choice),
         # the engine owns the mechanism (swap-out/swap-in through the
@@ -183,6 +199,18 @@ class PagedEngine:
                                       overcommit=overcommit,
                                       pool_pages=pool_pages)
         self.pools = self.state.init_device()
+        # Draft-write ring clamp (DESIGN.md §15): a committed write past a
+        # ring's logical length wraps by design, but a *rejected draft*
+        # that wrapped has already destroyed history the rolled-back
+        # state still needs — unrecoverable.  So drafts are only granted
+        # while every fed position stays below the smallest paged ring
+        # (full-attention pools never bind: admission caps positions at
+        # max_len <= logical; sliding-window pools stop drafting at the
+        # first wrap and fall back to plain decode).  Row-only trees
+        # (pure recurrent) have no ring to protect.
+        rings = [ring for (_, ring, _, _) in self.state.paged_geoms()]
+        self._draft_ring = min(rings) if rings else None
+        self._has_rows = self.state.has_rows
 
         # --- fault tolerance (DESIGN.md §14) --------------------------------
         # The watchdog instance always exists (it owns the step-fault
@@ -228,10 +256,15 @@ class PagedEngine:
 
         # --- the engine's three compiled programs --------------------------
         def mixed_fn(params, pools, tokens, positions, lengths):
+            # always returns (last, greedy, pools): the per-column argmax
+            # chain is what speculative verify accepts drafts against,
+            # and returning it unconditionally keeps ONE mixed program
+            # shape whether or not this engine speculates (verify *is*
+            # the chunk program — DESIGN.md §15)
             view = self.state.decode_view(pools, positions[:, 0])
             with _pa.use_paged_decode_mode(self.decode_kernel):
                 return model.chunk_step(params, view, tokens, positions,
-                                        lengths)
+                                        lengths, return_greedy=True)
 
         def decode_fn(params, pools, tokens, pos, live):
             # decode_view is the protocol's per-layer hook for producing
@@ -289,6 +322,10 @@ class PagedEngine:
         self.cancels = 0            # requests cancelled by their caller
         self.unservable = 0         # queue heads failed as never-admittable
         self.swap_rejects = 0       # corrupted snapshots rejected at swap-in
+        self.spec_steps = 0         # verify steps that carried >= 1 draft
+        self.spec_drafted = 0       # draft tokens fed through verify
+        self.spec_accepted = 0      # drafts the argmax chain accepted
+        self.spec_emitted = 0       # tokens emitted by draft-carrying steps
 
     # ---------------------------------------------------------------- API
     def submit(self, prompt, max_new: int, rid: int | None = None,
@@ -358,13 +395,20 @@ class PagedEngine:
                if r is not None and r.state == RUNNING]
         pf = next((i for i, r in enumerate(self.active)
                    if r is not None and r.state == PREFILLING), None)
+        # budget ordering (DESIGN.md §11/§15): committed decode work first
+        # — one token per slot, or the slot's whole pending tail under
+        # speculation (committed tokens a rolled-back recurrent state must
+        # re-feed; never throttled, like decode itself) — then the prefill
+        # chunk from the remainder, and only leftover budget buys drafts.
+        committed = sum(self._n_pending(i) for i in dec) if self.speculate \
+            else len(dec)
         if pf is not None:
             # budget: decode slots are accounted first, and the chunk is
             # charged its *real* token count — a final partial chunk only
             # costs what remains of the prompt, not the padded width
             r = self.active[pf]
             remaining = min(self.chunk, r.prompt_len - r.prefill_pos)
-            if len(dec) + remaining > self.step_budget:
+            if committed + remaining > self.step_budget:
                 pf = None
         if not dec and pf is None:
             return
@@ -379,7 +423,11 @@ class PagedEngine:
                 return
         t0 = time.perf_counter()
         self.steps += 1
-        if pf is not None:
+        if pf is not None or (self.speculate and dec):
+            # with speculation on, decode always rides the mixed program
+            # (a speculating slot is a multi-token chunk; verify is the
+            # chunk step) — the pure decode program simply goes unused,
+            # so the engine still compiles at most three programs
             self._mixed_step(dec, pf)
         else:
             self._decode_step(dec)
@@ -640,50 +688,179 @@ class PagedEngine:
         req.recovering = False   # a watchdog retry that made it back in
         self.resumes += 1
 
-    def _mixed_step(self, dec: list[int], pf: int) -> None:
+    def _mixed_step(self, dec: list[int], pf: int | None) -> None:
         w = self.chunk
-        req = self.active[pf]
-        n = min(w, req.prompt_len - req.prefill_pos)
+        req = None
+        n = 0
+        if pf is not None:
+            req = self.active[pf]
+            n = min(w, req.prompt_len - req.prefill_pos)
         tokens = np.zeros((self.slots, w), np.int32)
         positions = np.zeros((self.slots, w), np.int32)
         lengths = np.zeros((self.slots,), np.int32)
         ar = np.arange(w, dtype=np.int32)
-        for i in dec:
-            tokens[i, 0] = self._cur[i, 0]
-            positions[i] = self._pos[i] + ar
-            lengths[i] = 1
-        start = req.prefill_pos
-        tokens[pf, :n] = req.prompt[start:start + n]
-        positions[pf] = start + ar
-        lengths[pf] = n
-        last, self.pools = self._prefill(
+        meta: dict[int, tuple[int, np.ndarray]] = {}
+        snaps: dict[int, object] = {}
+        if self.speculate and dec:
+            # verify-as-chunk packing (DESIGN.md §15): each speculating
+            # slot's row carries its committed pending tail (re-fed after
+            # a recurrent rollback; normally just the current token)
+            # followed by fresh drafts from whatever budget decode and
+            # the prefill chunk left over
+            budget = self.step_budget - n \
+                - sum(self._n_pending(i) for i in dec)
+            for i in dec:
+                pend = self._pending(i)
+                drafts = self._draft_for(i, len(pend), budget)
+                budget -= len(drafts)
+                if len(drafts) and self._has_rows:
+                    # rows can only rewind by restore — snapshot the
+                    # last-accepted state before the program consumes
+                    # (donates) the pools
+                    snaps[i] = self.state.spec_snapshot(self.pools, i)
+                row = np.concatenate([pend, drafts]) \
+                    if len(drafts) else pend
+                tokens[i, :len(row)] = row
+                positions[i] = self._pos[i] + ar
+                lengths[i] = len(row)
+                meta[i] = (len(pend), drafts)
+        else:
+            for i in dec:
+                tokens[i, 0] = self._cur[i, 0]
+                positions[i] = self._pos[i] + ar
+                lengths[i] = 1
+        if pf is not None:
+            start = req.prefill_pos
+            tokens[pf, :n] = req.prompt[start:start + n]
+            positions[pf] = start + ar
+            lengths[pf] = n
+        last, greedy, self.pools = self._prefill(
             self.params, self.pools, jnp.asarray(tokens),
             jnp.asarray(positions), jnp.asarray(lengths))
-        self._issued += len(dec) + n
+        self._issued += int(sum(lengths[i] for i in dec)) + n
         self._prefill_tok += n
         nxt = self._sample(last)
-        req.prefill_pos += n
-        req.chunks_done += 1
-        finished = self._advance_decode(dec, nxt)
-        if req.prefill_pos >= req.prompt_len:
-            # prefill complete: register the prompt's full page chunks
-            # under the cache chain (already-cached chunks just touch LRU,
-            # so a CoW fork's private copy never displaces the original)
-            if self.prefix_cache is not None:
-                self.prefix_cache.insert(
-                    req.prompt, self._cache_alloc.slot_pages(req.slot))
-            # last chunk: its top-row logits are the first token
-            req.state = RUNNING
-            req.out.append(int(nxt[pf]))
-            req.t_first = self.sched.clock()
-            self._cur[pf, 0] = int(nxt[pf])
-            self._pos[pf] = req.prompt_len
-            self._emit_step[pf] = self.steps
-            if len(req.out) >= req.max_new:   # max_new=1: done at prefill
-                self._finish(pf)
-                finished += 1
+        if meta:
+            finished = self._advance_speculative(dec, np.asarray(greedy),
+                                                 meta, snaps)
+        else:
+            finished = self._advance_decode(dec, nxt)
+        if pf is not None:
+            req.prefill_pos += n
+            req.chunks_done += 1
+            if req.prefill_pos >= req.prompt_len:
+                # prefill complete: register the prompt's full page chunks
+                # under the cache chain (already-cached chunks just touch
+                # LRU, so a CoW fork's private copy never displaces the
+                # original).  Only the *prompt* — committed tokens — ever
+                # reaches the chain; draft tokens live in decode rows and
+                # are structurally invisible here (DESIGN.md §15).
+                if self.prefix_cache is not None:
+                    self.prefix_cache.insert(
+                        req.prompt, self._cache_alloc.slot_pages(req.slot))
+                # last chunk: its top-row logits are the first token
+                req.state = RUNNING
+                req.out.append(int(nxt[pf]))
+                req.t_first = self.sched.clock()
+                self._cur[pf, 0] = int(nxt[pf])
+                self._pos[pf] = req.prompt_len
+                self._emit_step[pf] = self.steps
+                if len(req.out) >= req.max_new:  # max_new=1: done at prefill
+                    self._finish(pf)
+                    finished += 1
         if finished:
             self._push_tables()
+
+    # ------------------------------------------- speculative decode (§15)
+    def _n_pending(self, i: int) -> int:
+        """Committed tokens not yet reflected in slot ``i``'s device
+        state: the stream suffix past the write cursor.  1 in plain
+        decode (the current token); > 1 only after a recurrent rollback
+        re-queued an accepted run for re-feeding."""
+        req = self.active[i]
+        return req.prompt_len + len(req.out) - int(self._pos[i])
+
+    def _pending(self, i: int) -> np.ndarray:
+        """The committed tokens slot ``i`` must feed next, in stream
+        order — ``pending[0]`` lands at position ``_pos[i]``."""
+        req = self.active[i]
+        stream = np.concatenate(
+            [req.prompt, np.asarray(req.out, np.int32)])
+        return stream[int(self._pos[i]):].astype(np.int32)
+
+    def _draft_for(self, i: int, n_pend: int, budget: int) -> np.ndarray:
+        """Propose drafts for slot ``i`` under every clamp: the chunk
+        width (the row must fit the program), the leftover token budget,
+        the request's remaining output (no point drafting past
+        ``max_new`` — the correction token always rides along), and the
+        ring bound (a rejected draft that wrapped would have destroyed
+        history rollback still needs)."""
+        req = self.active[i]
+        k = min(self.speculate, self.chunk - n_pend, budget,
+                req.max_new - len(req.out) - 1)
+        if self._draft_ring is not None:
+            k = min(k, self._draft_ring - (int(self._pos[i]) + n_pend))
+        if k <= 0:
+            return np.zeros((0,), np.int32)
+        hist = np.concatenate([req.prompt, np.asarray(req.out, np.int32)])
+        drafts = np.asarray(self.drafter.propose(hist, k),
+                            np.int32).reshape(-1)
+        return drafts[:k]
+
+    def _advance_speculative(self, dec: list[int], greedy: np.ndarray,
+                             meta: dict, snaps: dict) -> int:
+        """The accept/rollback walk for every verified slot (DESIGN.md
+        §15).  Accept the longest draft prefix matching the argmax chain
+        plus the first correction token — the stream plain greedy decode
+        would emit, so token identity holds by construction.  On any
+        rejection, rewind through ``StateTree.truncate``: pure-paged
+        trees keep the accepted positions and mask the rejected tail;
+        row-bearing trees restore the pre-verify snapshot and re-feed
+        the newly committed run next chunk (it re-accepts
+        deterministically, so every verify step still nets >= 1 fresh
+        token)."""
+        if dec:
+            self.decode_steps += 1
+        finished = 0
+        for i in dec:
+            req = self.active[i]
+            n_pend, drafts = meta[i]
+            k = len(drafts)
+            a, toks = greedy_accept(drafts, greedy[i], n_pend - 1)
+            toks = toks[:req.max_new - len(req.out)]
+            base = int(self._pos[i])
+            if a == k:
+                # full accept (plain decode is the k == 0 case): every
+                # fed token is committed, the state simply advances
+                self._pos[i] = base + n_pend + k
+            elif self._has_rows:
+                # rows hold state after *all* fed tokens — restore the
+                # last-accepted snapshot (paged leaves re-mask to base;
+                # the accepted run re-feeds as pending next chunk)
+                self.pools = self.state.truncate(self.pools, i, base,
+                                                 snap=snaps[i])
+            else:
+                # pure paged: the accepted prefix's KV is already exactly
+                # right — keep it, mask only the rejected positions
+                new_pos = base + n_pend + a
+                self.pools = self.state.truncate(self.pools, i, new_pos)
+                self._pos[i] = new_pos
+            req.out.extend(toks)
+            self._cur[i, 0] = int(req.out[-1])
+            if k > 0:
+                self.spec_steps += 1
+                self.spec_drafted += k
+                self.spec_accepted += a
+                self.spec_emitted += len(toks)
+                req.drafted += k
+                req.accepted += a
+            self._max_stall = max(self._max_stall,
+                                  int(self.steps - self._emit_step[i] - 1))
+            self._emit_step[i] = self.steps
+            if len(req.out) >= req.max_new:
+                self._finish(i)
+                finished += 1
+        return finished
 
     def _decode_step(self, dec: list[int]) -> None:
         live = np.zeros((self.slots,), np.int32)
@@ -769,6 +946,16 @@ class PagedEngine:
             "cow_forks": self._cow_forks,
             "cache_pages": cache.cached_pages if cache else 0,
             "cache_evictions": cache.evictions if cache else 0,
+            "speculate": self.speculate,
+            "spec_steps": self.spec_steps,
+            "spec_drafted": self.spec_drafted,
+            "spec_accepted": self.spec_accepted,
+            "spec_accept_rate": round(
+                self.spec_accepted / self.spec_drafted, 4)
+            if self.spec_drafted else 0.0,
+            "spec_accepted_per_step": round(
+                self.spec_emitted / self.spec_steps, 4)
+            if self.spec_steps else 0.0,
             "preempt": self.preempt_enabled,
             "preemptions": self.preemptions,
             "resumes": self.resumes,
@@ -802,6 +989,12 @@ class PagedEngine:
             cache = (f"| prefix hit rate={s['prefix_hit_rate'] * 100:.1f}% "
                      f"({s['cached_prefill_tokens']} tok cached, "
                      f"{s['cow_forks']} cow forks) ")
+        spec = ""
+        if self.speculate:
+            spec = (f"| speculate k={s['speculate']}: "
+                    f"accept rate={s['spec_accept_rate'] * 100:.1f}% "
+                    f"accepted/step={s['spec_accepted_per_step']:.2f} "
+                    f"({s['spec_accepted']}/{s['spec_drafted']} drafts) ")
         pre = ""
         if self.preempt_enabled:
             pre = (f"| preemptions={s['preemptions']} "
@@ -831,6 +1024,6 @@ class PagedEngine:
                 f"| prefill retraces={s['prefill_retraces']} "
                 f"decode retraces={s['decode_retraces']} "
                 f"| max decode stall={s['max_decode_stall']} steps "
-                f"{cache}{pre}{ft}{slo}"
+                f"{cache}{spec}{pre}{ft}{slo}"
                 f"| budget util={s['budget_util'] * 100:.1f}% "
                 f"(chunk={s['chunk']}, budget={s['step_budget']})")

@@ -371,6 +371,30 @@ def reset_pages(pool: PagedKVCache, page_ids: jax.Array) -> PagedKVCache:
             POS_EMPTY, mode="drop"))
 
 
+def truncate_pages(pool: PagedKVCache, pages, n: int) -> PagedKVCache:
+    """Rewind ``pages`` (a slot's pages, any order) to logical length ``n``:
+    every entry holding a global position ``>= n`` is re-masked to
+    ``POS_EMPTY`` — the rollback half of :func:`scatter_prefill`.
+
+    Used by speculative decode to discard rejected draft positions
+    (DESIGN.md §15).  The position-based attention mask already hides a
+    stale entry until the position is rewritten (a token's KV lands
+    before any query at or past it runs, and the engine's draft clamp
+    keeps speculative writes from ever wrapping the ring), so this is a
+    *hygiene* op: it keeps ``swap_out`` digests, the watchdog's oracles,
+    and ``gather_pages`` views deterministic functions of the committed
+    stream.  ``POS_EMPTY`` entries stay empty (they are ``< 0 <= n``),
+    so truncating is idempotent; runs eagerly, never inside the engine's
+    three jitted programs.
+    """
+    if len(pages) == 0:
+        return pool
+    idx = jnp.asarray(np.asarray(pages, np.int32))
+    rows = pool.pos[idx]
+    rows = jnp.where(rows >= jnp.int32(n), POS_EMPTY, rows)
+    return dataclasses.replace(pool, pos=pool.pos.at[idx].set(rows))
+
+
 #: out-of-range page id for :func:`copy_page` — larger than any pool, so a
 #: sentinel (src, dst) pair is a no-op in *every* pool group's program
 COPY_NONE = np.int32(2 ** 30)

@@ -83,6 +83,9 @@ class ServeRequest:
     # preempt-to-host round trip (engine-maintained; DESIGN.md §13)
     swap: object = None               # host snapshot while PREEMPTED
     preemptions: int = 0              # times swapped out to host
+    # speculative decoding accounting (engine-maintained; DESIGN.md §15)
+    drafted: int = 0                  # draft tokens verified for this request
+    accepted: int = 0                 # drafts the argmax chain accepted
     # fault tolerance (engine-maintained; DESIGN.md §14)
     deadline_s: float | None = None   # wall-clock budget from t_submit
     retries: int = 0                  # watchdog requeues after step faults
@@ -117,6 +120,12 @@ class ServeRequest:
         dt = self.t_done - self.t_first
         n = max(0, len(self.out) - 1)   # first token comes from prefill
         return n / dt if dt > 0 else 0.0
+
+    @property
+    def accept_rate(self) -> float:
+        """Fraction of this request's verified drafts the argmax chain
+        accepted (0.0 when it never speculated)."""
+        return self.accepted / self.drafted if self.drafted else 0.0
 
 
 class FIFOScheduler:
@@ -352,10 +361,15 @@ def summarize(requests: list[ServeRequest]) -> dict:
     # have no decode phase at all — averaging their 0.0 in would silently
     # deflate the reported decode throughput
     dec = [r.decode_tok_s for r in done if len(r.out) > 1]
+    drafted = sum(r.drafted for r in done)
     return {
         "done": len(done),
         **_failure_counts(requests),
         "preemptions": sum(r.preemptions for r in done),
+        "drafted": drafted,
+        "accepted": sum(r.accepted for r in done),
+        "accept_rate": (sum(r.accepted for r in done) / drafted
+                        if drafted else 0.0),
         "tokens": toks,
         "wall_s": t1 - t0,
         "tok_s": toks / (t1 - t0) if t1 > t0 else 0.0,

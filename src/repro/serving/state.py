@@ -63,7 +63,7 @@ from repro.serving.paged_kv import (PageAllocator, SwapIntegrityError,
                                     ceil_pages, copy_page, make_pool,
                                     reset_pages, scatter_prefill,
                                     snapshot_digest, swap_in_pages,
-                                    swap_out_pages)
+                                    swap_out_pages, truncate_pages)
 
 import numpy as np
 
@@ -173,6 +173,27 @@ class PagedKVState:
         is the identity that matters)."""
         return swap_in_pages(leaf, self.alloc_.slot_pages(slot), blob)
 
+    # ---- speculative accept/rollback (DESIGN.md §15) -----------------------
+    def spec_snapshot(self, leaf: PagedKVCache, slot: int):
+        """Paged pools rewind by position masking alone — rejected draft
+        entries stay hidden behind the position mask until overwritten —
+        so the pre-verify snapshot is free (None)."""
+        return None
+
+    def truncate(self, leaf: PagedKVCache, slot: int, n: int,
+                 snap=None) -> PagedKVCache:
+        """Rewind the slot's logical write cursor to ``n`` committed
+        tokens: entries at positions ``>= n`` on its *private* pages are
+        re-masked to ``POS_EMPTY``.  Shared (prefix-cache) pages are left
+        untouched — they only ever hold committed prompt-prefix positions
+        (``< n`` for any rollback point past the prefix) and may be
+        mapped by other slots or the cache, so rewriting them, even
+        value-identically, is not this slot's to do.  Eager host-driven
+        device write, never part of the three jitted programs."""
+        shared = self.alloc_.shared_pages(slot)
+        pages = [p for p in self.alloc_.slot_pages(slot) if p not in shared]
+        return truncate_pages(leaf, pages, n)
+
     def push_table(self, leaf: PagedKVCache,
                    private_only_slot: int | None = None) -> PagedKVCache:
         # a fresh copy per push: the pools tree is donated into the jitted
@@ -266,6 +287,28 @@ class SlotRowState:
     def swap_in(self, leaf, slot: int, blob):
         return jax.tree.map(
             lambda a, b: a.at[slot].set(jnp.asarray(b, a.dtype)), leaf, blob)
+
+    # ---- speculative accept/rollback (DESIGN.md §15) -----------------------
+    def spec_snapshot(self, leaf, slot: int):
+        """Host copy of the slot's row *before* a verify chunk runs: a
+        recurrent row holds only the state after all tokens fed so far,
+        so rejection can only rewind by restoring the last fully-accepted
+        state (same geometry as :meth:`swap_out`, minus the digest — the
+        snapshot never leaves the engine's step)."""
+        return jax.tree.map(lambda a: np.asarray(a[slot]), leaf)
+
+    def truncate(self, leaf, slot: int, n: int, snap=None):
+        """Rewind by restoring the pre-verify snapshot — a recurrent row
+        has no per-position identity to mask, so ``n`` is implied by the
+        snapshot (the engine re-feeds committed tokens past it through
+        the next chunk).  Truncating rows without a snapshot is an
+        engine bug, never a fallback."""
+        if snap is None:
+            raise ValueError(
+                "recurrent rows cannot rewind without a pre-verify "
+                "snapshot (spec_snapshot) — rows hold only the state "
+                "after every token fed, including rejected drafts")
+        return self.swap_in(leaf, slot, snap)
 
     def push_table(self, leaf, private_only_slot: int | None = None):
         return leaf
@@ -383,6 +426,36 @@ class StateTree:
                 "or truncated while parked on host")
         return self.map_device(
             lambda st, pl, b: st.swap_in(pl, slot, b), pools, snap["blobs"])
+
+    # ---- speculative accept/rollback (DESIGN.md §15) -------------------------
+    @property
+    def has_rows(self) -> bool:
+        """Whether any layer state is a whole-row (recurrent/frozen)
+        state.  Row-bearing trees rewind a rejected verify chunk by
+        snapshot-restore to the last accepted state (the engine re-feeds
+        the committed tail next chunk); pure-paged trees keep the
+        accepted prefix in place and only mask the rejected positions."""
+        return any(isinstance(st, SlotRowState) for st in self.leaves())
+
+    def spec_snapshot(self, pools, slot: int):
+        """Pre-verify snapshot of ``slot`` across every layer state —
+        row copies for recurrent states, ``None`` for paged pools (they
+        rewind by position masking).  Structured like the device tree so
+        :meth:`truncate` zips it back."""
+        return self.map_device(
+            lambda st, pl: st.spec_snapshot(pl, slot), pools)
+
+    def truncate(self, pools, slot: int, n: int, snap=None):
+        """Rewind ``slot`` to ``n`` committed tokens after a rejected
+        verify chunk: paged leaves re-mask positions ``>= n`` to
+        ``POS_EMPTY`` (shared/CoW prefix-cache pages untouched),
+        recurrent rows restore the ``snap`` tree from
+        :meth:`spec_snapshot`.  Eager host-driven writes — speculative
+        rollback adds no compiled program (DESIGN.md §15)."""
+        if snap is None:
+            snap = self.map_device(lambda st: None)
+        return self.map_device(
+            lambda st, pl, b: st.truncate(pl, slot, n, snap=b), pools, snap)
 
     # ---- admission: every layer's capacity vote, through the protocol -------
     def can_admit(self, *, shared: int = 0) -> bool:

@@ -234,6 +234,54 @@ def test_step_fault_recovers_token_identical(arch):
             eng._reset.retraces) == progs
 
 
+@pytest.mark.parametrize("arch", ["yi-6b", "rwkv6-3b"])
+def test_step_fault_mid_verify_recovers_token_identical(arch):
+    """A step exception fired while slots are speculating — the mixed
+    step is a *verify* step carrying draft tokens (DESIGN.md §15) — must
+    leave truncate-consistent state: the victim recovers through the
+    preempt/requeue path and every request finishes token-identical to a
+    speculation-off fault-free run, with the watchdog's refcount
+    reconciliation green at drain and zero extra compiled programs.
+    Covers both rollback flavors: paged position masking (yi-6b) and
+    recurrent-row snapshot restore (rwkv6-3b).  The drafter always
+    proposes (wrongly), so every decode step is a verify step with a
+    full rollback — the worst case for fault-time consistency."""
+
+    class WrongDrafter:
+        def propose(self, history, k):
+            h = np.asarray(history, np.int32)
+            return (h[-k:] + 1) % 251 if len(h) >= k else h[:0]
+
+    cfg, eng = make_engine(arch, chunk=8, watchdog=True, speculate=4,
+                           drafter=WrongDrafter())
+    prompts = mixed_prompts(cfg, [6, 9])
+    ref = reference_outputs(arch, prompts, 8, chunk=8)
+    # tick 4: prefill (chunk 8 swallows both prompts by tick 2) is done
+    # and both slots are decoding speculatively — the armed exception
+    # fires on a verify step, after earlier verify steps have already
+    # exercised accept/rollback bookkeeping
+    eng.faults = FaultPlan([FaultEvent(tick=4, kind="step_exc")])
+    rids = [eng.submit(p, 8).rid for p in prompts]
+    done = eng.run_until_idle()
+    assert eng.recovered == 1
+    assert eng.spec_steps > 0, "workload never actually speculated"
+    assert {r: done[r] for r in rids} == ref
+    assert eng.sched.failed == []
+    eng.watchdog.sweep()                # refcount reconciliation, explicit
+    check_clean(eng)
+    # warm second burst over the recovered speculating engine: zero new
+    # programs — verify stayed the mixed step through the fault
+    progs = (eng._prefill.retraces, eng._decode.retraces,
+             eng._reset.retraces)
+    rids = [eng.submit(p, 8).rid for p in prompts]
+    done = eng.run_until_idle()
+    assert {r: done[r] for r in rids} == {
+        rid: out for rid, out in zip(rids, ref.values())}
+    assert (eng._prefill.retraces, eng._decode.retraces,
+            eng._reset.retraces) == progs
+    check_clean(eng)
+
+
 def test_retries_exhaust_to_failed():
     """A slot that faults on every attempt ends FAILED after max_retries,
     with backoff/quarantine bookkeeping visible and everything reclaimed."""

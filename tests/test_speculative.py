@@ -1,0 +1,236 @@
+"""Speculative decoding lockdown (DESIGN.md §15).
+
+The guarantee under test: greedy serving with ``speculate=K`` is
+**token-identical** to speculation-off serving — and to the sequential
+per-request oracle — for every drafter, good or hostile, across the
+state-kind matrix (pure paged yi-6b, recurrent-row rwkv6-3b, hybrid
+zamba2-1.2b).  Speculation changes latency, never output.
+
+Alongside identity: the engine still compiles exactly three programs
+(verify *is* the mixed chunk step — an oracle drafter accepting
+everything adds no program and strictly shrinks the step count), a warm
+speculating engine never retraces, unaccepted draft tokens are
+structurally invisible to the prefix cache (the false-hit regression
+guard), and the drafter/accept primitives hold their unit contracts.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, smoke_config
+from repro.models.model import Model
+from repro.serving import NGramDrafter, PagedEngine, greedy_accept
+
+ARCHS = ["yi-6b", "rwkv6-3b", "zamba2-1.2b"]
+_SETUP: dict = {}
+
+
+def setup_arch(arch):
+    if arch not in _SETUP:
+        cfg = dataclasses.replace(smoke_config(get_arch(arch)),
+                                  dtype="float32",
+                                  capacity_factor=64.0)  # drop-free MoE
+        model = Model(cfg)
+        params = model.init(jax.random.key(0))
+        _SETUP[arch] = (cfg, model, params)
+    return _SETUP[arch]
+
+
+def mixed_prompts(cfg, lens, seed=7):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, (l,)).astype(np.int32)
+            for l in lens]
+
+
+def run_engine(model, params, prompts, max_new, **kw):
+    eng = PagedEngine(model, params, slots=2, page_size=4, max_len=32, **kw)
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new, rid=i)
+    return eng, eng.run_until_idle()
+
+
+class JunkDrafter:
+    """Adversarial: always proposes wrong tokens (one past the true next
+    token is astronomically unlikely to match a random-init argmax chain)
+    — every verify step must roll back and still emit the greedy token."""
+
+    def propose(self, history, k):
+        h = np.asarray(history, np.int32)
+        return (h[-k:] + 1) % 251 if len(h) >= k else np.zeros((0,), np.int32)
+
+
+class OracleDrafter:
+    """Clairvoyant: proposes the true greedy continuation (from a
+    speculation-off run) — every draft accepts, exercising the
+    full-accept/no-truncate path and the maximum emit rate."""
+
+    def __init__(self, streams):
+        self.streams = streams
+
+    def propose(self, history, k):
+        h = np.asarray(history, np.int32)
+        for s in self.streams:
+            if len(s) > len(h) and np.array_equal(s[:len(h)], h):
+                return np.asarray(s[len(h):len(h) + k], np.int32)
+        return np.zeros((0,), np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Unit contracts
+# ---------------------------------------------------------------------------
+
+def test_ngram_drafter_proposes_most_recent_continuation():
+    d = NGramDrafter(max_n=3)
+    #              0  1  2  3  4  5  6  7  8
+    h = np.array([5, 6, 7, 9, 5, 6, 7, 8, 5, 6, 7], np.int32)
+    # trailing 3-gram (5,6,7) last recurred at s=4, followed by 8, 5, 6
+    np.testing.assert_array_equal(d.propose(h, 3), [8, 5, 6])
+    np.testing.assert_array_equal(d.propose(h, 1), [8])
+
+
+def test_ngram_drafter_falls_back_to_shorter_ngrams():
+    d = NGramDrafter(max_n=3)
+    h = np.array([1, 2, 3, 4, 2, 9], np.int32)   # no (2,9) or (4,2,9) twice
+    # n=1: last earlier 9 — none; nothing to propose
+    assert d.propose(h, 4).size == 0
+    h2 = np.array([1, 9, 3, 4, 9], np.int32)     # n=1 hit: 9 at s=1 -> 3, 4
+    np.testing.assert_array_equal(d.propose(h2, 2), [3, 4])
+
+
+def test_ngram_drafter_edge_cases():
+    d = NGramDrafter()
+    assert d.propose(np.array([3], np.int32), 4).size == 0   # no pair yet
+    assert d.propose(np.array([3, 3, 3], np.int32), 0).size == 0
+    # the trailing n-gram never matches itself
+    assert d.propose(np.array([1, 2], np.int32), 4).size == 0
+    caps = d.propose(np.array([7, 1, 2, 7], np.int32), 8)
+    np.testing.assert_array_equal(caps, [1, 2, 7])            # capped by end
+
+
+def test_greedy_accept_walk():
+    greedy = np.array([10, 11, 12, 13, 14], np.int32)
+    # committed prefix ends at column 1: greedy[1]=11 is the first new token
+    a, toks = greedy_accept([11, 12, 99], greedy, j0=1)
+    assert (a, toks) == (2, [11, 12, 13])    # 2 accepted + correction
+    a, toks = greedy_accept([99, 12], greedy, j0=1)
+    assert (a, toks) == (0, [11])            # instant reject: plain decode
+    a, toks = greedy_accept([11, 12, 13], greedy, j0=1)
+    assert (a, toks) == (3, [11, 12, 13, 14])  # full accept + bonus token
+    a, toks = greedy_accept([], greedy, j0=1)
+    assert (a, toks) == (0, [11])            # no drafts: plain decode
+
+
+def test_speculate_requires_greedy():
+    _, model, params = setup_arch("yi-6b")
+    with pytest.raises(ValueError, match="greedy"):
+        PagedEngine(model, params, slots=2, page_size=4, max_len=32,
+                    speculate=4, temperature=0.7)
+
+
+# ---------------------------------------------------------------------------
+# Token identity across the state-kind matrix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_speculation_is_token_identical(arch):
+    """speculate=4 with the n-gram drafter and with an always-wrong
+    drafter both reproduce the speculation-off stream exactly, with every
+    page returned — for paged, recurrent, and hybrid state trees."""
+    cfg, model, params = setup_arch(arch)
+    prompts = mixed_prompts(cfg, [5, 9, 12])
+    base_eng, base = run_engine(model, params, prompts, max_new=8)
+
+    for drafter in (NGramDrafter(), JunkDrafter()):
+        eng, out = run_engine(model, params, prompts, max_new=8,
+                              speculate=4, drafter=drafter)
+        assert out == base, (arch, type(drafter).__name__)
+        s = eng.stats()
+        assert s["max_decode_stall"] == 0    # >= 1 token per verify step
+        for alloc in eng.allocators.values():
+            alloc.check()
+            assert alloc.free_pages == alloc.n_pages
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "rwkv6-3b"])
+def test_oracle_drafter_full_accepts_and_shrinks_steps(arch):
+    """A clairvoyant drafter accepts every draft: identical output in
+    strictly fewer decode steps (the speedup mechanism), exercising the
+    full-accept path (paged: no truncate; rows: snapshot unused)."""
+    cfg, model, params = setup_arch(arch)
+    prompts = mixed_prompts(cfg, [5, 9, 12])
+    base_eng, base = run_engine(model, params, prompts, max_new=8)
+    streams = [np.concatenate([p, np.asarray(base[i], np.int32)])
+               for i, p in enumerate(prompts)]
+
+    eng, out = run_engine(model, params, prompts, max_new=8,
+                          speculate=4, drafter=OracleDrafter(streams))
+    assert out == base, arch
+    s, sb = eng.stats(), base_eng.stats()
+    assert s["spec_drafted"] == s["spec_accepted"] > 0
+    assert s["decode_steps"] < sb["decode_steps"]
+    assert s["spec_accepted_per_step"] > 1.0
+
+
+def test_speculating_engine_compiles_three_programs_and_never_retraces():
+    """Verify is the mixed chunk program: a speculating warm engine holds
+    the same three programs as a plain one, and a second pass over
+    different prompts/drafts adds zero."""
+    cfg, model, params = setup_arch("yi-6b")
+    eng = PagedEngine(model, params, slots=2, page_size=4, max_len=32,
+                      chunk=8, speculate=4)
+    for p in mixed_prompts(cfg, [3, 5, 9, 12], seed=1):
+        eng.submit(p, 6)
+    eng.run_until_idle()
+    programs = (eng._prefill.cache_size, eng._decode.cache_size,
+                eng._reset.cache_size)
+    assert eng._prefill.cache_size == 1     # one mixed width: the chunk
+    before = (eng._prefill.retraces, eng._decode.retraces)
+    for p in mixed_prompts(cfg, [2, 7, 11, 4], seed=9):
+        eng.submit(p, 6)
+    eng.run_until_idle()
+    assert (eng._prefill.retraces - before[0],
+            eng._decode.retraces - before[1]) == (0, 0)
+    assert (eng._prefill.cache_size, eng._decode.cache_size,
+            eng._reset.cache_size) == programs
+
+
+# ---------------------------------------------------------------------------
+# Prefix-cache guard: drafts are structurally invisible
+# ---------------------------------------------------------------------------
+
+def test_unaccepted_drafts_never_enter_prefix_cache():
+    """A cache-on speculating engine (with a hostile drafter maximizing
+    rejected tokens) may only ever hash *committed prompt* chunks into
+    the cache: every entry key must lie on some submitted prompt's chain,
+    and re-sent prompts must hit without output drift."""
+    cfg, model, params = setup_arch("yi-6b")
+    rng = np.random.default_rng(3)
+    shared = rng.integers(0, cfg.vocab_size, (8,)).astype(np.int32)
+    prompts = [np.concatenate([shared,
+                               rng.integers(0, cfg.vocab_size, (l,))
+                               .astype(np.int32)])
+               for l in (4, 7, 12)]
+
+    base_eng, base = run_engine(model, params, prompts, max_new=8,
+                                prefix_cache=True, overcommit=2.0)
+    eng = PagedEngine(model, params, slots=2, page_size=4, max_len=32,
+                      prefix_cache=True, overcommit=2.0,
+                      speculate=4, drafter=JunkDrafter())
+    rids = []
+    for rep in range(2):                     # re-send: the warm pass hits
+        for i, p in enumerate(prompts):
+            rids.append(eng.submit(p, 8).rid)
+    done = eng.run_until_idle()
+    for j, rid in enumerate(rids):
+        assert done[rid] == base[j % len(prompts)], rid
+
+    cache = eng.prefix_cache
+    legal = set()
+    for p in prompts:
+        legal.update(cache.chain(p))
+    assert set(cache._entries.keys()) <= legal
+    assert cache.stats()["hits"] > 0         # the guard isn't vacuous
+    cache.check()

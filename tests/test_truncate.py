@@ -1,0 +1,300 @@
+"""Property tests for ``LayerState.truncate`` — the speculative-decode
+rollback primitive (DESIGN.md §15) — on its own, below the engine.
+
+Run under real hypothesis when installed, or the deterministic stand-in
+from tests/conftest.py on a bare interpreter.  Covered invariants:
+
+* truncate-after-scatter == never-scattered: committing ``base`` tokens,
+  appending a draft chunk, and truncating back to ``base`` leaves the
+  pool's retained view identical to one that never saw the drafts — as
+  long as the drafts stay inside the ring (the engine's draft clamp; a
+  draft write that wrapped the ring would overwrite committed history
+  irrecoverably, which is exactly why the clamp exists);
+* mid-page truncate and ring-wrap boundaries: the rewind point can fall
+  anywhere — inside a page, at a page edge, or behind the ring's
+  eviction horizon — and exactly the positions ``>= n`` vanish;
+* shared/CoW prefix-cache pages are never touched by a slot's truncate
+  (they only ever hold committed prompt-prefix positions and may be
+  mapped by other slots or the cache);
+* ``swap_out``/``swap_in`` round-trips after truncate keep snapshot
+  digests valid (rollback hygiene is what makes the parked blob a
+  deterministic function of the committed stream);
+* recurrent rows: ``spec_snapshot``/``truncate`` restore the exact
+  pre-verify row, rows without a snapshot refuse to rewind, and
+  ``StateTree.truncate`` zips paged masking with row restore across a
+  hybrid (zamba2) tree.
+"""
+
+import dataclasses
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import assume, given, settings, strategies as st
+
+from repro.configs import get_arch, smoke_config
+from repro.models.layers import KVCache, POS_EMPTY
+from repro.models.model import Model
+from repro.serving import (PageAllocator, gather_pages, make_pool,
+                           scatter_prefill, snapshot_digest, truncate_pages)
+from repro.serving.state import (PagedKVState, SlotRowState,
+                                 build_state_tree)
+
+CFG = SimpleNamespace(num_kv_heads=2, head_dim=4)
+
+
+def _pool_with_slots(n_slots: int, page_size: int, max_pages: int,
+                     n_pages: int | None = None):
+    alloc = PageAllocator(n_pages=n_pages or n_slots * max_pages,
+                          pages_per_slot=max_pages, n_slots=n_slots)
+    for s in range(n_slots):
+        alloc.alloc(s)
+    pool = make_pool(CFG, n_pages=alloc.n_pages, page_size=page_size,
+                     max_pages=max_pages, n_slots=n_slots,
+                     dtype=jnp.float32)
+    return dataclasses.replace(pool, page_table=alloc.table_array()), alloc
+
+
+def _identity_dense(rng, bp: int, s: int) -> KVCache:
+    kvh, hd = CFG.num_kv_heads, CFG.head_dim
+    return KVCache(
+        k=jnp.asarray(rng.normal(size=(bp, kvh, s, hd)), jnp.float32),
+        v=jnp.asarray(rng.normal(size=(bp, kvh, s, hd)), jnp.float32),
+        pos=jnp.arange(s, dtype=jnp.int32))
+
+
+def _views(pool):
+    return tuple(np.asarray(t) for t in gather_pages(pool))
+
+
+@settings(max_examples=10, deadline=None)
+@given(page_size=st.integers(min_value=1, max_value=4),
+       max_pages=st.integers(min_value=1, max_value=3),
+       seed=st.integers(min_value=0, max_value=99))
+def test_truncate_after_scatter_equals_never_scattered(page_size, max_pages,
+                                                       seed):
+    """Commit ``base`` tokens, append a ``d``-token draft chunk (what a
+    verify step writes), truncate back to ``base``: every retained view
+    (positions *and* KV values at live positions) equals a pool that
+    never scattered the drafts.  ``base + d <= logical`` mirrors the
+    engine's ring clamp — inside the ring a draft write never aliases a
+    retained committed position, so masking is a complete undo."""
+    rng = np.random.default_rng(seed)
+    logical = page_size * max_pages
+    base = int(rng.integers(0, logical + 1))
+    d = int(rng.integers(1, max(logical - base, 0) + 2))
+    assume(base + d <= logical)
+
+    pool0, _ = _pool_with_slots(1, page_size, max_pages)
+    stream = _identity_dense(rng, 1, base + d)
+    committed_only = KVCache(k=stream.k[:, :, :base], v=stream.v[:, :, :base],
+                             pos=stream.pos[:base])
+    slot_ids = jnp.asarray([0], jnp.int32)
+
+    ref = scatter_prefill(pool0, committed_only, slot_ids,
+                          jnp.asarray([base], jnp.int32))
+    spec = scatter_prefill(pool0, stream, slot_ids,
+                           jnp.asarray([base + d], jnp.int32))
+    spec = truncate_pages(spec, list(range(max_pages)), base)
+
+    k_r, v_r, pos_r = _views(ref)
+    k_s, v_s, pos_s = _views(spec)
+    np.testing.assert_array_equal(pos_s, pos_r)
+    live = pos_r[0] >= 0
+    np.testing.assert_array_equal(k_s[0][:, live], k_r[0][:, live])
+    np.testing.assert_array_equal(v_s[0][:, live], v_r[0][:, live])
+
+
+@settings(max_examples=12, deadline=None)
+@given(page_size=st.integers(min_value=2, max_value=4),
+       max_pages=st.integers(min_value=1, max_value=3),
+       seed=st.integers(min_value=0, max_value=99))
+def test_truncate_midpage_and_ring_wrap(page_size, max_pages, seed):
+    """Scatter a stream up to 3x the ring length (forcing wrap), truncate
+    to an arbitrary ``n`` — including mid-page and page-edge points —
+    and assert exactly the positions in ``[ring horizon, n)`` survive."""
+    rng = np.random.default_rng(seed)
+    logical = page_size * max_pages
+    total = int(rng.integers(1, 3 * logical + 1))
+    n = int(rng.integers(0, total + 1))
+
+    pool, _ = _pool_with_slots(1, page_size, max_pages)
+    pool = scatter_prefill(pool, _identity_dense(rng, 1, total),
+                           jnp.asarray([0], jnp.int32),
+                           jnp.asarray([total], jnp.int32))
+    pool = truncate_pages(pool, list(range(max_pages)), n)
+    _, _, pos = _views(pool)
+    # retained: committed positions the ring still held, minus the cut
+    expect = {j % logical: j
+              for j in range(max(0, total - logical), total) if j < n}
+    for li in range(logical):
+        if li in expect:
+            assert pos[0, li] == expect[li], (li, pos[0])
+        else:
+            assert pos[0, li] == POS_EMPTY, (li, pos[0])
+    # idempotent: POS_EMPTY rows stay empty, live rows stay live
+    again = truncate_pages(pool, list(range(max_pages)), n)
+    np.testing.assert_array_equal(np.asarray(again.pos), np.asarray(pool.pos))
+
+
+def test_truncate_leaves_shared_cow_pages_untouched():
+    """A slot's truncate re-masks only its *private* pages: shared
+    (prefix-cache) pages may be mapped by other slots or the cache and
+    only ever hold committed prefix positions — rewriting them, even
+    value-identically, is not the truncating slot's to do."""
+    page_size, max_pages = 2, 3
+    alloc = PageAllocator(n_pages=8, pages_per_slot=max_pages, n_slots=2)
+    cached = alloc.alloc(0)[:1]         # slot 0's first page becomes shared
+    for p in cached:
+        alloc.incref(p)                 # the prefix cache's reference
+    alloc.free(0)
+    pages = alloc.alloc(1, shared=cached)
+    assert set(cached) == alloc.shared_pages(1)
+
+    pool = make_pool(CFG, n_pages=alloc.n_pages, page_size=page_size,
+                     max_pages=max_pages, n_slots=2, dtype=jnp.float32)
+    # mark every owned page's entries live at positions past the cut, so
+    # an over-eager truncate would be visible on the shared page too
+    marks = jnp.full((page_size,), 7, jnp.int32)
+    for p in pages:
+        pool = dataclasses.replace(pool, pos=pool.pos.at[p].set(marks))
+
+    state = PagedKVState(CFG, alloc, page_size=page_size,
+                         ring_len=page_size * max_pages, window=0)
+    pool = state.truncate(pool, 1, 2)
+    pos = np.asarray(pool.pos)
+    for p in cached:
+        assert (pos[p] == 7).all(), "shared page was rewritten"
+    for p in pages:
+        if p not in cached:
+            assert (pos[p] == POS_EMPTY).all(), "private page kept drafts"
+
+
+@settings(max_examples=8, deadline=None)
+@given(page_size=st.integers(min_value=1, max_value=4),
+       max_pages=st.integers(min_value=1, max_value=3),
+       seed=st.integers(min_value=0, max_value=99))
+def test_swap_round_trip_after_truncate_keeps_digests_valid(page_size,
+                                                            max_pages, seed):
+    """Preempting a slot right after a rollback must park and restore
+    cleanly: the swap blob's digest validates on swap_in, and the
+    restored pool's snapshot reproduces the same digest — rollback left
+    no hidden divergence for the integrity check to trip on."""
+    rng = np.random.default_rng(seed)
+    logical = page_size * max_pages
+    base = int(rng.integers(0, logical + 1))
+    d = int(rng.integers(1, max(logical - base, 0) + 2))
+    assume(base + d <= logical)
+
+    pool, alloc = _pool_with_slots(1, page_size, max_pages)
+    state = PagedKVState(CFG, alloc, page_size=page_size, ring_len=logical,
+                         window=0)
+    pool = scatter_prefill(pool, _identity_dense(rng, 1, base + d),
+                           jnp.asarray([0], jnp.int32),
+                           jnp.asarray([base + d], jnp.int32))
+    pool = state.truncate(pool, 0, base)
+
+    blob = state.swap_out(pool, 0)
+    digest = snapshot_digest(blob)
+    restored = state.swap_in(pool, 0, blob)
+    assert snapshot_digest(state.swap_out(restored, 0)) == digest
+    # and the parked blob is the committed stream's blob: a pool that
+    # never drafted swaps out byte-identically
+    ref, _ = _pool_with_slots(1, page_size, max_pages)
+    if base:
+        ref = scatter_prefill(ref, _identity_dense(rng, 1, base + d),
+                              jnp.asarray([0], jnp.int32),
+                              jnp.asarray([base], jnp.int32))
+        k, v, pos = _views(restored)
+        k2, v2, pos2 = _views(ref)
+        np.testing.assert_array_equal(pos, pos2)
+
+
+# ---------------------------------------------------------------------------
+# Recurrent rows + the zipped tree
+# ---------------------------------------------------------------------------
+
+def _row_state_and_leaf():
+    cfg = dataclasses.replace(smoke_config(get_arch("rwkv6-3b")),
+                              dtype="float32")
+    model = Model(cfg)
+    slot = model.stack.pattern[0]
+    state = SlotRowState(cfg, slot, n_slots=2)
+    return state, state.init_device()
+
+
+def test_slot_rows_refuse_truncate_without_snapshot():
+    """Recurrent rows hold only the state after every fed token —
+    including rejected drafts — so a snapshot-less rewind is an engine
+    bug and must fail loudly, never fall back."""
+    state, leaf = _row_state_and_leaf()
+    with pytest.raises(ValueError, match="snapshot"):
+        state.truncate(leaf, 0, 3)
+
+
+def test_slot_row_snapshot_restore_round_trip():
+    """truncate(snap) restores the pre-verify row exactly and leaves
+    other slots' rows untouched."""
+    state, leaf = _row_state_and_leaf()
+    leaf = jax.tree.map(lambda a: a + jnp.ones((), a.dtype), leaf)
+    snap = state.spec_snapshot(leaf, 0)
+    mutated = jax.tree.map(
+        lambda a: a.at[0].add(jnp.ones((), a.dtype)).at[1].add(
+            2 * jnp.ones((), a.dtype)), leaf)
+    restored = state.truncate(mutated, 0, 1, snap=snap)
+    for a, b, m in zip(jax.tree.leaves(restored), jax.tree.leaves(leaf),
+                       jax.tree.leaves(mutated)):
+        np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+        np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(m[1]))
+
+
+def test_state_tree_truncate_zips_hybrid():
+    """zamba2's tree mixes paged KV (the shared attention block) with
+    Mamba rows: ``StateTree.truncate`` must mask positions on the paged
+    leaves and restore rows from the snapshot in one zip."""
+    cfg = dataclasses.replace(smoke_config(get_arch("zamba2-1.2b")),
+                              dtype="float32")
+    model = Model(cfg)
+    tree = build_state_tree(model, slots=2, page_size=2, max_len=8)
+    assert tree.has_rows
+    tree.admit(0)
+    pools = tree.init_device()
+
+    def poke(st, leaf):
+        if isinstance(st, SlotRowState):
+            return jax.tree.map(lambda a: a + jnp.ones((), a.dtype), leaf)
+        pages = st.alloc_.slot_pages(0)
+        pos = leaf.pos
+        for p in pages:
+            pos = pos.at[p].set(jnp.arange(st.page_size, dtype=jnp.int32))
+        return dataclasses.replace(leaf, pos=pos)
+
+    pools = tree.map_device(poke, pools)
+    snap = tree.spec_snapshot(pools, 0)
+    # rows in the snapshot are host copies, paged leaves contribute None
+    flat = [b for b in jax.tree.leaves(snap, is_leaf=lambda x: x is None)]
+    assert any(b is None for b in flat)
+
+    drafted = tree.map_device(
+        lambda st, pl: pl if isinstance(st, PagedKVState)
+        else jax.tree.map(lambda a: a * 3, pl), pools)
+    rolled = tree.truncate(drafted, 0, 1, snap=snap)
+
+    def check(st, before, after):
+        if isinstance(st, SlotRowState):
+            for a, b in zip(jax.tree.leaves(after), jax.tree.leaves(before)):
+                np.testing.assert_array_equal(np.asarray(a[0]),
+                                              np.asarray(b[0]))
+        else:
+            pos = np.asarray(after.pos)
+            for p in st.alloc_.slot_pages(0):
+                assert pos[p, 0] == 0          # committed position kept
+                assert (pos[p, 1:] == POS_EMPTY).all()   # cut re-masked
+        return after
+
+    tree.map_device(check, pools, rolled)
+    # row-bearing trees must refuse a snapshot-less rewind end to end
+    with pytest.raises(ValueError, match="snapshot"):
+        tree.truncate(drafted, 0, 1)
