@@ -15,6 +15,11 @@ tok/s per family + warm-pass retrace counts + decode-stall/budget
 telemetry; v2 added the ``--speculative`` shared-prefix row with
 accept-rate/accepted-per-step extras), validating the document before
 writing — the perf-trajectory artifact CI uploads from every main build.
+``--moe`` adds the grouped-expert-GEMM row (grouped kernel vs per-expert
+reference einsum: token identity + modeled MoE HBM bytes/token).  The
+engine knobs (``--slots``, ``--chunk``, ``--moe-gemm``, ...) come from
+the flag surface shared with ``launch/serve.py``
+(:mod:`repro.launch.engine_args`).
 """
 
 from __future__ import annotations
@@ -80,7 +85,7 @@ def engine_family_records(archs=ENGINE_ARCHS, *, requests: int = 6,
 
     from repro.configs import get_arch, smoke_config
     from repro.models.model import Model
-    from repro.serving import PagedEngine
+    from repro.serving import CacheConfig, EngineConfig, PagedEngine
 
     rows = []
     for arch in archs:
@@ -89,8 +94,9 @@ def engine_family_records(archs=ENGINE_ARCHS, *, requests: int = 6,
         model = Model(cfg)
         params = model.init(jax.random.key(0))
         rng = np.random.default_rng(0)
-        eng = PagedEngine(model, params, slots=slots, page_size=8,
-                          max_len=cache_len, chunk=chunk)
+        eng = PagedEngine(model, params, config=EngineConfig(
+            slots=slots, chunk=chunk,
+            cache=CacheConfig(page_size=8, max_len=cache_len)))
         _run_pass(eng, rng, cfg.vocab_size, requests, list(lens), max_new)
         before = (eng._prefill.retraces, eng._decode.retraces)
         # best of 3 warm passes: host scheduling noise only ever slows a
@@ -138,7 +144,8 @@ def prefix_cache_records(arch: str = "yi-6b", *, requests: int = 6,
 
     from repro.configs import get_arch, smoke_config
     from repro.models.model import Model
-    from repro.serving import PagedEngine, summarize
+    from repro.serving import (CacheConfig, EngineConfig, PagedEngine,
+                               summarize)
 
     cfg = dataclasses.replace(smoke_config(get_arch(arch)), dtype="float32")
     model = Model(cfg)
@@ -153,9 +160,10 @@ def prefix_cache_records(arch: str = "yi-6b", *, requests: int = 6,
 
     sides = {}
     for on in (False, True):
-        eng = PagedEngine(model, params, slots=slots, page_size=page_size,
-                          max_len=cache_len, chunk=chunk, overcommit=2.0,
-                          prefix_cache=on)
+        eng = PagedEngine(model, params, config=EngineConfig(
+            slots=slots, chunk=chunk,
+            cache=CacheConfig(page_size=page_size, max_len=cache_len,
+                              overcommit=2.0, prefix_cache=on)))
         for p in prompts:                   # pass 1: warm compiles + cache
             eng.submit(p, max_new)
         eng.run_until_idle()
@@ -228,7 +236,8 @@ def speculative_records(arch: str = "yi-6b", *, requests: int = 6,
 
     from repro.configs import get_arch, smoke_config
     from repro.models.model import Model
-    from repro.serving import PagedEngine
+    from repro.serving import (CacheConfig, EngineConfig, PagedEngine,
+                               SpecConfig)
 
     cfg = dataclasses.replace(smoke_config(get_arch(arch)), dtype="float32")
     model = Model(cfg)
@@ -243,8 +252,10 @@ def speculative_records(arch: str = "yi-6b", *, requests: int = 6,
 
     sides, outs = {}, {}
     for k in (0, speculate):
-        eng = PagedEngine(model, params, slots=slots, page_size=page_size,
-                          max_len=cache_len, chunk=chunk, speculate=k)
+        eng = PagedEngine(model, params, config=EngineConfig(
+            slots=slots, chunk=chunk,
+            cache=CacheConfig(page_size=page_size, max_len=cache_len),
+            spec=SpecConfig(speculate=k)))
         rids = [eng.submit(p, max_new).rid for p in prompts]  # pass 1: warm
         done = eng.run_until_idle()
         outs[k] = [done[r] for r in rids]
@@ -287,6 +298,101 @@ def speculative_records(arch: str = "yi-6b", *, requests: int = 6,
     }]
 
 
+def moe_records(arch: str = "mixtral-8x22b", *, requests: int = 4,
+                max_new: int = 6, lens: tuple = (5, 9),
+                config=None) -> list[dict]:
+    """The grouped-expert-GEMM trace (DESIGN.md §16): one MoE workload
+    served through a grouped-kernel engine (the fused Pallas kernel on
+    TPU, its interpret mode elsewhere) and through the per-expert
+    reference einsum engine.  Both warm on pass 1; the best of 3 warm
+    re-sends is measured per side.  The acceptance extras on the row:
+    token identity between the two engines' first-pass outputs (the
+    kernel changes the dataflow, never the math), zero warm retraces on
+    the grouped side (one tile plan, dynamic M — expert skew never
+    recompiles), and the modeled per-decode-token MoE HBM bytes for both
+    dataflows, where grouped must be no worse than reference (the grouped
+    kernel skips dead capacity blocks and empty experts' weight banks)."""
+    import numpy as np
+    import jax
+
+    from repro.configs import get_arch, smoke_config
+    from repro.kernels.kraken_moe_gemm import (default_block_rows,
+                                               modeled_ffn_bytes)
+    from repro.models.model import Model
+    from repro.models.moe import expert_capacity
+    from repro.serving import CacheConfig, EngineConfig, PagedEngine
+
+    if config is None:
+        config = EngineConfig(slots=2, chunk=8,
+                              cache=CacheConfig(page_size=8, max_len=32))
+    cfg = dataclasses.replace(smoke_config(get_arch(arch)), dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(5)
+    prompts = _workload(rng, cfg.vocab_size, requests, list(lens))
+    grouped = "grouped" if jax.default_backend() == "tpu" else "interpret"
+
+    sides, outs = {}, {}
+    for mode in ("reference", grouped):
+        eng = PagedEngine(model, params, config=dataclasses.replace(
+            config, moe_gemm=mode))
+        rids = [eng.submit(p, max_new).rid for p in prompts]  # pass 1: warm
+        done = eng.run_until_idle()
+        outs[mode] = [done[r] for r in rids]
+        before = (eng._prefill.retraces, eng._decode.retraces)
+        best = None
+        for _ in range(3):                  # warm re-sends: best of 3
+            t0 = time.perf_counter()
+            for p in prompts:
+                eng.submit(p, max_new)
+            eng.run_until_idle()
+            dt = time.perf_counter() - t0
+            side = {"tok_s": requests * max_new / dt,
+                    "retraces": (eng._prefill.retraces - before[0],
+                                 eng._decode.retraces - before[1]),
+                    "stats": eng.stats()}
+            if best is None or side["tok_s"] > best["tok_s"]:
+                best = side
+        sides[mode] = best
+
+    # Modeled MoE HBM bytes for one expert-FFN layer at the decode step's
+    # token width, under a seeded skewed routing (hot experts + empty
+    # ones — the realistic decode shape): the reference einsum pays every
+    # expert's weight banks and full capacity rows regardless; the
+    # grouped kernel reads only live blocks and live experts' weights, so
+    # grouped <= reference whatever the skew.
+    from repro.tuning import skewed_group_sizes
+    e, slots = cfg.num_experts, config.slots
+    cap = expert_capacity(slots, cfg)
+    sizes = np.minimum(np.asarray(skewed_group_sizes(e, cap), dtype=np.int32),
+                       cap)
+    ref_b, grp_b = modeled_ffn_bytes(
+        sizes, capacity=cap, d=cfg.d_model, f=cfg.moe_d_ff, itemsize=4,
+        block_rows=default_block_rows(cap, "float32"), dtype_name="float32")
+    on, off = sides[grouped], sides["reference"]
+    s = on["stats"]
+    return [{
+        "name": f"serving_moe_{arch}",
+        "arch": arch,
+        "family": cfg.family,
+        "warm_tok_s": round(on["tok_s"], 2),
+        "prefill_retraces": on["retraces"][0],
+        "decode_retraces": on["retraces"][1],
+        "max_decode_stall": int(s["max_decode_stall"]),
+        "budget_util": round(float(s["budget_util"]), 4),
+        "chunk": int(s["chunk"]),
+        "step_budget": int(s["step_budget"]),
+        # the grouped-GEMM acceptance extras (schema allows extra fields)
+        "moe_gemm": str(s["moe_gemm"]),
+        "experts": int(e),
+        "tok_s_reference": round(off["tok_s"], 2),
+        "modeled_moe_hbm_B_per_tok": round(grp_b / slots, 1),
+        "modeled_moe_hbm_B_per_tok_ref": round(ref_b / slots, 1),
+        "moe_hbm_reduction": round(ref_b / max(grp_b, 1e-9), 2),
+        "token_identity": int(outs[grouped] == outs["reference"]),
+    }]
+
+
 def preempt_burst_records(arch: str = "yi-6b", *, slots: int = 2,
                           max_new: int = 8, cache_len: int = 32,
                           chunk: int = 8, n_low: int = 4, n_high: int = 2,
@@ -308,15 +414,17 @@ def preempt_burst_records(arch: str = "yi-6b", *, slots: int = 2,
 
     from repro.configs import get_arch, smoke_config
     from repro.models.model import Model
-    from repro.serving import PagedEngine, slo_summary
+    from repro.serving import (CacheConfig, EngineConfig, PagedEngine,
+                               SchedulerConfig, slo_summary)
 
     cfg = dataclasses.replace(smoke_config(get_arch(arch)), dtype="float32")
     model = Model(cfg)
     params = model.init(jax.random.key(0))
     rng = np.random.default_rng(2)
-    eng = PagedEngine(model, params, slots=slots, page_size=8,
-                      max_len=cache_len, chunk=chunk, preempt=True,
-                      slo_ttft_s=slo_ttft_s)
+    eng = PagedEngine(model, params, config=EngineConfig(
+        slots=slots, chunk=chunk,
+        cache=CacheConfig(page_size=8, max_len=cache_len),
+        sched=SchedulerConfig(preempt=True, slo_ttft_s=slo_ttft_s)))
 
     def burst_pass():
         done0, pre0 = len(eng.sched.done), eng.preemptions
@@ -388,7 +496,8 @@ def fault_injection_records(arch: str = "yi-6b", *, requests: int = 6,
 
     from repro.configs import get_arch, smoke_config
     from repro.models.model import Model
-    from repro.serving import FaultPlan, PagedEngine
+    from repro.serving import (CacheConfig, EngineConfig, FaultConfig,
+                               FaultPlan, PagedEngine)
 
     cfg = dataclasses.replace(smoke_config(get_arch(arch)), dtype="float32")
     model = Model(cfg)
@@ -396,13 +505,14 @@ def fault_injection_records(arch: str = "yi-6b", *, requests: int = 6,
     rng = np.random.default_rng(3)
     prompts = _workload(rng, cfg.vocab_size, requests, list(lens))
 
-    ref_eng = PagedEngine(model, params, slots=slots, page_size=8,
-                          max_len=cache_len, chunk=chunk)
+    base = EngineConfig(slots=slots, chunk=chunk,
+                        cache=CacheConfig(page_size=8, max_len=cache_len))
+    ref_eng = PagedEngine(model, params, config=base)
     ref_rids = [ref_eng.submit(p, max_new).rid for p in prompts]
     ref = ref_eng.run_until_idle()
 
-    eng = PagedEngine(model, params, slots=slots, page_size=8,
-                      max_len=cache_len, chunk=chunk, watchdog=True)
+    eng = PagedEngine(model, params, config=dataclasses.replace(
+        base, fault=FaultConfig(watchdog=True)))
     for p in prompts:                       # pass 1: warm the compiles
         eng.submit(p, max_new)
     eng.run_until_idle()
@@ -652,7 +762,7 @@ def paged_decode_paths(arch: str = "yi-6b", *, requests: int = 6,
 
     from repro.configs import get_arch, smoke_config
     from repro.models.model import Model
-    from repro.serving import PagedEngine
+    from repro.serving import CacheConfig, EngineConfig, PagedEngine
 
     cfg = dataclasses.replace(smoke_config(get_arch(arch)), dtype="float32")
     model = Model(cfg)
@@ -665,8 +775,10 @@ def paged_decode_paths(arch: str = "yi-6b", *, requests: int = 6,
                          max_new)
 
     rows = []
-    eng = PagedEngine(model, params, slots=slots, page_size=8,
-                      max_len=cache_len, decode_kernel="reference")
+    base = EngineConfig(slots=slots,
+                        cache=CacheConfig(page_size=8, max_len=cache_len))
+    eng = PagedEngine(model, params, config=dataclasses.replace(
+        base, decode_kernel="reference"))
     gather_b, fused_b = _modeled_decode_bytes(eng)
     measured = _measured_gather_bytes(eng)
     run(eng)                      # warm
@@ -678,8 +790,8 @@ def paged_decode_paths(arch: str = "yi-6b", *, requests: int = 6,
                  f"modeled_hbm_B_per_tok={gather_b:.0f}{meas}"))
 
     if on_tpu:
-        eng_f = PagedEngine(model, params, slots=slots, page_size=8,
-                            max_len=cache_len, decode_kernel="fused")
+        eng_f = PagedEngine(model, params, config=dataclasses.replace(
+            base, decode_kernel="fused"))
         run(eng_f)
         tok_s_fused = run(eng_f)
         extra = (f"tok_s={tok_s_fused:.1f}|"
@@ -699,16 +811,19 @@ def serving_bench() -> list[tuple]:
 
 
 def main(argv=None) -> int:
+    from repro.launch.engine_args import (add_engine_args,
+                                          engine_config_from_args)
     p = argparse.ArgumentParser()
     p.add_argument("--smoke", action="store_true",
                    help="CI-sized chunked-engine workload; writes the "
                         "perf-trajectory artifact (default BENCH_serving.json)")
     p.add_argument("--json", default=None, metavar="PATH",
                    help="where to write the schema-validated bench document")
-    p.add_argument("--prefix-cache", action="store_true",
-                   help="add the shared-prefix trace row: cache-on vs "
-                        "cache-off warm passes over one re-sent workload "
-                        "(hit rate, prefill tokens/request, TTFT)")
+    # The engine knob surface is declared once, in launch.engine_args, and
+    # shared with launch/serve.py — --prefix-cache and --preempt double as
+    # this bench's trace-row toggles; --faults stays local (here it is a
+    # row toggle, not the engine's fault-plan SPEC string).
+    add_engine_args(p, exclude=("faults",))
     p.add_argument("--history", default=None, metavar="PATH",
                    help="append this run's document to the perf-trajectory "
                         "JSONL (one schema-valid document per line)")
@@ -720,11 +835,12 @@ def main(argv=None) -> int:
                         "engine vs a speculation-off baseline (accept "
                         "rate, accepted/step, decode speedup, and token "
                         "identity as row extras)")
-    p.add_argument("--preempt", action="store_true",
-                   help="add the bursty two-class trace row: low-priority "
-                        "requests fill the slots, a high-priority burst "
-                        "preempts to host (SLO attainment + preemption "
-                        "count as row extras)")
+    p.add_argument("--moe", action="store_true",
+                   help="add the grouped-expert-GEMM trace row: an MoE "
+                        "workload through the grouped kernel vs the "
+                        "per-expert reference einsum (token identity, "
+                        "warm retraces, and modeled MoE HBM bytes/token "
+                        "for both dataflows as row extras)")
     p.add_argument("--faults", action="store_true",
                    help="add the seeded fault-injection trace row: warm "
                         "workload re-served under a deterministic "
@@ -770,6 +886,9 @@ def main(argv=None) -> int:
                 # 1.0 on this trace (the §15 acceptance criterion)
                 recs += speculative_records(requests=4, max_new=16,
                                             prefix_len=24)
+            if args.moe and want("serving_moe_"):
+                recs += moe_records(requests=3, max_new=4,
+                                    config=engine_config_from_args(args))
             if args.preempt and want("serving_preempt_burst_"):
                 recs += preempt_burst_records(n_low=3, n_high=2, max_new=6)
             if args.faults and want("serving_faults_"):
@@ -793,6 +912,13 @@ def main(argv=None) -> int:
                          f"{r['spec_accept_rate'] * 100:.1f}%), decode "
                          f"tok/s {r['tok_s_off']} -> {r['warm_tok_s']} "
                          f"({r['decode_speedup']}x), "
+                         f"token-identical={bool(r['token_identity'])}")
+            if "moe_hbm_reduction" in r:
+                extra = (f", moe gemm={r['moe_gemm']} "
+                         f"({r['experts']} experts), modeled moe hbm "
+                         f"B/tok {r['modeled_moe_hbm_B_per_tok_ref']}"
+                         f" -> {r['modeled_moe_hbm_B_per_tok']} "
+                         f"({r['moe_hbm_reduction']}x), "
                          f"token-identical={bool(r['token_identity'])}")
             if "faults_injected" in r:
                 extra = (f", faults injected={r['faults_injected']}, "
@@ -864,6 +990,8 @@ def main(argv=None) -> int:
         records += prefix_cache_records()
     if args.speculative:
         records += speculative_records()
+    if args.moe:
+        records += moe_records(config=engine_config_from_args(args))
     if args.preempt:
         records += preempt_burst_records()
     if args.faults:

@@ -1,0 +1,317 @@
+"""Grouped expert GEMM: all E experts' ``[m_e, d] @ [d, f]`` in ONE program.
+
+The MoE expert FFN is the last place the serving path violated the Kraken
+uniform-dataflow thesis: mixtral/llama4 decode ran the expert GEMMs as a
+dense einsum over the full ``[E, C, d]`` capacity buffer — every expert's
+weights fetched and every capacity row multiplied whether or not a single
+token routed there.  This kernel runs all E experts through one fixed-shape
+Pallas program with **one tile plan shared across experts**; the per-expert
+token count ``m_e`` is *grid masking*, not a shape:
+
+* tokens arrive pre-sorted by expert id — the cumulative-sum
+  position-in-expert scatter in ``models/moe.py`` already builds the
+  ``[E, C, d]`` capacity buffer, which flattened row-major *is* the sorted
+  layout (expert ``e`` owns rows ``[e*C, e*C + m_e)``),
+* a ``group_starts``/``group_sizes`` table rides as scalar-prefetch
+  operands (``pltpu.PrefetchScalarGridSpec``) and every grid step's
+  BlockSpec index map resolves its row block from the table — exactly how
+  ``paged_attention.py`` walks page tables,
+* grid step ``(e, n_block, m_block)`` is **dead** when
+  ``m_block * block_rows >= group_sizes[e]``: the whole dot is skipped via
+  ``pl.when`` (the step only zero-fills its output tile), the x-block index
+  map remaps the DMA to the group's first block, and an *empty* group's
+  weight fetch remaps to expert 0 — consecutive dead steps then present
+  unchanged block indices and the pipeline elides the re-DMA,
+* ``m`` is the innermost grid dim, so an expert's weight tile stays
+  resident while the kernel rotates that expert's tokens through it —
+  Kraken's weights-rotator discipline at the kernel level.
+
+A decode step routes at most ``slots * top_k`` tokens, so for mixtral
+(E=8, top-2, few slots) most experts are empty most steps: the grouped
+walk's weight traffic scales with *active* experts while the reference
+einsum always pays all E.  ``block_rows`` (the shared M tile) is the
+tunable the ``op_kind="moe_gemm"`` autotuner measures.
+
+The dense per-expert loop survives as ``mode="reference"`` — the off-TPU
+default and the oracle the property tests pin this kernel to.  The grouped
+path is inference-only (no custom VJP); training keeps the einsum
+formulation, which is also the only path that understands mesh sharding.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.elastic import ceil_div, round_up
+
+# ---------------------------------------------------------------------------
+# MoE-GEMM policy: which implementation moe_block traces
+# ---------------------------------------------------------------------------
+
+MOE_GEMM_ENV = "KRAKEN_MOE_GEMM"
+_VALID_MODES = ("auto", "grouped", "interpret", "reference")
+_mode: str | None = None
+
+
+def get_moe_gemm_mode() -> str:
+    """Process-wide MoE expert-GEMM mode: ``auto`` (TPU -> grouped, else
+    reference), ``grouped`` (native Pallas), ``interpret`` (Pallas
+    interpret — CI/property coverage of the real grid on CPU),
+    ``reference`` (dense per-expert einsum — the oracle)."""
+    if _mode is not None:
+        return _mode
+    env = os.environ.get(MOE_GEMM_ENV, "auto")
+    return env if env in _VALID_MODES else "auto"
+
+
+def set_moe_gemm_mode(mode: str | None) -> None:
+    """Set (or with ``None``, reset to env/default) the process-wide mode."""
+    global _mode
+    if mode is not None and mode not in _VALID_MODES:
+        raise ValueError(f"moe gemm mode must be one of {_VALID_MODES}, "
+                         f"got {mode!r}")
+    _mode = mode
+
+
+def resolve_moe_gemm_mode() -> str:
+    mode = get_moe_gemm_mode()
+    if mode == "auto":
+        return "grouped" if jax.default_backend() == "tpu" else "reference"
+    return mode
+
+
+@contextlib.contextmanager
+def use_moe_gemm_mode(mode: str | None):
+    """Scope the MoE-GEMM mode over a trace (the engine jits its three
+    programs under this, so two engines with different modes coexist).
+    ``None`` is a no-op (defer to env/process default)."""
+    if mode is None:
+        yield
+        return
+    global _mode
+    prev = _mode
+    set_moe_gemm_mode(mode)
+    try:
+        yield
+    finally:
+        _mode = prev
+
+
+# ---------------------------------------------------------------------------
+# Tile plan: one block_rows shared by every expert
+# ---------------------------------------------------------------------------
+
+_SUBLANE = {"int8": 32, "bfloat16": 16}
+_LANE = 128
+
+
+def _sublane(dtype_name: str) -> int:
+    return _SUBLANE.get(dtype_name, 8)
+
+
+def default_block_rows(rows_per_group: int,
+                       dtype_name: str = "float32") -> int:
+    """Untuned M tile: the whole (sublane-rounded) group up to one MXU
+    pass — dynamic M then masks at most one block per expert."""
+    sub = _sublane(dtype_name)
+    return max(sub, min(round_up(max(1, rows_per_group), sub), 128))
+
+
+def resolve_moe_block_rows(*, experts: int, m_total: int, d: int, f: int,
+                           dtype_name: str) -> int:
+    """``block_rows`` under the process-wide tile policy (mirrors
+    ``resolve_pages_per_block``): ``model`` -> static default; ``cached`` ->
+    replay a persisted ``op_kind="moe_gemm"`` winner (key ``m/k/n`` <-
+    m_total/d/f, entry validated against ``experts``) or fall back;
+    ``autotune`` -> measure the miss and persist it."""
+    from repro import tuning
+    from repro.tuning import cache as tcache
+    from repro.tuning.search import lookup_moe_gemm
+    rows = ceil_div(m_total, max(1, experts))
+    default = default_block_rows(rows, dtype_name)
+    mode = tuning.get_tile_mode()
+    if mode == "model":
+        return default
+    cache = tuning.get_tile_cache()
+    key = tcache.cache_key("moe_gemm", m_total, d, f, dtype_name,
+                           tuning.backend_name())
+    hit = lookup_moe_gemm(cache, key, experts=experts,
+                          rows_per_group=rows, dtype_name=dtype_name)
+    if hit is not None:
+        return hit
+    if mode == "autotune":
+        from repro.tuning.search import autotune_moe_gemm
+        return autotune_moe_gemm(experts, m_total, d, f,
+                                 dtype_name=dtype_name, cache=cache)
+    return default
+
+
+# ---------------------------------------------------------------------------
+# The kernel
+# ---------------------------------------------------------------------------
+
+def _kernel(starts_ref, sizes_ref, x_ref, w_ref, o_ref, *, bm: int,
+            acc_dtype):
+    e = pl.program_id(0)
+    mi = pl.program_id(2)
+    size = sizes_ref[e]
+    live = mi * bm < size
+
+    @pl.when(live)
+    def _compute():
+        # dynamic M: rows at index >= size inside the last live block are
+        # masked to zero — padding never leaks into the product
+        rows = mi * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0)
+        xb = jnp.where(rows < size, x_ref[...], 0)
+        o_ref[...] = jnp.dot(xb, w_ref[0],
+                             preferred_element_type=acc_dtype
+                             ).astype(o_ref.dtype)
+
+    @pl.when(jnp.logical_not(live))
+    def _dead():
+        # the FLOP block is skipped; the output tile still belongs to this
+        # step, so it must be zero-filled (dropped rows combine to zero)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+
+def grouped_moe_gemm(xs: jnp.ndarray, w: jnp.ndarray, sizes: jnp.ndarray, *,
+                     block_rows: int | None = None,
+                     block_cols: int | None = None,
+                     out_dtype=None, interpret: bool = False) -> jnp.ndarray:
+    """All E experts' ``xs[e, :sizes[e]] @ w[e]`` as one fixed-shape program.
+
+    xs: ``[E, C, d]`` capacity buffer, expert ``e``'s tokens in rows
+    ``[0, sizes[e])`` (rows beyond are masked, their content is irrelevant);
+    w: ``[E, d, f]``; sizes: ``[E]`` int32 live-row counts.  Returns
+    ``[E, C, f]`` with rows beyond ``sizes[e]`` exactly zero.  Integer
+    inputs accumulate in int32 (out_dtype defaults to int32), floats in
+    f32 (out_dtype defaults to ``xs.dtype``).
+    """
+    e, c, d = xs.shape
+    ew, dw, f = w.shape
+    if (ew, dw) != (e, d):
+        raise ValueError(f"weight bank {w.shape} does not match tokens "
+                        f"{xs.shape}")
+    integer = jnp.issubdtype(xs.dtype, jnp.integer)
+    acc_dtype = jnp.int32 if integer else jnp.float32
+    out_dtype = out_dtype or (jnp.int32 if integer else xs.dtype)
+    dtype_name = jnp.dtype(xs.dtype).name
+
+    sub = _sublane(dtype_name)
+    bm = int(block_rows or default_block_rows(c, dtype_name))
+    bm = round_up(max(sub, min(bm, round_up(c, sub))), sub)
+    cpad = round_up(c, bm)
+    dpad = round_up(d, _LANE)
+    fpad = round_up(f, _LANE)
+    bn = min(int(block_cols or _LANE), fpad)
+
+    xs = jnp.pad(xs, [(0, 0), (0, cpad - c), (0, dpad - d)])
+    w = jnp.pad(w, [(0, 0), (0, dpad - d), (0, fpad - f)])
+    x = xs.reshape(e * cpad, dpad)
+    starts = jnp.arange(e, dtype=jnp.int32) * cpad
+    sizes = jnp.minimum(jnp.asarray(sizes, jnp.int32), c)
+
+    def x_map(ei, ni, mi, starts, sizes):
+        # dead m-blocks remap to the group's first block: consecutive dead
+        # steps keep the index unchanged and the pipeline elides the re-DMA
+        live_mi = jnp.where(mi * bm < sizes[ei], mi, 0)
+        return (starts[ei] // bm + live_mi, 0)
+
+    def w_map(ei, ni, mi, starts, sizes):
+        # an empty group never touches its weights: fetch expert 0's tile
+        return (jnp.where(sizes[ei] > 0, ei, 0), 0, ni)
+
+    def o_map(ei, ni, mi, starts, sizes):
+        return (starts[ei] // bm + mi, ni)
+
+    from jax.experimental.pallas import tpu as pltpu
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(e, fpad // bn, cpad // bm),
+        in_specs=[pl.BlockSpec((bm, dpad), x_map),
+                  pl.BlockSpec((1, dpad, bn), w_map)],
+        out_specs=pl.BlockSpec((bm, bn), o_map),
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, bm=bm, acc_dtype=acc_dtype),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((e * cpad, fpad), out_dtype),
+        interpret=interpret,
+    )(starts, sizes, x, w)
+    return out.reshape(e, cpad, fpad)[:, :c, :f]
+
+
+def reference_grouped_gemm(xs: jnp.ndarray, w: jnp.ndarray,
+                           sizes: jnp.ndarray, *,
+                           out_dtype=None) -> jnp.ndarray:
+    """Per-expert loop oracle: same contract as ``grouped_moe_gemm``."""
+    e, c, _ = xs.shape
+    integer = jnp.issubdtype(xs.dtype, jnp.integer)
+    acc_dtype = jnp.int32 if integer else jnp.float32
+    out_dtype = out_dtype or (jnp.int32 if integer else xs.dtype)
+    rows = jnp.arange(c, dtype=jnp.int32)
+    outs = []
+    for i in range(e):
+        xe = jnp.where((rows < sizes[i])[:, None], xs[i], 0)
+        outs.append(jnp.dot(xe, w[i], preferred_element_type=acc_dtype
+                            ).astype(out_dtype))
+    return jnp.stack(outs)
+
+
+def grouped_expert_ffn(buf: jnp.ndarray, sizes: jnp.ndarray,
+                       wi_gate: jnp.ndarray, wi_up: jnp.ndarray,
+                       wo: jnp.ndarray, *, mode: str | None = None,
+                       ) -> jnp.ndarray:
+    """The full expert FFN ``silu(x@wi_gate) * (x@wi_up) @ wo`` over the
+    ``[E, C, d]`` capacity buffer, as three grouped GEMMs sharing one tile
+    plan per shape (resolved through the ``op_kind="moe_gemm"`` policy)."""
+    mode = mode or resolve_moe_gemm_mode()
+    interpret = mode == "interpret"
+    e, c, d = buf.shape
+    f = wi_gate.shape[-1]
+    dtype_name = jnp.dtype(buf.dtype).name
+    bm_in = resolve_moe_block_rows(experts=e, m_total=e * c, d=d, f=f,
+                                   dtype_name=dtype_name)
+    bm_out = resolve_moe_block_rows(experts=e, m_total=e * c, d=f, f=d,
+                                    dtype_name=dtype_name)
+    gate = grouped_moe_gemm(buf, wi_gate, sizes, block_rows=bm_in,
+                            interpret=interpret)
+    up = grouped_moe_gemm(buf, wi_up, sizes, block_rows=bm_in,
+                          interpret=interpret)
+    h = (jax.nn.silu(gate) * up).astype(buf.dtype)
+    return grouped_moe_gemm(h, wo, sizes, block_rows=bm_out,
+                            interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Modeled HBM traffic (serving_bench --moe)
+# ---------------------------------------------------------------------------
+
+def modeled_ffn_bytes(sizes, *, capacity: int, d: int, f: int,
+                      itemsize: int, block_rows: int,
+                      dtype_name: str = "float32") -> tuple[int, int]:
+    """Modeled HBM bytes for one MoE layer's expert FFN given concrete
+    per-expert live counts: ``(reference, grouped)``.
+
+    The reference einsum reads every expert's three weight banks and
+    streams the full ``E * C`` capacity rows through all three GEMMs.  The
+    grouped walk fetches weights only for *active* experts and rows only
+    for *live* m-blocks (dead blocks skip the DMA; the last live block
+    rounds up to ``block_rows``).
+    """
+    e = len(sizes)
+    w_bytes = 3 * d * f * itemsize                      # gate + up + wo
+    act_row = (2 * d + 2 * f + f + d) * itemsize        # x r2, h w+r, out w
+    cpad = round_up(capacity, _sublane(dtype_name))
+    reference = e * w_bytes + e * cpad * act_row
+    live_rows = sum(min(ceil_div(int(s), block_rows) * block_rows, cpad)
+                    for s in sizes if int(s) > 0)
+    active = sum(1 for s in sizes if int(s) > 0)
+    grouped = active * w_bytes + live_rows * act_row
+    return reference, grouped

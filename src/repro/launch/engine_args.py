@@ -1,0 +1,136 @@
+"""The one engine flag surface: ``add_engine_args`` / ``engine_config_from_args``.
+
+Every CLI frontend that builds a :class:`repro.serving.EngineConfig`
+(``launch/serve.py``, ``benchmarks/serving_bench.py``) declares its engine
+flags through this pair, so the flag names, defaults, and help text are
+written exactly once and the frontends can never drift from the engine's
+actual surface.  ``add_engine_args`` puts the flags in their own argument
+group; ``engine_config_from_args`` folds the parsed namespace into the
+frozen config tree (``FaultPlan.from_spec`` for ``--faults``, ms -> s for
+the SLO targets).  A frontend that owns a homonymous flag of its own
+(serving_bench's ``--faults`` row toggle) excludes it and the builder
+falls back to that field's default.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def add_engine_args(parser: argparse.ArgumentParser,
+                    exclude: tuple[str, ...] = ()) -> None:
+    """Declare the PagedEngine flags on ``parser`` (one argument group).
+
+    ``exclude`` names flags (without the leading dashes) the caller keeps
+    for itself; :func:`engine_config_from_args` then uses the config-field
+    default for them.
+    """
+    g = parser.add_argument_group("engine")
+
+    def arg(name, *a, **kw):
+        if name.lstrip("-") not in exclude:
+            g.add_argument(name, *a, **kw)
+
+    arg("--slots", type=int, default=4)
+    arg("--cache-len", type=int, default=64,
+        help="per-slot KV budget (the engine's max_len): admission caps "
+             "prompt + max_new at this many tokens")
+    arg("--page-size", type=int, default=8)
+    arg("--chunk", type=int, default=None,
+        help="prefill chunk width: prompts stream in CHUNK tokens per "
+             "mixed step, fused with the batched decode step (default: "
+             "cache-len — whole-prompt chunks)")
+    arg("--step-budget", type=int, default=None,
+        help="per-step token budget; decode slots are accounted first, "
+             "the prefill chunk only granted from the remainder "
+             "(default: slots + chunk)")
+    arg("--max-queue", type=int, default=64,
+        help="admission-control queue depth (submissions beyond it are "
+             "rejected)")
+    arg("--temperature", type=float, default=0.0)
+    arg("--paged-kernel", default=None,
+        choices=["auto", "fused", "interpret", "reference"],
+        help="paged decode attention implementation (default: "
+             "$KRAKEN_PAGED_DECODE, else auto — fused Pallas kernel on "
+             "TPU, dense-gather reference elsewhere; 'interpret' runs "
+             "the fused kernel in Pallas interpret mode for off-TPU "
+             "validation)")
+    arg("--moe-gemm", default=None,
+        choices=["auto", "grouped", "interpret", "reference"],
+        help="MoE expert GEMM implementation (default: $KRAKEN_MOE_GEMM, "
+             "else auto — grouped Pallas kernel on TPU, per-expert einsum "
+             "reference elsewhere; 'interpret' runs the grouped kernel in "
+             "Pallas interpret mode for off-TPU validation)")
+    arg("--prefix-cache", action="store_true",
+        help="share KV pages of cached prompt prefixes across requests "
+             "(copy-on-write; DESIGN.md §12).  Only full-attention paged "
+             "architectures can cache — recurrent/windowed archs report "
+             "hit rate 0")
+    arg("--preempt", action="store_true",
+        help="allow an urgent arrival to swap a lower-class victim slot "
+             "out to host and resume it later token-identically "
+             "(DESIGN.md §13)")
+    arg("--slo-ttft-ms", type=float, default=None,
+        help="TTFT SLO target in ms (per-class attainment reported per "
+             "pass)")
+    arg("--slo-e2e-ms", type=float, default=None,
+        help="end-to-end latency SLO target in ms")
+    arg("--speculate", type=int, default=0, metavar="K",
+        help="draft up to K tokens per decoding slot from the request's "
+             "committed history (n-gram prompt lookup) and verify them in "
+             "the mixed chunk step; greedy only (DESIGN.md §15)")
+    arg("--deadline-s", type=float, default=None,
+        help="per-request wall-clock deadline in seconds; a request still "
+             "unfinished past it ends TIMEOUT with all resources "
+             "reclaimed (DESIGN.md §14)")
+    arg("--watchdog", action="store_true",
+        help="run periodic invariant sweeps (allocator/cache oracles, "
+             "refcount reconciliation, slot consistency) and the at-drain "
+             "sweep")
+    arg("--faults", default=None, metavar="SPEC",
+        help="inject a seeded deterministic fault plan, e.g. "
+             "'seed=0,n=8,ticks=64,kinds=step_exc+alloc_exhaust"
+             "+swap_corrupt+latency' — step faults recover through the "
+             "PREEMPTED retry path (DESIGN.md §14)")
+    arg("--heartbeat", default=None, metavar="PATH",
+        help="write a throttled JSON liveness file every step "
+             "(runtime.fault_tolerance.Heartbeat) so a wedged serve "
+             "process is detectable from outside")
+
+
+def engine_config_from_args(args: argparse.Namespace):
+    """Fold a parsed namespace (from :func:`add_engine_args`) into an
+    :class:`~repro.serving.EngineConfig`.  Flags the frontend excluded
+    fall back to the config defaults."""
+    from repro.serving import (CacheConfig, EngineConfig, FaultConfig,
+                               FaultPlan, SchedulerConfig, SpecConfig)
+
+    def get(name, default=None):
+        return getattr(args, name, default)
+
+    faults = get("faults")
+    plan = FaultPlan.from_spec(faults) if isinstance(faults, str) else None
+    slo_ttft = get("slo_ttft_ms")
+    slo_e2e = get("slo_e2e_ms")
+    return EngineConfig(
+        slots=get("slots", 4),
+        chunk=get("chunk"),
+        step_budget=get("step_budget"),
+        temperature=get("temperature", 0.0),
+        decode_kernel=get("paged_kernel"),
+        moe_gemm=get("moe_gemm"),
+        sched=SchedulerConfig(
+            max_queue=get("max_queue", 64),
+            preempt=bool(get("preempt", False)),
+            slo_ttft_s=slo_ttft / 1e3 if slo_ttft else None,
+            slo_e2e_s=slo_e2e / 1e3 if slo_e2e else None),
+        cache=CacheConfig(
+            page_size=get("page_size", 8),
+            max_len=get("cache_len", 64),
+            prefix_cache=bool(get("prefix_cache", False))),
+        spec=SpecConfig(speculate=int(get("speculate", 0) or 0)),
+        fault=FaultConfig(
+            deadline_s=get("deadline_s"),
+            watchdog=bool(get("watchdog", False)) or None,
+            plan=plan,
+            heartbeat=get("heartbeat")))

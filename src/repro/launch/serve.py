@@ -52,6 +52,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_arch, smoke_config
+from repro.launch.engine_args import add_engine_args, engine_config_from_args
 from repro.models.model import Model
 
 
@@ -108,6 +109,33 @@ def warm_tile_cache(cfg, *, slots: int, prompt_lens: list[int],
             log(f"tile-cache {status:<7} "
                 f"paged_decode       m={g_slots:<6} k={logical:<6} "
                 f"n={head_dim:<6} -> pages_per_block={ppb}")
+        # MoE archs additionally tune the grouped expert GEMM's block_rows
+        # per (token-width, direction) cell: the engine runs exactly two
+        # token widths (mixed = slots*chunk, decode = slots) and each MoE
+        # block is two GEMM shapes (d->f for gate/up, f->d for down).
+        if getattr(cfg, "num_experts", 0):
+            from repro.models.moe import expert_capacity
+            e, d, f = cfg.num_experts, cfg.d_model, cfg.moe_d_ff
+            for tokens in sorted({slots, slots * max(prompt_lens)}):
+                cap = expert_capacity(tokens, cfg)
+                m_total = e * cap
+                for kk, nn in ((d, f), (f, d)):
+                    key = tuning.cache_key("moe_gemm", m_total, kk, nn,
+                                           cfg.dtype, tuning.backend_name())
+                    was_hit = tuning.lookup_moe_gemm(
+                        cache, key, experts=e, rows_per_group=cap,
+                        dtype_name=cfg.dtype, count=False) is not None
+                    bm = tuning.autotune_moe_gemm(
+                        e, m_total, kk, nn, dtype_name=cfg.dtype,
+                        cache=cache, log=log)
+                    tuned = tuning.lookup_moe_gemm(
+                        cache, key, experts=e, rows_per_group=cap,
+                        dtype_name=cfg.dtype, count=False) is not None
+                    status = ("hit" if was_hit
+                              else "tuned" if tuned else "skipped")
+                    log(f"tile-cache {status:<7} "
+                        f"moe_gemm           m={m_total:<6} k={kk:<6} "
+                        f"n={nn:<6} -> block_rows={bm}")
     else:
         log(f"tile-cache: loaded {len(cache)} entries from "
             f"{cache.path or '<memory>'} for {len(cells)} serving cells"
@@ -127,40 +155,19 @@ def main(argv=None) -> int:
     p.add_argument("--arch", default="yi-6b")
     p.add_argument("--smoke", action="store_true")
     p.add_argument("--requests", type=int, default=8)
-    p.add_argument("--slots", type=int, default=4)
     p.add_argument("--prompt-len", type=int, default=12)
     p.add_argument("--prompt-lens", default=None, metavar="L1,L2,...",
                    help="mixed prompt lengths, cycled over requests "
                         "(exercises the bucketed prefill)")
     p.add_argument("--max-new", type=int, default=16)
-    p.add_argument("--cache-len", type=int, default=64)
-    p.add_argument("--page-size", type=int, default=8)
-    p.add_argument("--chunk", type=int, default=None,
-                   help="prefill chunk width: prompts stream in CHUNK "
-                        "tokens per mixed step, fused with the batched "
-                        "decode step (default: cache-len — whole-prompt "
-                        "chunks)")
-    p.add_argument("--step-budget", type=int, default=None,
-                   help="per-step token budget; decode slots are accounted "
-                        "first, the prefill chunk only granted from the "
-                        "remainder (default: slots + chunk)")
-    p.add_argument("--temperature", type=float, default=0.0)
+    # Every engine knob (--slots, --cache-len, --chunk, --paged-kernel,
+    # --moe-gemm, --speculate, --faults, ...) is declared once in
+    # launch.engine_args and shared with benchmarks/serving_bench.py.
+    add_engine_args(p)
     p.add_argument("--dense", action="store_true", help=argparse.SUPPRESS)
-    p.add_argument("--paged-kernel", default=None,
-                   choices=["auto", "fused", "interpret", "reference"],
-                   help="paged decode attention implementation (default: "
-                        "$KRAKEN_PAGED_DECODE, else auto — fused Pallas "
-                        "kernel on TPU, dense-gather reference elsewhere; "
-                        "'interpret' runs the fused kernel in Pallas "
-                        "interpret mode for off-TPU validation)")
     p.add_argument("--repeat", type=int, default=1,
                    help="serve the workload N times through one engine; a "
                         "warm pass must print zero retraces")
-    p.add_argument("--prefix-cache", action="store_true",
-                   help="share KV pages of cached prompt prefixes across "
-                        "requests (copy-on-write; DESIGN.md §12).  Only "
-                        "full-attention paged architectures can cache — "
-                        "recurrent/windowed archs report hit rate 0")
     p.add_argument("--shared-prefix", type=int, default=0, metavar="N",
                    help="prepend one fixed N-token prefix to every prompt "
                         "(the shared-prefix trace the prefix-cache smoke "
@@ -168,23 +175,9 @@ def main(argv=None) -> int:
     p.add_argument("--priority", default=None, metavar="P1,P2,...",
                    help="priority classes (0 = most urgent), cycled over "
                         "requests (default: all class 0 == FIFO)")
-    p.add_argument("--preempt", action="store_true",
-                   help="allow an urgent arrival to swap a lower-class "
-                        "victim slot out to host and resume it later "
-                        "token-identically (DESIGN.md §13)")
     p.add_argument("--stagger", type=int, default=0, metavar="N",
                    help="run N engine steps between submissions (bursty "
                         "arrivals: later requests meet a busy engine)")
-    p.add_argument("--slo-ttft-ms", type=float, default=None,
-                   help="TTFT SLO target in ms (per-class attainment "
-                        "reported per pass)")
-    p.add_argument("--slo-e2e-ms", type=float, default=None,
-                   help="end-to-end latency SLO target in ms")
-    p.add_argument("--speculate", type=int, default=0, metavar="K",
-                   help="draft up to K tokens per decoding slot from the "
-                        "request's committed history (n-gram prompt "
-                        "lookup) and verify them in the mixed chunk step; "
-                        "greedy only (DESIGN.md §15)")
     p.add_argument("--verify-speculate", action="store_true",
                    help="replay every submission through a fresh "
                         "speculation-off engine and assert token identity "
@@ -193,23 +186,6 @@ def main(argv=None) -> int:
                    help="replay every submission through a fresh "
                         "preempt-off engine and assert token identity "
                         "(greedy only)")
-    p.add_argument("--deadline-s", type=float, default=None,
-                   help="per-request wall-clock deadline in seconds; a "
-                        "request still unfinished past it ends TIMEOUT "
-                        "with all resources reclaimed (DESIGN.md §14)")
-    p.add_argument("--watchdog", action="store_true",
-                   help="run periodic invariant sweeps (allocator/cache "
-                        "oracles, refcount reconciliation, slot "
-                        "consistency) and the at-drain sweep")
-    p.add_argument("--faults", default=None, metavar="SPEC",
-                   help="inject a seeded deterministic fault plan, e.g. "
-                        "'seed=0,n=8,ticks=64,kinds=step_exc+alloc_exhaust"
-                        "+swap_corrupt+latency' — step faults recover "
-                        "through the PREEMPTED retry path (DESIGN.md §14)")
-    p.add_argument("--heartbeat", default=None, metavar="PATH",
-                   help="write a throttled JSON liveness file every step "
-                        "(runtime.fault_tolerance.Heartbeat) so a wedged "
-                        "serve process is detectable from outside")
     p.add_argument("--verify-faults", action="store_true",
                    help="replay every submission through a fresh "
                         "fault-free engine and assert each request that "
@@ -267,23 +243,11 @@ def main(argv=None) -> int:
                 for i in range(args.requests)]
 
     prios = _parse_lens(args.priority, 0)
-    slo_kw = dict(
-        slo_ttft_s=args.slo_ttft_ms / 1e3 if args.slo_ttft_ms else None,
-        slo_e2e_s=args.slo_e2e_ms / 1e3 if args.slo_e2e_ms else None)
-    from repro.serving import FaultPlan
-    plan = FaultPlan.from_spec(args.faults) if args.faults else None
-    eng = PagedEngine(model, params, slots=args.slots,
-                      page_size=args.page_size, max_len=args.cache_len,
-                      chunk=args.chunk, step_budget=args.step_budget,
-                      temperature=args.temperature,
-                      decode_kernel=args.paged_kernel,
-                      prefix_cache=args.prefix_cache,
-                      preempt=args.preempt,
-                      deadline_s=args.deadline_s, watchdog=args.watchdog,
-                      faults=plan, heartbeat=args.heartbeat,
-                      speculate=args.speculate, **slo_kw)
+    config = engine_config_from_args(args)
+    eng = PagedEngine(model, params, config=config)
     print(f"# paged decode kernel: {eng.decode_kernel} "
-          f"chunk={eng.chunk} step budget={eng.step_budget}"
+          + (f"moe gemm={eng.moe_gemm} " if cfg.num_experts else "")
+          + f"chunk={eng.chunk} step budget={eng.step_budget}"
           + (f" prefix cache={'on' if eng.prefix_cache is not None else 'off'}"
              if args.prefix_cache else "")
           + (" preempt=on" if args.preempt else "")
@@ -314,12 +278,7 @@ def main(argv=None) -> int:
         # replay the exact submissions through a fresh engine with
         # speculation off: accepted drafts must reproduce the greedy chain
         # token for token — speculation changes latency, never output
-        ref_eng = PagedEngine(model, params, slots=args.slots,
-                              page_size=args.page_size,
-                              max_len=args.cache_len, chunk=args.chunk,
-                              step_budget=args.step_budget,
-                              decode_kernel=args.paged_kernel,
-                              prefix_cache=args.prefix_cache)
+        ref_eng = PagedEngine(model, params, config=config.verify_reference())
         for rid, prompt, max_new, prio in subs:
             ref_eng.submit(prompt, max_new, rid=rid, priority=prio)
         ref = ref_eng.run_until_idle()
@@ -332,12 +291,7 @@ def main(argv=None) -> int:
         # replay the exact submissions through a fresh engine with
         # preemption off: a preempted request's output must be
         # token-identical to an uninterrupted run (greedy)
-        ref_eng = PagedEngine(model, params, slots=args.slots,
-                              page_size=args.page_size,
-                              max_len=args.cache_len, chunk=args.chunk,
-                              step_budget=args.step_budget,
-                              decode_kernel=args.paged_kernel,
-                              prefix_cache=args.prefix_cache)
+        ref_eng = PagedEngine(model, params, config=config.verify_reference())
         for rid, prompt, max_new, prio in subs:
             ref_eng.submit(prompt, max_new, rid=rid, priority=prio)
         ref = ref_eng.run_until_idle()
@@ -357,12 +311,7 @@ def main(argv=None) -> int:
         # replay the exact submissions through a fresh fault-free engine:
         # every request that still completed under the fault plan must be
         # token-identical — faults may fail requests, never corrupt them
-        ref_eng = PagedEngine(model, params, slots=args.slots,
-                              page_size=args.page_size,
-                              max_len=args.cache_len, chunk=args.chunk,
-                              step_budget=args.step_budget,
-                              decode_kernel=args.paged_kernel,
-                              prefix_cache=args.prefix_cache)
+        ref_eng = PagedEngine(model, params, config=config.verify_reference())
         for rid, prompt, max_new, prio in subs:
             ref_eng.submit(prompt, max_new, rid=rid, priority=prio)
         ref = ref_eng.run_until_idle()

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import sharding
+from repro.kernels import kraken_moe_gemm as _mg
 from repro.models.layers import Spec, dense
 
 Params = dict
@@ -74,9 +75,16 @@ def _dispatch_groups(t: int) -> int:
     return g if (g > 0 and t % g == 0) else 1
 
 
+def expert_capacity(tokens: int, cfg) -> int:
+    """Per-expert capacity C for a program routing ``tokens`` tokens — the
+    one formula dispatch, the autotune warmer, and the bench model share."""
+    return max(1, int(tokens * cfg.experts_per_token / cfg.num_experts
+                      * cfg.capacity_factor))
+
+
 def _route_and_dispatch(cfg, router_w, xt: jax.Array):
     """Per-group routing + capacity dispatch.  xt: [Tg, d] ->
-    (buf [E, Cg, d], combine info)."""
+    (buf [E, Cg, d], combine info, aux, sizes [E])."""
     tg, d = xt.shape
     e, k = cfg.num_experts, cfg.experts_per_token
     logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
@@ -90,7 +98,7 @@ def _route_and_dispatch(cfg, router_w, xt: jax.Array):
     onehot = jax.nn.one_hot(expert_ids[:, 0], e, dtype=jnp.float32)
     aux = e * jnp.sum(onehot.mean(0) * probs.mean(0))
 
-    capacity = max(1, int(tg * k / e * cfg.capacity_factor))
+    capacity = expert_capacity(tg, cfg)
     flat_ids = expert_ids.reshape(-1)                            # [Tg*k]
     eo = jax.nn.one_hot(flat_ids, e, dtype=jnp.int32)            # [Tg*k, E]
     pos_in_e = (jnp.cumsum(eo, axis=0) - 1) * eo                 # [Tg*k, E]
@@ -108,7 +116,10 @@ def _route_and_dispatch(cfg, router_w, xt: jax.Array):
     src = jnp.repeat(xt, k, axis=0)                              # [Tg*k, d]
     buf = jnp.zeros((e * capacity, d), xt.dtype)
     buf = buf.at[lin].set(src, mode="drop").reshape(e, capacity, d)
-    return buf, (lin, keep, gate_vals), aux
+    # per-expert live-row counts: the grouped kernel's group_sizes table
+    # (keep already enforces pos < capacity, so sizes[e] <= capacity)
+    sizes = jnp.sum(eo * keep[:, None].astype(jnp.int32), axis=0)
+    return buf, (lin, keep, gate_vals), aux, sizes
 
 
 def _combine(out_buf: jax.Array, info, tg: int, k: int, dtype) -> jax.Array:
@@ -139,37 +150,53 @@ def moe_block(cfg, params: Params, prefix: str, x: jax.Array) -> MoEOut:
     xg = sharding.shard(xg, "moe_groups", None, "embed")
 
     # --- per-group routing + dispatch (vmapped; G is the sharded dim) --------
-    buf, info, aux = jax.vmap(
+    buf, info, aux, sizes = jax.vmap(
         lambda xi: _route_and_dispatch(cfg, params[f"{prefix}_router"], xi))(xg)
     aux = jnp.mean(aux)
     buf = sharding.shard(buf, "moe_groups", "experts", "expert_capacity",
                          "embed")
 
-    # --- expert GEMMs (uniform dataflow per expert) ---------------------------
-    # Explicitly gather the FSDP (embed->data) shard of the expert weights
-    # before the einsum — Kraken's weights-rotator discipline: weights are
-    # *fetched once into the global buffer, then rotated over all tokens*.
-    # Left to its own cost model, GSPMD instead kept the big expert weights
-    # in place, computed d-contraction partial sums, and all-reduced full
-    # [E, C, f] activation tensors over the data axis (it even re-gathered
-    # the G dim to do so) — 3.0e12 B/device of the baseline's collective
-    # traffic.  §Perf iteration 3.
-    wi_gate = sharding.shard(params[f"{prefix}_wi_gate"], "experts", None, "mlp")
-    wi_up = sharding.shard(params[f"{prefix}_wi_up"], "experts", None, "mlp")
-    wo = sharding.shard(params[f"{prefix}_wo"], "experts", "mlp", None)
-    gate = jnp.einsum("gecd,edf->gecf", buf, wi_gate)
-    up = jnp.einsum("gecd,edf->gecf", buf, wi_up)
-    h = jax.nn.silu(gate) * up
-    h = sharding.shard(h, "moe_groups", "experts", "expert_capacity", "mlp")
-    out_buf = jnp.einsum("gecf,efd->gecd", h, wo)
-    # "moe_out_embed" maps to the model axis in serving rules: the wo
-    # f-contraction partials then lower to a reduce-scatter over d (half the
-    # bytes of the all-reduce that a replicated-d constraint forces), and
-    # the combine gather below is d-sharding-preserving.  Training rules map
-    # it to None (replicated), keeping the train lowering unchanged.
-    # §Perf cell-2 iteration 6.
-    out_buf = sharding.shard(out_buf, "moe_groups", "experts",
-                             "expert_capacity", "moe_out_embed")
+    c = sharding.current()
+    unsharded = not c or c["mesh"] is None
+    mode = _mg.resolve_moe_gemm_mode()
+    if mode != "reference" and g == 1 and unsharded:
+        # --- grouped expert GEMM (one program, dynamic M per expert) ---------
+        # The capacity buffer *is* the expert-sorted layout; `sizes` is the
+        # scalar-prefetched group table.  Single-device inference only: the
+        # einsum path below keeps the GSPMD/mesh story and the VJP.
+        out_buf = _mg.grouped_expert_ffn(
+            buf[0], sizes[0], params[f"{prefix}_wi_gate"],
+            params[f"{prefix}_wi_up"], params[f"{prefix}_wo"],
+            mode=mode)[None]
+    else:
+        # --- expert GEMMs (uniform dataflow per expert) -----------------------
+        # Explicitly gather the FSDP (embed->data) shard of the expert weights
+        # before the einsum — Kraken's weights-rotator discipline: weights are
+        # *fetched once into the global buffer, then rotated over all tokens*.
+        # Left to its own cost model, GSPMD instead kept the big expert weights
+        # in place, computed d-contraction partial sums, and all-reduced full
+        # [E, C, f] activation tensors over the data axis (it even re-gathered
+        # the G dim to do so) — 3.0e12 B/device of the baseline's collective
+        # traffic.  §Perf iteration 3.
+        wi_gate = sharding.shard(params[f"{prefix}_wi_gate"],
+                                 "experts", None, "mlp")
+        wi_up = sharding.shard(params[f"{prefix}_wi_up"],
+                               "experts", None, "mlp")
+        wo = sharding.shard(params[f"{prefix}_wo"], "experts", "mlp", None)
+        gate = jnp.einsum("gecd,edf->gecf", buf, wi_gate)
+        up = jnp.einsum("gecd,edf->gecf", buf, wi_up)
+        h = jax.nn.silu(gate) * up
+        h = sharding.shard(h, "moe_groups", "experts", "expert_capacity",
+                           "mlp")
+        out_buf = jnp.einsum("gecf,efd->gecd", h, wo)
+        # "moe_out_embed" maps to the model axis in serving rules: the wo
+        # f-contraction partials then lower to a reduce-scatter over d (half
+        # the bytes of the all-reduce that a replicated-d constraint forces),
+        # and the combine gather below is d-sharding-preserving.  Training
+        # rules map it to None (replicated), keeping the train lowering
+        # unchanged.  §Perf cell-2 iteration 6.
+        out_buf = sharding.shard(out_buf, "moe_groups", "experts",
+                                 "expert_capacity", "moe_out_embed")
 
     # --- combine back to token order ------------------------------------------
     y = jax.vmap(lambda ob, lin, kp, gv: _combine(

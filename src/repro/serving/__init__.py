@@ -13,7 +13,9 @@ continuous-batching loop was deleted (its sequential per-request form
 survives only as the tests' oracle).
 """
 
-from repro.serving.engine import JitCounter, PagedEngine
+from repro.serving.engine import (CacheConfig, EngineConfig, FaultConfig,
+                                  JitCounter, PagedEngine, SchedulerConfig,
+                                  SpecConfig)
 from repro.serving.faults import FaultEvent, FaultInjected, FaultPlan
 from repro.serving.paged_kv import (COPY_NONE, PageAllocator, PoolLayout,
                                     SwapIntegrityError, ceil_pages, copy_page,
@@ -35,7 +37,9 @@ from repro.serving.state import (PagedKVState, SlotRowState, StateGeometry,
 from repro.serving.watchdog import Watchdog, WatchdogConfig, WatchdogError
 
 __all__ = [
-    "PagedEngine", "JitCounter", "PageAllocator", "FIFOScheduler",
+    "PagedEngine", "EngineConfig", "SchedulerConfig", "CacheConfig",
+    "SpecConfig", "FaultConfig",
+    "JitCounter", "PageAllocator", "FIFOScheduler",
     "PriorityScheduler", "ServeRequest", "summarize", "slo_summary",
     "ceil_pages", "make_pool", "scatter_prefill",
     "reset_pages", "gather_pages", "copy_page", "COPY_NONE", "PoolLayout",

@@ -36,7 +36,9 @@ a time (DESIGN.md §11).
 
 from __future__ import annotations
 
+import dataclasses
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -87,6 +89,162 @@ class JitCounter:
         return len(self.signatures)
 
 
+# ---------------------------------------------------------------------------
+# Engine configuration: one frozen tree instead of 20+ loose kwargs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Admission, priority, and SLO knobs (owned by the FIFOScheduler)."""
+    max_queue: int = 64
+    preempt: bool = False
+    aging_s: float = 30.0
+    slo_ttft_s: object = None         # seconds, scalar or per-class dict
+    slo_e2e_s: object = None
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheConfig:
+    """KV layout and page-pool knobs (owned by the StateTree)."""
+    page_size: int = 8
+    max_len: int = 64
+    pool_pages: int | None = None
+    overcommit: float = 1.0
+    prefix_cache: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculative decoding (DESIGN.md §15)."""
+    speculate: int = 0
+    drafter: Drafter | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Fault tolerance (DESIGN.md §14): deadlines, injection, watchdog."""
+    deadline_s: float | None = None
+    watchdog: WatchdogConfig | bool | None = None
+    plan: FaultPlan | None = None
+    heartbeat: Heartbeat | str | None = None
+
+
+# legacy PagedEngine(**kwargs) name -> (sub-config field | None, field name)
+_LEGACY_KWARGS = {
+    "slots": (None, "slots"), "chunk": (None, "chunk"),
+    "step_budget": (None, "step_budget"),
+    "temperature": (None, "temperature"), "seed": (None, "seed"),
+    "decode_kernel": (None, "decode_kernel"),
+    "moe_gemm": (None, "moe_gemm"),
+    "max_queue": ("sched", "max_queue"), "preempt": ("sched", "preempt"),
+    "aging_s": ("sched", "aging_s"), "slo_ttft_s": ("sched", "slo_ttft_s"),
+    "slo_e2e_s": ("sched", "slo_e2e_s"),
+    "page_size": ("cache", "page_size"), "max_len": ("cache", "max_len"),
+    "pool_pages": ("cache", "pool_pages"),
+    "overcommit": ("cache", "overcommit"),
+    "prefix_cache": ("cache", "prefix_cache"),
+    "speculate": ("spec", "speculate"), "drafter": ("spec", "drafter"),
+    "deadline_s": ("fault", "deadline_s"), "watchdog": ("fault", "watchdog"),
+    "faults": ("fault", "plan"), "heartbeat": ("fault", "heartbeat"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """The whole PagedEngine surface as one frozen tree.
+
+    ``PagedEngine(model, params, config=EngineConfig(...))`` is the
+    primary constructor; the historical flat kwargs still work through
+    :meth:`from_kwargs` (with a ``DeprecationWarning``) so existing call
+    sites keep running.  :meth:`validate` centralizes the invariant
+    checks that used to live scattered through ``__init__`` and returns
+    the *resolved* config (chunk clamped, step_budget defaulted) — the
+    engine reads everything off that.
+    """
+    slots: int = 4
+    chunk: int | None = None          # prefill chunk width (None: max_len)
+    step_budget: int | None = None    # tokens/step (None: slots + chunk)
+    temperature: float = 0.0
+    seed: int = 0
+    decode_kernel: str | None = None  # paged-attention mode (None: auto)
+    moe_gemm: str | None = None       # grouped expert GEMM mode (None: auto)
+    sched: SchedulerConfig = dataclasses.field(
+        default_factory=SchedulerConfig)
+    cache: CacheConfig = dataclasses.field(default_factory=CacheConfig)
+    spec: SpecConfig = dataclasses.field(default_factory=SpecConfig)
+    fault: FaultConfig = dataclasses.field(default_factory=FaultConfig)
+
+    @classmethod
+    def from_kwargs(cls, **kwargs) -> "EngineConfig":
+        """Build a config from the legacy flat kwarg namespace (the
+        pre-EngineConfig ``PagedEngine.__init__`` signature)."""
+        top: dict = {}
+        sub: dict[str, dict] = {"sched": {}, "cache": {}, "spec": {},
+                                "fault": {}}
+        for name, val in kwargs.items():
+            where = _LEGACY_KWARGS.get(name)
+            if where is None:
+                raise TypeError(
+                    f"PagedEngine got an unexpected keyword {name!r}")
+            section, field = where
+            (top if section is None else sub[section])[field] = val
+        return cls(sched=SchedulerConfig(**sub["sched"]),
+                   cache=CacheConfig(**sub["cache"]),
+                   spec=SpecConfig(**sub["spec"]),
+                   fault=FaultConfig(**sub["fault"]), **top)
+
+    def validate(self) -> "EngineConfig":
+        """Check every cross-field invariant and resolve the derived
+        defaults; returns the resolved copy the engine runs on."""
+        if self.slots < 1:
+            raise ValueError("slots must be >= 1")
+        max_len = self.cache.max_len
+        chunk = int(self.chunk) if self.chunk is not None else max_len
+        if chunk <= 0:
+            raise ValueError("chunk must be positive")
+        # admission caps prompts at max_len, so no chunk can ever carry
+        # more real tokens — a wider program would be pure padding compute
+        chunk = min(chunk, max_len)
+        step_budget = int(self.step_budget) if self.step_budget is not None \
+            else self.slots + chunk
+        if step_budget < max(chunk, self.slots):
+            # below `chunk` a chunk could never issue, even on an otherwise
+            # idle engine (prefill deadlock); below `slots` a full decode
+            # step would overrun the budget — decode is committed work the
+            # scheduler never throttles, so the budget must cover it for
+            # "tokens per step" to be a true ceiling
+            raise ValueError(
+                f"step_budget {step_budget} < max(chunk={chunk}, "
+                f"slots={self.slots}): the budget must fit one bare chunk "
+                "and the full decode load")
+        if self.spec.speculate < 0:
+            raise ValueError("speculate must be >= 0")
+        if self.spec.speculate and self.temperature > 0:
+            raise ValueError(
+                "speculative decoding is greedy-only: the accept rule "
+                "matches drafts against the argmax chain, so speculate > 0 "
+                "requires temperature == 0")
+        if self.cache.pool_pages is not None and self.cache.pool_pages < 1:
+            raise ValueError("pool_pages must be >= 1")
+        return dataclasses.replace(self, chunk=chunk,
+                                   step_budget=step_budget,
+                                   spec=dataclasses.replace(
+                                       self.spec,
+                                       speculate=int(self.spec.speculate)))
+
+    def verify_reference(self) -> "EngineConfig":
+        """The matching *reference* config for A/B verify replays: same
+        shapes and kernel modes, but speculation, preemption, and the
+        whole fault surface (injection, deadlines, watchdog, heartbeat)
+        off — the features whose token-identity the replays prove, plus
+        anything that would race the live engine's side files."""
+        return dataclasses.replace(
+            self,
+            sched=dataclasses.replace(self.sched, preempt=False),
+            spec=SpecConfig(),
+            fault=FaultConfig())
+
+
 class PagedEngine:
     """Chunked-prefill continuous-batching server over the uniform
     LayerState tree.
@@ -128,20 +286,24 @@ class PagedEngine:
         return build_state_tree(model, slots=slots, page_size=page_size,
                                 max_len=max_len).paged_geoms()
 
-    def __init__(self, model: Model, params, *, slots: int = 4,
-                 page_size: int = 8, max_len: int = 64,
-                 chunk: int | None = None, step_budget: int | None = None,
-                 max_queue: int = 64, temperature: float = 0.0, seed: int = 0,
-                 overcommit: float = 1.0, decode_kernel: str | None = None,
-                 prefix_cache: bool = False, preempt: bool = False,
-                 aging_s: float = 30.0, slo_ttft_s=None, slo_e2e_s=None,
-                 pool_pages: int | None = None,
-                 deadline_s: float | None = None,
-                 watchdog: WatchdogConfig | bool | None = None,
-                 faults: FaultPlan | None = None,
-                 heartbeat: Heartbeat | str | None = None,
-                 speculate: int = 0, drafter: Drafter | None = None):
+    def __init__(self, model: Model, params, *,
+                 config: EngineConfig | None = None, **kwargs):
+        from repro.kernels import kraken_moe_gemm as _mg
         from repro.kernels import paged_attention as _pa
+        if config is not None and kwargs:
+            raise TypeError(
+                "pass either config=EngineConfig(...) or the legacy flat "
+                f"kwargs, not both (got config and {sorted(kwargs)})")
+        if config is None:
+            if kwargs:
+                warnings.warn(
+                    "PagedEngine(model, params, **kwargs) is deprecated; "
+                    "pass config=EngineConfig(...) (legacy kwargs map via "
+                    "EngineConfig.from_kwargs)",
+                    DeprecationWarning, stacklevel=2)
+            config = EngineConfig.from_kwargs(**kwargs)
+        config = config.validate()
+        self.config = config
         cfg = model.cfg
         if not self.supports(model):   # the one eligibility predicate
             raise NotImplementedError(
@@ -149,55 +311,39 @@ class PagedEngine:
                 "implementation (repro.serving.state) — add one; the "
                 "engine has no fallback path")
         self.model, self.params, self.cfg = model, params, cfg
-        self.slots, self.page_size, self.max_len = slots, page_size, max_len
-        self.chunk = int(chunk) if chunk is not None else max_len
-        if self.chunk <= 0:
-            raise ValueError("chunk must be positive")
-        # admission caps prompts at max_len, so no chunk can ever carry
-        # more real tokens — a wider program would be pure padding compute
-        self.chunk = min(self.chunk, max_len)
-        self.step_budget = int(step_budget) if step_budget is not None else \
-            slots + self.chunk
-        if self.step_budget < max(self.chunk, slots):
-            # below `chunk` a chunk could never issue, even on an otherwise
-            # idle engine (prefill deadlock); below `slots` a full decode
-            # step would overrun the budget — decode is committed work the
-            # scheduler never throttles, so the budget must cover it for
-            # "tokens per step" to be a true ceiling
-            raise ValueError(
-                f"step_budget {self.step_budget} < max(chunk={self.chunk}, "
-                f"slots={slots}): the budget must fit one bare chunk and "
-                "the full decode load")
-        self.temperature = temperature
-        self._key = jax.random.key(seed)
+        slots, max_len = config.slots, config.cache.max_len
+        self.slots, self.page_size = slots, config.cache.page_size
+        self.max_len = max_len
+        self.chunk = config.chunk          # resolved by validate()
+        self.step_budget = config.step_budget
+        self.temperature = config.temperature
+        self._key = jax.random.key(config.seed)
         # --- speculative decoding (DESIGN.md §15) --------------------------
-        # Greedy-only: the accept walk compares drafts against the argmax
-        # chain, which *is* the sampled stream only at temperature 0 —
-        # anything else would silently change the output distribution.
-        self.speculate = int(speculate)
-        if self.speculate < 0:
-            raise ValueError("speculate must be >= 0")
-        if self.speculate and temperature > 0:
-            raise ValueError(
-                "speculative decoding is greedy-only: the accept rule "
-                "matches drafts against the argmax chain, so speculate > 0 "
-                "requires temperature == 0")
-        self.drafter: Drafter | None = drafter if drafter is not None \
+        # Greedy-only (validate() enforces it): the accept walk compares
+        # drafts against the argmax chain, which *is* the sampled stream
+        # only at temperature 0 — anything else would silently change the
+        # output distribution.
+        self.speculate = config.spec.speculate
+        self.drafter: Drafter | None = config.spec.drafter \
+            if config.spec.drafter is not None \
             else (NGramDrafter() if self.speculate else None)
         # priority scheduling + preempt-to-host (DESIGN.md §13): the
         # scheduler owns the policy (aged priority order, victim choice),
         # the engine owns the mechanism (swap-out/swap-in through the
         # LayerState tree); SLO targets are seconds, scalar or per-class
-        self.preempt_enabled = bool(preempt)
-        self.slo_ttft_s, self.slo_e2e_s = slo_ttft_s, slo_e2e_s
-        self.sched = FIFOScheduler(max_queue=max_queue,
-                                   max_total_len=max_len, aging_s=aging_s)
+        self.preempt_enabled = bool(config.sched.preempt)
+        self.slo_ttft_s = config.sched.slo_ttft_s
+        self.slo_e2e_s = config.sched.slo_e2e_s
+        self.sched = FIFOScheduler(max_queue=config.sched.max_queue,
+                                   max_total_len=max_len,
+                                   aging_s=config.sched.aging_s)
 
         # --- the uniform state tree ---------------------------------------
         self.state = build_state_tree(model, slots=slots,
-                                      page_size=page_size, max_len=max_len,
-                                      overcommit=overcommit,
-                                      pool_pages=pool_pages)
+                                      page_size=self.page_size,
+                                      max_len=max_len,
+                                      overcommit=config.cache.overcommit,
+                                      pool_pages=config.cache.pool_pages)
         self.pools = self.state.init_device()
         # Draft-write ring clamp (DESIGN.md §15): a committed write past a
         # ring's logical length wraps by design, but a *rejected draft*
@@ -216,8 +362,9 @@ class PagedEngine:
         # The watchdog instance always exists (it owns the step-fault
         # recovery policy); periodic invariant sweeps only run when the
         # caller opted in (`watchdog=True` or an explicit config).
-        self.default_deadline_s = deadline_s
-        self.faults = faults
+        self.default_deadline_s = config.fault.deadline_s
+        self.faults = config.fault.plan
+        watchdog = config.fault.watchdog
         self.watchdog_enabled = bool(watchdog)
         cfg_wd = watchdog if isinstance(watchdog, WatchdogConfig) else \
             WatchdogConfig()
@@ -227,8 +374,9 @@ class PagedEngine:
                                     backoff_ticks=cfg_wd.backoff_ticks,
                                     quarantine_ticks=cfg_wd.quarantine_ticks)
         self.watchdog = Watchdog(self, cfg_wd)
-        self.heartbeat = Heartbeat(heartbeat, interval_s=1.0) \
-            if isinstance(heartbeat, str) else heartbeat
+        self.heartbeat = Heartbeat(config.fault.heartbeat, interval_s=1.0) \
+            if isinstance(config.fault.heartbeat, str) \
+            else config.fault.heartbeat
         self.straggler = StragglerDetector()
 
         # --- prefix cache (DESIGN.md §12) ---------------------------------
@@ -237,22 +385,27 @@ class PagedEngine:
         # architectures report non-cacheability through the state tree, so
         # rwkv6/zamba2/vlm serve with a structural hit rate of 0 even when
         # the flag is on.
-        self.prefix_cache_requested = bool(prefix_cache)
+        self.prefix_cache_requested = bool(config.cache.prefix_cache)
         self.prefix_cache: PrefixCache | None = None
         self._cache_alloc = None
-        if prefix_cache:
+        if self.prefix_cache_requested:
             grp = self.state.cacheable_group()
             if grp is not None:
                 self._cache_alloc = self.state.allocators[grp]
                 self.prefix_cache = PrefixCache(self._cache_alloc,
-                                                page_size=page_size)
+                                                page_size=self.page_size)
 
         # Resolve the decode attention implementation once (``decode_kernel``
         # argument > $KRAKEN_PAGED_DECODE > auto: fused on TPU, dense-gather
         # reference elsewhere) and pin it into this engine's trace — two
-        # engines with different kernels coexist in one process.
-        with _pa.use_paged_decode_mode(decode_kernel):
+        # engines with different kernels coexist in one process.  The MoE
+        # expert-GEMM mode resolves the same way (``moe_gemm`` >
+        # $KRAKEN_MOE_GEMM > auto: grouped on TPU, einsum reference
+        # elsewhere); for non-MoE models it is recorded but never traced.
+        with _pa.use_paged_decode_mode(config.decode_kernel):
             self.decode_kernel = _pa.resolve_paged_decode_mode()
+        with _mg.use_moe_gemm_mode(config.moe_gemm):
+            self.moe_gemm = _mg.resolve_moe_gemm_mode()
 
         # --- the engine's three compiled programs --------------------------
         def mixed_fn(params, pools, tokens, positions, lengths):
@@ -262,7 +415,8 @@ class PagedEngine:
             # shape whether or not this engine speculates (verify *is*
             # the chunk program — DESIGN.md §15)
             view = self.state.decode_view(pools, positions[:, 0])
-            with _pa.use_paged_decode_mode(self.decode_kernel):
+            with _pa.use_paged_decode_mode(self.decode_kernel), \
+                    _mg.use_moe_gemm_mode(self.moe_gemm):
                 return model.chunk_step(params, view, tokens, positions,
                                         lengths, return_greedy=True)
 
@@ -275,7 +429,8 @@ class PagedEngine:
             # the same pools with no view transform — the seam stays free
             # for speculative decode)
             view = self.state.decode_view(pools, pos)
-            with _pa.use_paged_decode_mode(self.decode_kernel):
+            with _pa.use_paged_decode_mode(self.decode_kernel), \
+                    _mg.use_moe_gemm_mode(self.moe_gemm):
                 return model.decode_step(params, view, tokens, pos,
                                          lengths=live)
 
@@ -333,15 +488,21 @@ class PagedEngine:
                deadline_s: float | None = None) -> ServeRequest:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if rid is None:
+            # auto rids must never collide with a live caller-supplied rid
+            # (the scheduler would reject the engine's own assignment)
+            live = ({r.rid for r in self.sched.queue}
+                    | {r.rid for r in self.sched.running.values()})
+            while self._rid in live:
+                self._rid += 1
             rid, self._rid = self._rid, self._rid + 1
         req = ServeRequest(rid=rid, prompt=prompt, max_new=int(max_new),
                            priority=int(priority),
                            deadline_s=deadline_s if deadline_s is not None
                            else self.default_deadline_s)
         # all rejection classes (over-long prompt, prompt + max_new beyond
-        # the KV budget, empty prompt, max_new < 1, queue full) go through
-        # the scheduler's one reject path — stamped with REJECTED so the
-        # metrics stay meaningful
+        # the KV budget, empty prompt, max_new < 1, queue full, duplicate
+        # rid against a live request) go through the scheduler's one reject
+        # path — stamped with REJECTED so the metrics stay meaningful
         self.sched.submit(req)
         return req
 
@@ -932,6 +1093,7 @@ class PagedEngine:
             "decode_steps": self.decode_steps,
             "decode_retraces": self._decode.retraces,
             "decode_kernel": self.decode_kernel,
+            "moe_gemm": self.moe_gemm if self.cfg.num_experts else None,
             "chunk": self.chunk,
             "step_budget": self.step_budget,
             "budget_util": self._issued / max(1, self.steps * self.step_budget),

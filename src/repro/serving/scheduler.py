@@ -150,7 +150,7 @@ class FIFOScheduler:
     def submit(self, req: ServeRequest) -> bool:
         """Queue ``req``; False (state=REJECTED) when the queue is at
         capacity, the request could never fit the KV budget, the prompt is
-        empty, or ``max_new < 1``.
+        empty, ``max_new < 1``, or ``req.rid`` collides with a live request.
 
         Empty prompts are *rejected*, not served: a length-0 prompt has no
         last-token logits — it would reach the mixed step as a length-0
@@ -158,13 +158,22 @@ class FIFOScheduler:
         likewise rejected (not clamped): the first token falls out of the
         last prefill chunk unconditionally, so a cap below 1 cannot be
         honored — the caller asked for nothing and gets a clean reject
-        instead of one surprise token."""
+        instead of one surprise token.  A duplicate rid is rejected, not
+        served: two live requests under one rid would silently overwrite
+        each other in every rid-keyed surface (``run_until_idle``'s output
+        dict, ``cancel``, metrics) — the caller gets a clean reject with
+        the reason on ``req.error``."""
         req.t_submit = self.clock()
         too_long = (self.max_total_len is not None
                     and req.prompt_len + req.max_new > self.max_total_len)
+        dup = (any(r.rid == req.rid for r in self.queue)
+               or any(r.rid == req.rid for r in self.running.values()))
         bad = (too_long or req.prompt_len == 0 or req.max_new < 1
-               or len(self.queue) >= self.max_queue)
+               or len(self.queue) >= self.max_queue or dup)
         if bad:
+            if dup:
+                req.error = (f"duplicate rid {req.rid}: collides with a "
+                             "live request")
             req.state = REJECTED
             self.rejected.append(req)
             return False

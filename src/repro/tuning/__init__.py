@@ -26,16 +26,21 @@ from repro.core.elastic import TileConfig, model_best
 from repro.tuning.cache import (CACHE_PATH_ENV, CACHE_VERSION, TileCache,
                                 cache_key, default_cache_path)
 from repro.tuning.search import (autotune_conv, autotune_gemm,
-                                 autotune_paged_decode, backend_name,
-                                 benchmark_candidates, lookup_paged_decode,
+                                 autotune_moe_gemm, autotune_paged_decode,
+                                 backend_name, benchmark_candidates,
+                                 lookup_moe_gemm, lookup_paged_decode,
+                                 moe_gemm_candidates,
                                  paged_decode_candidates, select_candidates,
-                                 steady_state_pool, time_gemm_candidate)
+                                 skewed_group_sizes, steady_state_pool,
+                                 time_gemm_candidate)
 
 __all__ = [
     "TileCache", "TileConfig", "CACHE_VERSION", "CACHE_PATH_ENV",
     "cache_key", "default_cache_path", "autotune_gemm", "autotune_conv",
     "autotune_paged_decode", "paged_decode_candidates", "steady_state_pool",
     "lookup_paged_decode",
+    "autotune_moe_gemm", "moe_gemm_candidates", "lookup_moe_gemm",
+    "skewed_group_sizes",
     "autotune_cells", "warm_cells", "backend_name", "benchmark_candidates",
     "select_candidates", "time_gemm_candidate", "get_tile_mode",
     "set_tile_mode", "get_tile_cache", "set_tile_cache", "resolve_tiles",

@@ -358,6 +358,139 @@ def autotune_paged_decode(slots: int, logical_len: int, head_dim: int, *,
     return best_ppb
 
 
+def moe_gemm_candidates(rows_per_group: int, dtype_name: str) -> list[int]:
+    """The ``block_rows`` lattice for the grouped expert GEMM: every
+    sublane-multiple power of two up to the (rounded) group, the whole
+    group, and the static default."""
+    from repro.kernels.kraken_moe_gemm import (_sublane, default_block_rows)
+    sub = _sublane(dtype_name)
+    cap = elastic.round_up(max(1, rows_per_group), sub)
+    cands = {cap, default_block_rows(rows_per_group, dtype_name)}
+    bm = sub
+    while bm <= cap:
+        cands.add(bm)
+        bm *= 2
+    return sorted(c for c in cands if sub <= c <= cap)
+
+
+def lookup_moe_gemm(cache: tcache.TileCache, key: str, *, experts: int,
+                    rows_per_group: int, dtype_name: str = "float32",
+                    count: bool = True) -> int | None:
+    """A validated ``moe_gemm`` cache hit, or None.
+
+    The key's ``m/k/n`` (m_total/d/f) under-determines the cell: the same
+    total row count can come from different expert counts, and a
+    ``block_rows`` tuned for 8 groups of 64 means nothing for 64 groups of
+    8.  The entry records its ``experts``; a mismatch is a miss (same
+    protocol as ``lookup_paged_decode``'s ``page_size`` guard).
+    """
+    entry = cache.peek(key)
+    if not entry or entry.get("experts") != experts:
+        if entry is not None and count:
+            cache.misses += 1
+        return None
+    try:
+        bm = int(entry["bm"])
+    except (KeyError, TypeError, ValueError):
+        return None
+    if count:
+        cache.hits += 1
+    from repro.kernels.kraken_moe_gemm import _sublane
+    sub = _sublane(dtype_name)
+    return max(sub, min(bm, elastic.round_up(max(1, rows_per_group), sub)))
+
+
+def skewed_group_sizes(experts: int, rows_per_group: int,
+                       seed: int = 0) -> np.ndarray:
+    """A decode-shaped group table: a few hot experts, some empty — the
+    load the grouped kernel's dead-block skip is built for.  The one
+    fixture the moe_gemm autotuner times and the bench model reuses."""
+    rng = np.random.default_rng(seed)
+    raw = rng.zipf(1.5, size=experts).astype(np.float64)
+    sizes = np.minimum((raw / raw.max() * rows_per_group).astype(np.int32),
+                       rows_per_group)
+    sizes[rng.random(experts) < 0.25] = 0
+    if sizes.max() == 0:
+        sizes[0] = max(1, rows_per_group // 2)
+    return sizes.astype(np.int32)
+
+
+def autotune_moe_gemm(experts: int, m_total: int, d: int, f: int, *,
+                      dtype_name: str | None = None, reps: int = 3,
+                      warmup: int = 1,
+                      cache: tcache.TileCache | None = None,
+                      log=None) -> int:
+    """Measured ``block_rows`` for the grouped expert GEMM.
+
+    Keyed ``op_kind="moe_gemm"`` with ``m/k/n`` <- m_total / d / f (the
+    grouped cell's identity; ``experts`` rides in the entry and is
+    validated on lookup).  The winning ``block_rows`` is recorded in the
+    entry's ``bm`` field.  The measurement serves a skewed steady-state
+    group table (hot + empty experts) — the dead-block layout question the
+    static model cannot answer.  Returns the winning ``block_rows``.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.kraken_moe_gemm import grouped_moe_gemm
+    if cache is None:
+        cache = tcache.TileCache(path=None)
+    dtype_name = dtype_name or ("bfloat16" if _on_tpu() else "float32")
+    rows = max(1, -(-m_total // max(1, experts)))
+    key = tcache.cache_key("moe_gemm", m_total, d, f, dtype_name,
+                           backend_name())
+    hit = lookup_moe_gemm(cache, key, experts=experts, rows_per_group=rows,
+                          dtype_name=dtype_name)
+    if hit is not None:
+        return hit
+    from repro import tuning
+    from repro.kernels.kraken_moe_gemm import default_block_rows
+    if not _on_tpu() and m_total * d * f > tuning.INTERPRET_MACS_CAP:
+        if log is not None:
+            log(f"[autotune] {key}: skipped — interpret-mode cap; using the "
+                f"static block_rows (warm this cell on TPU)")
+        return default_block_rows(rows, dtype_name)
+
+    interpret = not _on_tpu()
+    rng = np.random.default_rng(0)
+    if dtype_name == "int8":
+        xs = jnp.asarray(rng.integers(-127, 128, (experts, rows, d)),
+                         jnp.int8)
+        w = jnp.asarray(rng.integers(-127, 128, (experts, d, f)), jnp.int8)
+    else:
+        dt = jnp.dtype(dtype_name)
+        xs = jnp.asarray(rng.normal(size=(experts, rows, d)), dt)
+        w = jnp.asarray(rng.normal(size=(experts, d, f)), dt)
+    sizes = jnp.asarray(skewed_group_sizes(experts, rows), jnp.int32)
+
+    candidates = moe_gemm_candidates(rows, dtype_name)
+    best_bm, best_us = candidates[0], float("inf")
+    for bm in candidates:
+        fn = jax.jit(lambda xs, w, sizes, bm=bm: grouped_moe_gemm(
+            xs, w, sizes, block_rows=bm, interpret=interpret))
+        for _ in range(max(warmup, 1)):
+            jax.block_until_ready(fn(xs, w, sizes))
+        samples = []
+        for _ in range(max(reps, 1)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(xs, w, sizes))
+            samples.append((time.perf_counter() - t0) * 1e6)
+        us = statistics.median(samples)
+        if us < best_us:
+            best_bm, best_us = bm, us
+    cfg = elastic._make_config(m_total, d, f, best_bm,
+                               elastic.round_up(d, elastic.MXU_DIM),
+                               min(elastic.round_up(f, 128), 128),
+                               "output_stationary", 4)
+    cache.put(key, cfg, measured_us=best_us,
+              extra={"candidates_timed": len(candidates),
+                     "kind": "moe_gemm_bm", "experts": experts})
+    cache.save()
+    if log is not None:
+        log(f"[autotune] {key}: block_rows={best_bm} {best_us:.0f}us "
+            f"over {len(candidates)} candidates")
+    return best_bm
+
+
 def conv_cache_key(x_shape, k_shape,
                    stride: tuple[int, int]) -> tuple[str, int, int, int]:
     """The ``conv_direct`` cache key for a (pre-padded) conv geometry.

@@ -357,3 +357,112 @@ def test_engine_soak_recurrent_eviction_chain():
     s = eng.stats()
     assert s["prefill_retraces"] == 1
     assert s["decode_retraces"] == 1
+
+
+def test_duplicate_rid_rejected():
+    """A caller-supplied rid colliding with a *live* request goes through
+    the scheduler's one reject path: stamped REJECTED with the reason on
+    ``req.error``, whether the live holder is still queued or already in
+    a slot — and a finished rid is reusable."""
+    from repro.serving import QUEUED, REJECTED
+    cfg, model, params = setup_arch("yi-6b")
+    eng = PagedEngine(model, params, slots=1, page_size=4, max_len=32)
+    a = eng.submit(np.zeros(4, np.int32), 2, rid=7)
+    assert a.state == QUEUED
+    # duplicate of a queued rid
+    dup_q = eng.submit(np.zeros(4, np.int32), 2, rid=7)
+    assert dup_q.state == REJECTED and "duplicate rid 7" in dup_q.error
+    # move rid 7 into the slot, then collide with a *running* rid
+    eng.step()
+    dup_run = eng.submit(np.zeros(4, np.int32), 2, rid=7)
+    assert dup_run.state == REJECTED and "duplicate rid 7" in dup_run.error
+    # auto-assigned rids skip live ones
+    auto = eng.submit(np.zeros(4, np.int32), 2)
+    assert auto.rid != 7 and auto.state == QUEUED
+    done = eng.run_until_idle()
+    assert sorted(done) == sorted([7, auto.rid])
+    # the rid is dead now: reusing it is fine
+    again = eng.submit(np.zeros(4, np.int32), 2, rid=7)
+    assert again.state == QUEUED
+    eng.run_until_idle()
+    assert all(r.slot == -1 for r in eng.sched.rejected)
+
+
+def test_engine_config_equivalent_to_legacy_kwargs():
+    """``config=EngineConfig(...)`` and the deprecated flat kwargs build
+    identically-behaving engines; the kwargs path warns, mixing both is
+    an error, and ``validate()`` centralizes the invariants."""
+    import warnings
+
+    from repro.serving import (CacheConfig, EngineConfig, SchedulerConfig,
+                               SpecConfig)
+    cfg, model, params = setup_arch("yi-6b")
+    config = EngineConfig(slots=2, chunk=8,
+                          cache=CacheConfig(page_size=4, max_len=32))
+    eng_c = PagedEngine(model, params, config=config)
+    with pytest.warns(DeprecationWarning):
+        eng_k = PagedEngine(model, params, slots=2, chunk=8, page_size=4,
+                            max_len=32)
+    assert eng_c.config == eng_k.config
+    prompts = mixed_prompts(cfg, [5, 9], seed=11)
+    outs = []
+    for eng in (eng_c, eng_k):
+        for i, p in enumerate(prompts):
+            eng.submit(p, 4, rid=i)
+        outs.append(eng.run_until_idle())
+    assert outs[0] == outs[1]
+    # config= and flat kwargs are mutually exclusive
+    with pytest.raises(TypeError):
+        PagedEngine(model, params, config=config, slots=2)
+    # unknown legacy kwarg: TypeError, not a silent drop
+    with pytest.raises(TypeError):
+        EngineConfig.from_kwargs(slotz=2)
+    # validate() owns the invariants the constructor used to check
+    with pytest.raises(ValueError):
+        EngineConfig(slots=0).validate()
+    with pytest.raises(ValueError):
+        EngineConfig(slots=2, step_budget=1, chunk=8).validate()
+    with pytest.raises(ValueError):
+        EngineConfig(temperature=0.5, spec=SpecConfig(speculate=2)).validate()
+    # validate() resolves defaults without mutating the original
+    resolved = EngineConfig(slots=2, chunk=8).validate()
+    assert resolved.step_budget == 10 and config.step_budget is None
+    # verify_reference(): same shapes, replay-affecting features off
+    noisy = EngineConfig(slots=2, chunk=8, sched=SchedulerConfig(preempt=True),
+                         spec=SpecConfig(speculate=3))
+    ref = noisy.verify_reference()
+    assert ref.slots == 2 and ref.chunk == 8
+    assert not ref.sched.preempt and ref.spec.speculate == 0
+    assert ref.fault.plan is None and ref.fault.heartbeat is None
+
+
+def test_engine_args_round_trip():
+    """The shared CLI surface (launch/engine_args.py): flags parse into
+    the same EngineConfig both frontends serve from, and an excluded flag
+    falls back to the config default."""
+    import argparse
+
+    from repro.launch.engine_args import (add_engine_args,
+                                          engine_config_from_args)
+    p = argparse.ArgumentParser()
+    add_engine_args(p)
+    args = p.parse_args(["--slots", "3", "--cache-len", "48", "--chunk",
+                         "8", "--moe-gemm", "interpret", "--speculate",
+                         "2", "--slo-ttft-ms", "250", "--prefix-cache"])
+    config = args_config = engine_config_from_args(args)
+    assert config.slots == 3 and config.chunk == 8
+    assert config.cache.max_len == 48 and config.cache.prefix_cache
+    assert config.moe_gemm == "interpret"
+    assert config.spec.speculate == 2
+    assert config.sched.slo_ttft_s == 0.25
+    # an excluded homonym (serving_bench's --faults row toggle) never
+    # reaches the engine: the field stays at its default
+    p2 = argparse.ArgumentParser()
+    add_engine_args(p2, exclude=("faults",))
+    p2.add_argument("--faults", action="store_true")
+    args2 = p2.parse_args(["--slots", "3", "--faults"])
+    assert engine_config_from_args(args2).fault.plan is None
+    # the engine accepts the parsed config as-is
+    _, model, params = setup_arch("yi-6b")
+    eng = PagedEngine(model, params, config=args_config)
+    assert eng.slots == 3 and eng.speculate == 2
